@@ -1,0 +1,65 @@
+"""Collision-probability validation (Theorems 4, 6, 8, 10).
+
+For each family: empirical collision rate over M independent hash
+functions vs the paper's closed forms — p(r) (Eq. 4.17/4.33) for the
+E2LSH kinds, 1 - theta/pi (Eq. 4.58/4.81) for the SRP kinds.
+
+CSV: name,us_per_call,derived (derived = max |empirical - theory| over the
+distance/similarity grid; the paper's claim holds if this is at the
+binomial-noise level ~ 3*sqrt(p(1-p)/M) ~ 0.03).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import make_family, theory
+
+DIMS = (8, 8, 8)
+M = 2000
+W = 4.0
+
+
+def run() -> list[str]:
+    rows = []
+    kx, kn, kf = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = jax.random.normal(kx, DIMS)
+    noise = jax.random.normal(kn, DIMS)
+
+    for kind in ("cp-e2lsh", "tt-e2lsh", "e2lsh"):
+        fam = make_family(kf, kind, DIMS, num_codes=M, rank=2, bucket_width=W)
+        hash_fn = jax.jit(fam.hash)
+        cx = np.asarray(hash_fn(x)).ravel()
+        devs = []
+        for r in (0.5, 1.0, 2.0, 4.0, 8.0):
+            y = x + noise * (r / jnp.linalg.norm(noise))
+            cy = np.asarray(hash_fn(y)).ravel()
+            emp = float((cx == cy).mean())
+            want = float(theory.e2lsh_collision_prob(r, W))
+            devs.append(abs(emp - want))
+        us = time_fn(hash_fn, x)
+        rows.append(emit(f"collision/{kind}", us, f"{max(devs):.4f}"))
+
+    for kind in ("cp-srp", "tt-srp", "srp"):
+        fam = make_family(kf, kind, DIMS, num_codes=M, rank=2)
+        hash_fn = jax.jit(fam.hash)
+        cx = np.asarray(hash_fn(x)).ravel()
+        devs = []
+        for mix in (0.05, 0.2, 0.5, 1.0, 2.0):
+            y = x + mix * noise
+            cos = float(jnp.vdot(x, y)
+                        / (jnp.linalg.norm(x) * jnp.linalg.norm(y)))
+            cy = np.asarray(hash_fn(y)).ravel()
+            emp = float((cx == cy).mean())
+            want = float(theory.srp_collision_prob(cos))
+            devs.append(abs(emp - want))
+        us = time_fn(hash_fn, x)
+        rows.append(emit(f"collision/{kind}", us, f"{max(devs):.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

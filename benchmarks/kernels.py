@@ -1,0 +1,68 @@
+"""Kernel-level benchmark: the Pallas kernels (interpret mode on CPU; the
+TPU lowering is the target) validated against ref.py and timed against the
+equivalent XLA path. On CPU interpret mode measures Python-level kernel
+semantics, so the number that matters here is the allclose check + the
+arithmetic-intensity report used in the §Perf kernel discussion.
+
+CSV: name,us_per_call,derived (derived = max|kernel - ref| ; 'flops/byte'
+rows report the kernel's arithmetic intensity at benchmark shape).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ref
+from repro.kernels.cp_gram import cp_gram_pallas
+from repro.kernels.tt_inner import tt_inner_pallas
+from repro.kernels.srp_pack import srp_pack_pallas
+
+
+def run() -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # CP gram kernel: N=4, d=64, R=32, K=64
+    n, d, rx, rp, k = 4, 64, 32, 32, 64
+    kx, kp = jax.random.split(key)
+    xf = jax.random.normal(kx, (n, d, rx))
+    pf = jax.random.normal(kp, (n, k, d, rp))
+    got = cp_gram_pallas(xf, pf, block_k=8, interpret=True)
+    want = ref.cp_inner_ref(xf, pf)
+    err = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+    us_ref = time_fn(jax.jit(ref.cp_inner_ref), xf, pf)
+    rows.append(emit("kernels/cp_gram/allclose", us_ref, f"{err:.2e}"))
+    flops = k * n * d * rx * rp * 2
+    bytes_ = 4 * (xf.size + pf.size + k)
+    rows.append(emit("kernels/cp_gram/intensity", us_ref,
+                     f"{flops / bytes_:.2f}"))
+
+    # TT inner kernel: N=4, d=32, R=16, K=32
+    n, d, r, k = 4, 32, 16, 32
+    xc = jax.random.normal(kx, (n, r, d, r))
+    pc = jax.random.normal(kp, (n, k, r, d, r))
+    got = tt_inner_pallas(xc, pc, block_k=8, interpret=True)
+    want = ref.tt_inner_ref(xc, pc)
+    err = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+    us_ref = time_fn(jax.jit(ref.tt_inner_ref), xc, pc)
+    rows.append(emit("kernels/tt_inner/allclose", us_ref, f"{err:.2e}"))
+    flops = k * n * d * (r ** 3) * 4
+    bytes_ = 4 * (xc.size + pc.size + k)
+    rows.append(emit("kernels/tt_inner/intensity", us_ref,
+                     f"{flops / bytes_:.2f}"))
+
+    # SRP pack kernel
+    v = jax.random.normal(key, (256, 256))
+    got = srp_pack_pallas(v, block_b=8, interpret=True)
+    want = ref.srp_pack_ref(v)
+    err = int(jnp.sum(got != want))
+    us_ref = time_fn(jax.jit(ref.srp_pack_ref), v)
+    rows.append(emit("kernels/srp_pack/exact", us_ref, f"{err}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Benchmark harness: one module per paper table + validation benches.
+Prints ``name,us_per_call,derived`` CSV rows (stdout)."""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import collision, kernels, recall, table1_e2lsh, table2_srp
+    print("name,us_per_call,derived")
+    rows = []
+    rows += table1_e2lsh.run()
+    rows += table2_srp.run()
+    rows += collision.run()
+    rows += recall.run()
+    rows += kernels.run()
+    print(f"# {len(rows)} benchmark rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Table 1: LSH for Euclidean distance on tensor data.
+
+Measures, for K-sized hashcodes of N-order tensors (mode dim d):
+  * storage of the projection parameters (paper's space complexity column)
+  * time per hashcode batch for inputs given in CP / TT decomposition
+    format (paper's time complexity column)
+for the naive method (reshape + dense E2LSH), CP-E2LSH and TT-E2LSH.
+
+CSV: name,us_per_call,derived  (derived = projection storage in scalars).
+Scaling claims verified: naive storage grows as d^N (exponential in N),
+tensorized storage linearly in N — see the N-sweep rows.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core import (cp_random_data, make_family, tt_random_data)
+
+K, RANK, RHAT, W = 16, 4, 4, 4.0
+
+
+def run(n_sweep=(2, 3, 4), d: int = 16) -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for n in n_sweep:
+        dims = (d,) * n
+        kx, kf = jax.random.split(jax.random.fold_in(key, n))
+        x_cp = cp_random_data(kx, dims, RHAT)
+        x_tt = tt_random_data(kx, dims, RHAT)
+
+        for kind, x in (("e2lsh-naive", x_cp), ("cp-e2lsh", x_cp),
+                        ("tt-e2lsh", x_cp), ("cp-e2lsh-ttinput", x_tt),
+                        ("tt-e2lsh-ttinput", x_tt)):
+            fam = make_family(kf, kind.split("-ttinput")[0].replace(
+                "e2lsh-naive", "e2lsh"), dims, num_codes=K, rank=RANK,
+                bucket_width=W)
+            fn = jax.jit(fam.hash)
+            us = time_fn(fn, x)
+            rows.append(emit(f"table1/{kind}/N{n}d{d}", us,
+                             fam.storage_size()))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Table 2: LSH for cosine similarity on tensor data.
+
+Same protocol as table1 for SRP / CP-SRP / TT-SRP.
+CSV: name,us_per_call,derived (derived = projection storage in scalars).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core import cp_random_data, make_family, tt_random_data
+
+K, RANK, RHAT = 16, 4, 4
+
+
+def run(n_sweep=(2, 3, 4), d: int = 16) -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(1)
+    for n in n_sweep:
+        dims = (d,) * n
+        kx, kf = jax.random.split(jax.random.fold_in(key, n))
+        x_cp = cp_random_data(kx, dims, RHAT)
+        x_tt = tt_random_data(kx, dims, RHAT)
+        for kind, x in (("srp-naive", x_cp), ("cp-srp", x_cp),
+                        ("tt-srp", x_cp), ("cp-srp-ttinput", x_tt),
+                        ("tt-srp-ttinput", x_tt)):
+            fam = make_family(kf, kind.split("-ttinput")[0].replace(
+                "srp-naive", "srp"), dims, num_codes=K, rank=RANK)
+            fn = jax.jit(fam.hash)
+            us = time_fn(fn, x)
+            rows.append(emit(f"table2/{kind}/N{n}d{d}", us,
+                             fam.storage_size()))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

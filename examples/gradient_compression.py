@@ -1,0 +1,60 @@
+"""Gradient compression with tensorized random projections (DESIGN.md
+integration point #3): the paper's CP-Rademacher sketch on the DP
+all-reduce path, with error feedback.
+
+Trains the same model with and without compression and reports the loss
+curves + the communicated-bytes ratio.
+
+    PYTHONPATH=src python examples/gradient_compression.py [--steps 80]
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data.synthetic import DataConfig, batch_at
+from repro.training import optimizer as opt_lib
+from repro.training.compression import CompressionConfig
+from repro.training.train_loop import TrainConfig, init_state, make_train_step
+
+
+def train(cfg, tc, steps, seed=0):
+    state, sketch = init_state(cfg, tc, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(cfg, tc, sketch=sketch))
+    dc = DataConfig(batch_size=4, seq_len=64, seed=seed)
+    losses, ratio = [], None
+    for i in range(steps):
+        state, m = step(state, batch_at(dc, cfg, i))
+        losses.append(float(m["loss"]))
+        ratio = float(m.get("comm_ratio", 0.0))
+    return losses, ratio
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args()
+    cfg = get_config("stablelm-3b", "smoke")
+    adamw = opt_lib.AdamWConfig(peak_lr=1e-3, warmup_steps=5,
+                                decay_steps=max(args.steps, 10))
+
+    base_tc = TrainConfig(adamw=adamw)
+    comp_tc = TrainConfig(adamw=adamw, compression=CompressionConfig(
+        num_projections=256, rank=2, min_size=4096))
+
+    base_losses, _ = train(cfg, base_tc, args.steps)
+    comp_losses, ratio = train(cfg, comp_tc, args.steps)
+
+    k = max(args.steps // 8, 1)
+    print("baseline  :", " -> ".join(f"{l:.3f}" for l in base_losses[::k]))
+    print("compressed:", " -> ".join(f"{l:.3f}" for l in comp_losses[::k]))
+    print(f"\nDP all-reduce volume with sketching: {ratio:.4f}x of raw "
+          f"({1/max(ratio,1e-9):.0f}x reduction), via K CP-Rademacher "
+          "projections per gradient matrix (paper Definition 8) + error "
+          "feedback. Projection params are O(K (d1+d2) R) — the paper's "
+          "space advantage — instead of O(K d1 d2) for a dense sketch.")
+
+
+if __name__ == "__main__":
+    main()

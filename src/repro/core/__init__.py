@@ -1,0 +1,28 @@
+"""TensorLSH core: the paper's contribution as a composable JAX library.
+
+- tensor_formats: CP / TT tensor pytrees (Defs 4-7), densify, TT-SVD, CP-ALS
+- contractions:   all dense/CP/TT inner-product paths at the paper's costs
+- projections:    CP/TT/dense random projection families (Defs 8-9)
+- lsh:            CP-E2LSH, TT-E2LSH, CP-SRP, TT-SRP + naive baselines (Defs 10-13)
+- index:          multi-table (K, L) ANN index with exact in-format re-rank
+- theory:         closed-form collision probabilities, rank conditions
+"""
+
+from repro.core.tensor_formats import (CPTensor, TTTensor, cp_rademacher,
+                                       cp_gaussian, tt_rademacher, tt_gaussian,
+                                       cp_random_data, tt_random_data,
+                                       cp_to_dense, tt_to_dense, dense_to_tt,
+                                       cp_als, khatri_rao)
+from repro.core.contractions import (inner, norm, distance, cosine_similarity,
+                                     inner_cp_cp, inner_cp_tt, inner_tt_tt,
+                                     inner_dense_cp, inner_dense_tt,
+                                     inner_dense_dense)
+from repro.core.projections import (CPProjection, TTProjection, DenseProjection,
+                                    sample_cp_projection, sample_tt_projection,
+                                    sample_dense_projection, project,
+                                    project_batch)
+from repro.core.lsh import (LSHFamily, make_family, e2lsh_discretize,
+                            srp_discretize, pack_bits, unpack_bits,
+                            naive_storage_size)
+from repro.core.index import LSHIndex, brute_force, recall_at_k
+from repro.core import theory

@@ -1,0 +1,141 @@
+"""The paper's four LSH families (Definitions 10-13) + naive baselines.
+
+  CP-E2LSH (Def. 10):  g(X)  = floor((<P, X> + b) / w),  P ~ CP_Rad(R)
+  TT-E2LSH (Def. 11):  g~(X) = floor((<T, X> + b) / w),  T ~ TT_Rad(R)
+  CP-SRP   (Def. 12):  h(X)  = sign(<P, X>),             P ~ CP_Rad(R)
+  TT-SRP   (Def. 13):  h~(X) = sign(<T, X>),             T ~ TT_Rad(R)
+
+plus the naive baselines the paper compares against:
+
+  E2LSH (Datar et al. [11], Def. 3): dense Gaussian projection + floor
+  SRP   (Charikar [6], Def. 2):      dense Gaussian projection + sign
+
+A family carries K x L hash functions (K concatenated codes per table,
+L tables — the standard (K, L) LSH amplification); `hash()` returns integer
+codes of shape (L, K), and `hash_packed()` returns SRP bits packed into uint32
+words for space-efficient storage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projections as proj_lib
+from repro.core.projections import (CPProjection, DenseProjection, Projection,
+                                    TTProjection)
+
+E2LSH_KINDS = ("cp-e2lsh", "tt-e2lsh", "e2lsh")
+SRP_KINDS = ("cp-srp", "tt-srp", "srp")
+ALL_KINDS = E2LSH_KINDS + SRP_KINDS
+
+
+def e2lsh_discretize(values: jax.Array, b: jax.Array, w: float) -> jax.Array:
+    """floor((v + b) / w) -> int32 hashcode (paper Eq. 3.3 / 4.1 / 4.20)."""
+    return jnp.floor((values + b) / w).astype(jnp.int32)
+
+
+def srp_discretize(values: jax.Array) -> jax.Array:
+    """sign(v) in {0, 1} (paper Eq. 3.1 / 4.34 / 4.61): 1 iff v > 0."""
+    return (values > 0).astype(jnp.int32)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack {0,1} int codes along the last axis into uint32 words (pad 0)."""
+    k = bits.shape[-1]
+    pad = (-k) % 32
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1)
+    words = bits.reshape(bits.shape[:-1] + (-1, 32)).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(words << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, k: int) -> jax.Array:
+    """Inverse of pack_bits, truncated back to K bits."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (-1,))[..., :k].astype(jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LSHFamily:
+    """A (K, L)-amplified LSH family of one of the six kinds.
+
+    The underlying projection holds K*L stacked projection tensors; `offsets`
+    (E2LSH only) holds the b ~ U[0, w] per hash function.
+    """
+
+    projection: Projection
+    offsets: jax.Array | None            # (L*K,) or None for SRP kinds
+    kind: str = dataclasses.field(metadata=dict(static=True))
+    num_codes: int = dataclasses.field(metadata=dict(static=True))    # K
+    num_tables: int = dataclasses.field(metadata=dict(static=True))   # L
+    bucket_width: float = dataclasses.field(default=0.0, metadata=dict(static=True))
+
+    def raw_projections(self, x) -> jax.Array:
+        """(L*K,) raw <P_k, X> values."""
+        return proj_lib.project(self.projection, x)
+
+    def hash(self, x) -> jax.Array:
+        """Integer hashcodes, shape (L, K)."""
+        v = self.raw_projections(x)
+        if self.kind in E2LSH_KINDS:
+            codes = e2lsh_discretize(v, self.offsets, self.bucket_width)
+        else:
+            codes = srp_discretize(v)
+        return codes.reshape(self.num_tables, self.num_codes)
+
+    def hash_batch(self, xs) -> jax.Array:
+        """(B, L, K) codes for a batch of tensors."""
+        return jax.vmap(self.hash)(xs)
+
+    def hash_packed(self, x) -> jax.Array:
+        """SRP only: (L, ceil(K/32)) uint32 packed signatures."""
+        if self.kind not in SRP_KINDS:
+            raise ValueError("hash_packed is defined for SRP kinds only")
+        return pack_bits(self.hash(x))
+
+    def storage_size(self) -> int:
+        """Stored scalars for the projection parameters (paper Tables 1-2)."""
+        return self.projection.storage_size()
+
+
+def make_family(key: jax.Array, kind: str, dims: Sequence[int],
+                num_codes: int = 8, num_tables: int = 1, rank: int = 4,
+                bucket_width: float = 4.0, dist: str = "rademacher",
+                dtype=jnp.float32) -> LSHFamily:
+    """Construct any of the paper's families or the naive baselines.
+
+    kind: 'cp-e2lsh' | 'tt-e2lsh' | 'cp-srp' | 'tt-srp' | 'e2lsh' | 'srp'.
+    The naive kinds ('e2lsh', 'srp') always use Gaussian dense projections
+    (Definitions 2-3); the tensorized kinds default to Rademacher entries
+    (Definitions 6-7), with dist='gaussian' giving CP_N / TT_N variants.
+    """
+    if kind not in ALL_KINDS:
+        raise ValueError(f"kind must be one of {ALL_KINDS}, got {kind!r}")
+    total = num_codes * num_tables
+    kp, kb = jax.random.split(key)
+    if kind.startswith("cp-"):
+        p = proj_lib.sample_cp_projection(kp, total, dims, rank, dist=dist, dtype=dtype)
+    elif kind.startswith("tt-"):
+        p = proj_lib.sample_tt_projection(kp, total, dims, rank, dist=dist, dtype=dtype)
+    else:
+        p = proj_lib.sample_dense_projection(kp, total, dims, dist="gaussian", dtype=dtype)
+    offsets = None
+    if kind in E2LSH_KINDS:
+        offsets = jax.random.uniform(kb, (total,), dtype, 0.0, bucket_width)
+    return LSHFamily(projection=p, offsets=offsets, kind=kind,
+                     num_codes=num_codes, num_tables=num_tables,
+                     bucket_width=float(bucket_width))
+
+
+def naive_storage_size(dims: Sequence[int], num_codes: int, num_tables: int) -> int:
+    """O(K d^N) scalars the naive method stores (paper Tables 1-2)."""
+    return num_codes * num_tables * int(math.prod(dims))

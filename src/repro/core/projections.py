@@ -1,0 +1,262 @@
+"""Tensorized random projections (paper §3.4, Definitions 8-9).
+
+A projection family maps X in R^{d_1 x...x d_N} to R^K:
+
+    f_CP(R)(X)_k = (1/sqrt(K)) <P_k, X>,  P_k ~ CP_Rad(R)   (Def. 8)
+    f_TT(R)(X)_k = (1/sqrt(K)) <T_k, X>,  T_k ~ TT_Rad(R)   (Def. 9)
+
+The K projection tensors are stored *stacked* — CP: per-mode (K, d_n, R)
+factor stacks; TT: per-mode (K, r, d_n, r) core stacks — so that all K inner
+products lower to a handful of batched einsums (MXU matmuls on TPU) instead of
+K independent chains. The LSH families (lsh.py) use `normalize=False` because
+Definitions 10-13 hash the raw <P, X>.
+
+`DenseProjection` is the paper's naive baseline: a (K, prod(d_n)) Gaussian
+matrix applied to the reshaped tensor — O(K d^N) space and time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tensor_formats import CPTensor, TTTensor
+
+
+def _rademacher(key, shape, dtype):
+    return (2.0 * jax.random.bernoulli(key, 0.5, shape).astype(dtype)) - 1.0
+
+
+def _sample(key, shape, dist, dtype):
+    if dist == "rademacher":
+        return _rademacher(key, shape, dtype)
+    if dist == "gaussian":
+        return jax.random.normal(key, shape, dtype)
+    raise ValueError(f"unknown dist {dist!r}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CPProjection:
+    """K stacked CP_Rad(R) / CP_N(R) projection tensors (Definitions 6, 8)."""
+
+    factors: tuple[jax.Array, ...]  # each (K, d_n, R)
+    scale: float = dataclasses.field(metadata=dict(static=True))  # 1/sqrt(R) [* 1/sqrt(K)]
+
+    @property
+    def num_hashes(self) -> int:
+        return self.factors[0].shape[0]
+
+    @property
+    def rank(self) -> int:
+        return self.factors[0].shape[-1]
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return tuple(f.shape[1] for f in self.factors)
+
+    def storage_size(self) -> int:
+        """O(K N d R) stored scalars (paper Remark 1)."""
+        return sum(int(np.prod(f.shape)) for f in self.factors)
+
+    def single(self, k: int) -> CPTensor:
+        """The k-th projection tensor P_k as a plain CPTensor."""
+        return CPTensor(tuple(f[k] for f in self.factors), scale=self.scale)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TTProjection:
+    """K stacked TT_Rad(R) / TT_N(R) projection tensors (Definitions 7, 9)."""
+
+    cores: tuple[jax.Array, ...]  # each (K, r_{n-1}, d_n, r_n)
+    scale: float = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_hashes(self) -> int:
+        return self.cores[0].shape[0]
+
+    @property
+    def rank(self) -> int:
+        return max(max(c.shape[1], c.shape[3]) for c in self.cores)
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return tuple(c.shape[2] for c in self.cores)
+
+    def storage_size(self) -> int:
+        """O(K N d R^2) stored scalars (paper Remark 2)."""
+        return sum(int(np.prod(c.shape)) for c in self.cores)
+
+    def single(self, k: int) -> TTTensor:
+        return TTTensor(tuple(c[k] for c in self.cores), scale=self.scale)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseProjection:
+    """Naive-method baseline: (K, prod d_n) Gaussian matrix (paper §2)."""
+
+    matrix: jax.Array  # (K, prod(dims))
+    dims_: tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    scale: float = dataclasses.field(default=1.0, metadata=dict(static=True))
+
+    @property
+    def num_hashes(self) -> int:
+        return self.matrix.shape[0]
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return self.dims_
+
+    def storage_size(self) -> int:
+        """O(K d^N) stored scalars — exponential in N."""
+        return int(np.prod(self.matrix.shape))
+
+
+Projection = CPProjection | TTProjection | DenseProjection
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+
+def sample_cp_projection(key, num_hashes: int, dims: Sequence[int], rank: int,
+                         dist: str = "rademacher", normalize: bool = False,
+                         dtype=jnp.float32) -> CPProjection:
+    keys = jax.random.split(key, len(dims))
+    factors = tuple(
+        _sample(k, (num_hashes, d, rank), dist, dtype) for k, d in zip(keys, dims)
+    )
+    scale = 1.0 / math.sqrt(rank)
+    if normalize:  # the 1/sqrt(K) of Definition 8
+        scale /= math.sqrt(num_hashes)
+    return CPProjection(factors=factors, scale=scale)
+
+
+def sample_tt_projection(key, num_hashes: int, dims: Sequence[int], rank: int,
+                         dist: str = "rademacher", normalize: bool = False,
+                         dtype=jnp.float32) -> TTProjection:
+    n = len(dims)
+    keys = jax.random.split(key, n)
+    cores = []
+    for i, (k, d) in enumerate(zip(keys, dims)):
+        r_prev = 1 if i == 0 else rank
+        r_next = 1 if i == n - 1 else rank
+        cores.append(_sample(k, (num_hashes, r_prev, d, r_next), dist, dtype))
+    scale = 1.0 / math.sqrt(rank ** (n - 1))
+    if normalize:
+        scale /= math.sqrt(num_hashes)
+    return TTProjection(cores=tuple(cores), scale=scale)
+
+
+def sample_dense_projection(key, num_hashes: int, dims: Sequence[int],
+                            dist: str = "gaussian", normalize: bool = False,
+                            dtype=jnp.float32) -> DenseProjection:
+    size = int(np.prod(list(dims)))
+    m = _sample(key, (num_hashes, size), dist, dtype)
+    scale = 1.0 / math.sqrt(num_hashes) if normalize else 1.0
+    return DenseProjection(matrix=m, dims_=tuple(dims), scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Projection application: X (dense | CP | TT)  ->  (K,) values
+# All K inner products are evaluated with stacked batched einsums.
+# ---------------------------------------------------------------------------
+
+
+def _project_cp_on_cp(p: CPProjection, x: CPTensor) -> jax.Array:
+    """(K,) values of <P_k, X>, X in CP format. O(K N d max{R,R^}^2)."""
+    h = None
+    for a, f in zip(x.factors, p.factors):
+        g = jnp.einsum("ir,kiq->krq", a, f)  # per-mode Gram, batched over K
+        h = g if h is None else h * g
+    return (x.scale * p.scale) * jnp.sum(h, axis=(1, 2))
+
+
+def _project_cp_on_tt(p: CPProjection, x: TTTensor) -> jax.Array:
+    """(K,) values of <P_k, X>, X in TT format. O(K N d max{R,R^}^3)."""
+    rank = p.rank
+    k = p.num_hashes
+    s = jnp.ones((k, rank, 1), x.cores[0].dtype)
+    for g, f in zip(x.cores, p.factors):
+        # s: (K, R, a), g: (a, d, b), f: (K, d, R)
+        s = jnp.einsum("kra,aib,kir->krb", s, g, f)
+    return (x.scale * p.scale) * jnp.sum(s, axis=(1, 2))
+
+
+def _project_cp_on_dense(p: CPProjection, x: jax.Array) -> jax.Array:
+    """(K,) values of <P_k, X>, dense X. O(K R d^N), no d^N reshape."""
+    t = jnp.einsum("i...,kir->kr...", x, p.factors[0])
+    for f in p.factors[1:]:
+        t = jnp.einsum("kri...,kir->kr...", t, f)
+    return p.scale * jnp.sum(t, axis=1)
+
+
+def _project_tt_on_tt(p: TTProjection, x: TTTensor) -> jax.Array:
+    """(K,) values of <T_k, X>, X in TT format. O(K N d max{R,R^}^3)."""
+    k = p.num_hashes
+    s = jnp.ones((k, 1, 1), x.cores[0].dtype)
+    for gx, gp in zip(x.cores, p.cores):
+        # s: (K, a, b), gx: (a, d, c), gp: (K, b, d, e)
+        s = jnp.einsum("kab,aic,kbie->kce", s, gx, gp)
+    return (x.scale * p.scale) * s.reshape(k)
+
+
+def _project_tt_on_cp(p: TTProjection, x: CPTensor) -> jax.Array:
+    """(K,) values of <T_k, X>, X in CP format. O(K N d max{R,R^}^3)."""
+    k = p.num_hashes
+    rank = x.rank
+    s = jnp.ones((k, rank, 1), x.factors[0].dtype)
+    for a, gp in zip(x.factors, p.cores):
+        # s: (K, R^, b), gp: (K, b, d, e), a: (d, R^)
+        s = jnp.einsum("krb,kbie,ir->kre", s, gp, a)
+    return (x.scale * p.scale) * jnp.sum(s, axis=(1, 2))
+
+
+def _project_tt_on_dense(p: TTProjection, x: jax.Array) -> jax.Array:
+    """(K,) values of <T_k, X>, dense X. O(K R^2 d^N)."""
+    t = jnp.einsum("i...,kair->kr...", x, p.cores[0])  # a == 1
+    for core in p.cores[1:]:
+        t = jnp.einsum("kai...,kair->kr...", t, core)
+    return p.scale * t.reshape(p.num_hashes)
+
+
+def _project_dense_on_any(p: DenseProjection, x) -> jax.Array:
+    from repro.core.tensor_formats import cp_to_dense, tt_to_dense
+
+    if isinstance(x, CPTensor):
+        x = cp_to_dense(x)  # the naive method reshapes/materializes
+    elif isinstance(x, TTTensor):
+        x = tt_to_dense(x)
+    return p.scale * (p.matrix @ x.reshape(-1))
+
+
+def project(p: Projection, x) -> jax.Array:
+    """Apply a projection family to one tensor -> (K,) projected values."""
+    if isinstance(p, CPProjection):
+        if isinstance(x, CPTensor):
+            return _project_cp_on_cp(p, x)
+        if isinstance(x, TTTensor):
+            return _project_cp_on_tt(p, x)
+        return _project_cp_on_dense(p, x)
+    if isinstance(p, TTProjection):
+        if isinstance(x, CPTensor):
+            return _project_tt_on_cp(p, x)
+        if isinstance(x, TTTensor):
+            return _project_tt_on_tt(p, x)
+        return _project_tt_on_dense(p, x)
+    if isinstance(p, DenseProjection):
+        return _project_dense_on_any(p, x)
+    raise TypeError(f"unknown projection {type(p)}")
+
+
+def project_batch(p: Projection, xs) -> jax.Array:
+    """Apply to a batch of tensors (leading axis on every leaf) -> (B, K)."""
+    return jax.vmap(lambda x: project(p, x))(xs)

@@ -1,0 +1,257 @@
+"""CP and TT tensor formats (paper §3.3, Definitions 4-7).
+
+A tensor X in R^{d_1 x ... x d_N} is stored either densely, in CP format
+
+    X = scale * sum_r  a_r^(1) o a_r^(2) o ... o a_r^(N)          (Def. 4)
+
+with factor matrices A^(n) in R^{d_n x R}, or in TT format
+
+    X[i_1,...,i_N] = scale * G1[:,i_1,:] G2[:,i_2,:] ... GN[:,i_N,:]   (Def. 5)
+
+with cores G^(n) in R^{r_{n-1} x d_n x r_n}, r_0 = r_N = 1.
+
+Both formats are registered JAX pytrees; `scale` is static metadata so it can
+encode the paper's 1/sqrt(R) (Def. 6) and 1/sqrt(R^{N-1}) (Def. 7) exactly
+while factor/core entries remain raw +-1 Rademacher samples (MXU-friendly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CPTensor:
+    """Rank-R CP decomposition tensor (paper Definition 4)."""
+
+    factors: tuple[jax.Array, ...]  # each (d_n, R)
+    scale: float = dataclasses.field(default=1.0, metadata=dict(static=True))
+
+    @property
+    def rank(self) -> int:
+        return self.factors[0].shape[-1]
+
+    @property
+    def ndim(self) -> int:
+        return len(self.factors)
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return tuple(f.shape[0] for f in self.factors)
+
+    @property
+    def dtype(self):
+        return self.factors[0].dtype
+
+    def storage_size(self) -> int:
+        """Number of stored scalars: O(N d R) (paper Remark 3)."""
+        return sum(int(np.prod(f.shape)) for f in self.factors)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TTTensor:
+    """Rank-R tensor-train decomposition tensor (paper Definition 5)."""
+
+    cores: tuple[jax.Array, ...]  # each (r_{n-1}, d_n, r_n); r_0 = r_N = 1
+    scale: float = dataclasses.field(default=1.0, metadata=dict(static=True))
+
+    @property
+    def ranks(self) -> tuple[int, ...]:
+        # (r_0, r_1, ..., r_N)
+        return tuple(c.shape[0] for c in self.cores) + (self.cores[-1].shape[-1],)
+
+    @property
+    def rank(self) -> int:
+        return max(self.ranks)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.cores)
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return tuple(c.shape[1] for c in self.cores)
+
+    @property
+    def dtype(self):
+        return self.cores[0].dtype
+
+    def storage_size(self) -> int:
+        """Number of stored scalars: O(N d R^2) (paper Remark 5)."""
+        return sum(int(np.prod(c.shape)) for c in self.cores)
+
+
+# ---------------------------------------------------------------------------
+# Random tensors (paper Definitions 6 and 7, plus Gaussian data tensors)
+# ---------------------------------------------------------------------------
+
+
+def _rademacher(key, shape, dtype):
+    return (2.0 * jax.random.bernoulli(key, 0.5, shape).astype(dtype)) - 1.0
+
+
+def cp_rademacher(key: jax.Array, dims: Sequence[int], rank: int,
+                  dtype=jnp.float32) -> CPTensor:
+    """CP-Rademacher distributed tensor, P ~ CP_Rad(R) (paper Definition 6).
+
+    P = (1/sqrt(R)) [[A^(1), ..., A^(N)]], A^(n)[i,j] iid +-1 w.p. 1/2.
+    """
+    keys = jax.random.split(key, len(dims))
+    factors = tuple(_rademacher(k, (d, rank), dtype) for k, d in zip(keys, dims))
+    return CPTensor(factors=factors, scale=1.0 / math.sqrt(rank))
+
+
+def cp_gaussian(key: jax.Array, dims: Sequence[int], rank: int,
+                dtype=jnp.float32) -> CPTensor:
+    """CP-Gaussian distributed tensor, P ~ CP_N(R) (paper Definition 6)."""
+    keys = jax.random.split(key, len(dims))
+    factors = tuple(jax.random.normal(k, (d, rank), dtype) for k, d in zip(keys, dims))
+    return CPTensor(factors=factors, scale=1.0 / math.sqrt(rank))
+
+
+def _tt_core_shapes(dims: Sequence[int], rank: int) -> list[tuple[int, int, int]]:
+    n = len(dims)
+    shapes = []
+    for i, d in enumerate(dims):
+        r_prev = 1 if i == 0 else rank
+        r_next = 1 if i == n - 1 else rank
+        shapes.append((r_prev, d, r_next))
+    return shapes
+
+
+def tt_rademacher(key: jax.Array, dims: Sequence[int], rank: int,
+                  dtype=jnp.float32) -> TTTensor:
+    """TT-Rademacher distributed tensor, T ~ TT_Rad(R) (paper Definition 7).
+
+    T = (1/sqrt(R^{N-1})) <<G1, ..., GN>>, core entries iid +-1 w.p. 1/2.
+    """
+    shapes = _tt_core_shapes(dims, rank)
+    keys = jax.random.split(key, len(shapes))
+    cores = tuple(_rademacher(k, s, dtype) for k, s in zip(keys, shapes))
+    return TTTensor(cores=cores, scale=1.0 / math.sqrt(rank ** (len(dims) - 1)))
+
+
+def tt_gaussian(key: jax.Array, dims: Sequence[int], rank: int,
+                dtype=jnp.float32) -> TTTensor:
+    """TT-Gaussian distributed tensor, T ~ TT_N(R) (paper Definition 7)."""
+    shapes = _tt_core_shapes(dims, rank)
+    keys = jax.random.split(key, len(shapes))
+    cores = tuple(jax.random.normal(k, s, dtype) for k, s in zip(keys, shapes))
+    return TTTensor(cores=cores, scale=1.0 / math.sqrt(rank ** (len(dims) - 1)))
+
+
+def cp_random_data(key: jax.Array, dims: Sequence[int], rank: int,
+                   dtype=jnp.float32) -> CPTensor:
+    """A random *data* tensor given in rank-R^ CP decomposition format."""
+    keys = jax.random.split(key, len(dims))
+    factors = tuple(
+        jax.random.normal(k, (d, rank), dtype) / math.sqrt(d) for k, d in zip(keys, dims)
+    )
+    return CPTensor(factors=factors, scale=1.0)
+
+
+def tt_random_data(key: jax.Array, dims: Sequence[int], rank: int,
+                   dtype=jnp.float32) -> TTTensor:
+    """A random *data* tensor given in rank-R^ TT decomposition format."""
+    shapes = _tt_core_shapes(dims, rank)
+    keys = jax.random.split(key, len(shapes))
+    cores = tuple(
+        jax.random.normal(k, s, dtype) / math.sqrt(s[0] * s[1]) ** 0.5
+        for k, s in zip(keys, shapes)
+    )
+    return TTTensor(cores=cores, scale=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Densification (test oracles; exponential O(d^N) memory, small shapes only)
+# ---------------------------------------------------------------------------
+
+
+def cp_to_dense(x: CPTensor) -> jax.Array:
+    """Materialize a CP tensor: X = scale * sum_r (x)_n a_r^(n)."""
+    acc = x.factors[0]  # (d1, R)
+    for f in x.factors[1:]:
+        acc = acc[..., None, :] * f  # (..., d_k, R)
+    return x.scale * jnp.sum(acc, axis=-1)
+
+
+def tt_to_dense(x: TTTensor) -> jax.Array:
+    """Materialize a TT tensor via sequential core contraction."""
+    acc = x.cores[0]  # (1, d1, r1)
+    acc = acc.reshape(acc.shape[1], acc.shape[2])  # (d1, r1)
+    for core in x.cores[1:]:
+        acc = jnp.tensordot(acc, core, axes=(-1, 0))  # (..., d_k, r_k)
+    return x.scale * acc.reshape(acc.shape[:-1])
+
+
+def dense_to_tt(x: jax.Array, max_rank: int, eps: float = 0.0) -> TTTensor:
+    """TT-SVD (Oseledets 2011): decompose a dense tensor into TT format.
+
+    Used for round-trip property tests — `TT rank can be computed efficiently`
+    (paper §2.2), in contrast to CP rank which is NP-hard.
+    """
+    dims = x.shape
+    n = len(dims)
+    cores = []
+    r_prev = 1
+    c = x.reshape(r_prev * dims[0], -1)
+    for i in range(n - 1):
+        u, s, vt = jnp.linalg.svd(c, full_matrices=False)
+        if eps > 0.0:
+            keep = int(jnp.sum(s > eps * s[0]))
+            r = max(1, min(max_rank, keep))
+        else:
+            r = min(max_rank, s.shape[0])
+        u, s, vt = u[:, :r], s[:r], vt[:r]
+        cores.append(u.reshape(r_prev, dims[i], r))
+        c = (s[:, None] * vt).reshape(r * dims[i + 1], -1) if i + 1 < n - 1 else (s[:, None] * vt)
+        r_prev = r
+    cores.append(c.reshape(r_prev, dims[-1], 1))
+    return TTTensor(cores=tuple(cores), scale=1.0)
+
+
+def cp_als(x: jax.Array, rank: int, iters: int = 25, key=None) -> CPTensor:
+    """Plain ALS fit of a rank-R CP model to a small dense tensor.
+
+    Only for tests/examples. The paper never requires computing a CP
+    decomposition (NP-hard, §2.2); inputs are assumed *given* in CP format.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    dims = x.shape
+    n = len(dims)
+    keys = jax.random.split(key, n)
+    factors = [jax.random.normal(k, (d, rank), x.dtype) for k, d in zip(keys, dims)]
+
+    def unfold(t, mode):
+        return jnp.moveaxis(t, mode, 0).reshape(dims[mode], -1)
+
+    for _ in range(iters):
+        for mode in range(n):
+            others = [factors[m] for m in range(n) if m != mode]
+            gram = math.prod(1 for _ in others)  # placeholder to keep mypy calm
+            g = jnp.ones((rank, rank), x.dtype)
+            for f in others:
+                g = g * (f.T @ f)
+            kr = None  # Khatri-Rao of the other factors, reverse order
+            for f in reversed(others):
+                kr = f if kr is None else (kr[:, None, :] * f[None, :, :]).reshape(-1, rank)
+            mttkrp = unfold(x, mode) @ kr
+            factors[mode] = jnp.linalg.solve(g.T, mttkrp.T).T
+    return CPTensor(factors=tuple(factors), scale=1.0)
+
+
+def khatri_rao(mats: Sequence[jax.Array]) -> jax.Array:
+    """Column-wise Khatri-Rao product of (d_n, R) matrices -> (prod d_n, R)."""
+    out = mats[0]
+    for m in mats[1:]:
+        out = (out[:, None, :] * m[None, :, :]).reshape(-1, m.shape[1])
+    return out

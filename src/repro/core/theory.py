@@ -1,0 +1,48 @@
+"""Closed-form collision probabilities and rank conditions from the paper.
+
+Used by tests and benchmarks to validate the implementation against the
+paper's own claims (Theorems 4, 6, 8, 10).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+from jax.scipy.stats import norm as _norm
+
+
+def e2lsh_collision_prob(r, w: float):
+    """p(r) = Pr[h(x) = h(y)] for ||x-y|| = r (paper Eq. 3.4 / 4.17 / 4.33).
+
+    Closed form of  int_0^w (1/r) f(t/r) (1 - t/w) dt  with f the folded
+    standard normal density (Datar et al. 2004):
+
+        p(r) = 1 - 2 Phi(-w/r) - (2 r / (sqrt(2 pi) w)) (1 - exp(-w^2 / 2r^2))
+    """
+    r = jnp.asarray(r, jnp.float64 if False else jnp.float32)
+    t = w / r
+    return (1.0 - 2.0 * _norm.cdf(-t)
+            - (2.0 / (math.sqrt(2.0 * math.pi) * t)) * (1.0 - jnp.exp(-(t * t) / 2.0)))
+
+
+def srp_collision_prob(cosine):
+    """Pr[h(x) = h(y)] = 1 - theta/pi (paper Eq. 3.2 / 4.58 / 4.81)."""
+    c = jnp.clip(jnp.asarray(cosine), -1.0, 1.0)
+    return 1.0 - jnp.arccos(c) / math.pi
+
+
+def cp_rank_condition(n_modes: int, dim: int, rank: int) -> float:
+    """Ratio sqrt(R) N^(4/5) / d^((3N-8)/10) with d the per-mode dimension
+    (Theorem 3/4 side condition, alpha = 5). The LSH guarantee needs this
+    ratio -> 0 as the tensor grows; small values indicate the asymptotic
+    regime. (Exponent on total size D = d^N is (3N-8)/(10N).)"""
+    total = float(dim) ** n_modes
+    return math.sqrt(rank) * n_modes ** 0.8 / total ** ((3 * n_modes - 8) / (10.0 * n_modes))
+
+
+def tt_rank_condition(n_modes: int, dim: int, rank: int) -> float:
+    """Ratio sqrt(R^(N-1)) N^(4/5) / D^((3N-8)/10N) (Theorem 5/6 condition)."""
+    total = float(dim) ** n_modes
+    return (math.sqrt(float(rank) ** (n_modes - 1)) * n_modes ** 0.8
+            / total ** ((3 * n_modes - 8) / (10.0 * n_modes)))

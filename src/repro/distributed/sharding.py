@@ -1,0 +1,149 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Model code annotates activations/params with *logical* dim names
+("batch", "embed", "heads", ...). A rule set maps each logical name to mesh
+axes. `shard()` resolves names against the active rule context and applies
+`with_sharding_constraint`; outside a context it is a no-op, so the same
+model code runs in single-device tests and in the 512-chip dry-run.
+
+Divisibility fallback: a logical dim whose size does not divide the mapped
+mesh-axis product is silently replicated (and recorded), never an error —
+this is what keeps all 40 (arch x shape) dry-run cells compiling while the
+perf pass tightens individual rules.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+# Default logical-name -> mesh-axes mapping for the production meshes
+# ("pod", "data", "model"). Tuples mean the dim is sharded over several axes.
+DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_seq": None,     # overridden to "model" (sequence parallelism) at scale
+    "kv_seq": None,          # overridden to "model" for seq-sharded decode caches
+    "embed": None,
+    "fsdp_embed": ("data", "pod"),  # FSDP/ZeRO: param d_model dim; on the
+                                    # multi-pod mesh optimizer state also
+                                    # shards across pods (ZeRO over DP)
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv_embed": None,
+    "vocab": "model",
+    "expert": "model",
+    "capacity": ("pod", "data"),   # MoE dispatch-buffer slot dim
+    "dispatch": ("pod", "data"),   # MoE flat dispatch rows (T*k / E*C)
+    "moe_d": "model",              # MoE dispatch feature dim (see moe.py)
+    "chunks": "model",             # SSD chunk-index dim (heads fallback)
+    "conv": None,
+    "state": None,
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "frames": None,
+    "layers": None,
+    "lsh_hash": None,
+    "lsh_rank": None,
+}
+
+
+@dataclasses.dataclass
+class RuleContext:
+    mesh: Mesh
+    rules: dict[str, tuple[str, ...] | str | None]
+    fallbacks: list[tuple[str, int, tuple[str, ...]]] = dataclasses.field(
+        default_factory=list)
+
+    def axis_size(self, axes: tuple[str, ...]) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+
+def current() -> RuleContext | None:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, overrides: Mapping[str, object] | None = None):
+    """Activate sharding rules. Missing mesh axes in a rule are dropped
+    (so the same rules work for (data, model) and (pod, data, model))."""
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    cleaned = {}
+    for name, axes in rules.items():
+        if axes is None:
+            cleaned[name] = None
+            continue
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        axes_t = tuple(a for a in axes_t if a in mesh.shape)
+        cleaned[name] = axes_t or None
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = RuleContext(mesh=mesh, rules=cleaned)
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def resolve_spec(names: Sequence[str | None], shape: Sequence[int]) -> P:
+    """Logical names -> PartitionSpec under the active context (with
+    divisibility fallback). Returns P() outside a context."""
+    ctx = current()
+    if ctx is None:
+        return P()
+    entries = []
+    used: set[str] = set()
+    for name, size in zip(names, shape):
+        axes = ctx.rules.get(name) if name else None
+        if not axes:
+            entries.append(None)
+            continue
+        if any(a in used for a in axes):
+            entries.append(None)  # a mesh axis may appear once per spec
+            continue
+        ax_size = ctx.axis_size(axes)
+        if size % ax_size != 0:
+            ctx.fallbacks.append((str(name), int(size), axes))
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes if len(axes) > 1 else axes[0])
+    return P(*entries)
+
+
+def shard(x: jax.Array, *names: str | None) -> jax.Array:
+    """Constrain activation sharding by logical dim names (no-op w/o context)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = resolve_spec(names, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(names: Sequence[str | None], shape: Sequence[int]) -> NamedSharding:
+    ctx = current()
+    assert ctx is not None, "named_sharding requires an active axis_rules context"
+    return NamedSharding(ctx.mesh, resolve_spec(names, shape))
+
+
+def tree_shardings(axes_tree, shape_tree):
+    """Map a tree of logical-axis tuples + a matching tree of
+    ShapeDtypeStructs to NamedShardings."""
+    return jax.tree.map(
+        lambda axes, sds: named_sharding(axes, sds.shape),
+        axes_tree, shape_tree,
+        is_leaf=lambda a: isinstance(a, tuple) and all(
+            isinstance(e, (str, type(None))) for e in a),
+    )

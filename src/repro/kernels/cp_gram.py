@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: fused batched CP x CP inner products.
+
+Computes, for K stacked CP projection tensors P_k and one CP input X
+(equal mode dims, stacked factors):
+
+    out[k] = sum_{r,q}  prod_n  (X_n^T P_{n,k})[r, q]
+
+This is the compute hot-spot of CP-E2LSH / CP-SRP (paper Definitions 10, 12):
+N Gram matmuls per hash, O(K N d Rx Rp) FLOPs total.
+
+TPU mapping
+-----------
+* Grid over K-blocks; each program owns KBLK projection tensors.
+* The input factor stack (N, d, Rx) is small (O(N d R)) and is broadcast
+  into VMEM once (index_map pins it to block 0 for every program).
+* Per mode n the Gram X_n^T P_{n,k} is a (d, Rx)^T x (d, Rp) MXU matmul,
+  batched over KBLK; the cross-mode Hadamard product is accumulated in a
+  VMEM scratch so the (KBLK, Rx, Rp) intermediates never round-trip to HBM —
+  the fusion is the point of the kernel (an XLA-naive lowering writes N
+  Gram tensors to HBM).
+* ops.py pads d to a multiple of 8 (zero rows are exact: they add 0 to the
+  Gram) and Rx/Rp to multiples of 128 only when they exceed MXU lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cp_gram_kernel(x_ref, p_ref, o_ref, acc_ref, *, n_modes: int):
+    # x_ref: (N, d, Rx); p_ref: (N, KBLK, d, Rp); o_ref: (KBLK,)
+    # acc_ref: VMEM scratch (KBLK, Rx, Rp)
+    for m in range(n_modes):  # static unroll over modes
+        x_m = x_ref[m]                      # (d, Rx)
+        p_m = p_ref[m]                      # (KBLK, d, Rp)
+        # Gram: contract d -> (KBLK, Rx, Rp), batched MXU matmul
+        g = jax.lax.dot_general(
+            p_m, x_m,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                   # (KBLK, Rp, Rx)
+        g = jnp.swapaxes(g, 1, 2)           # (KBLK, Rx, Rp)
+        if m == 0:
+            acc_ref[...] = g
+        else:
+            acc_ref[...] = acc_ref[...] * g
+    o_ref[...] = jnp.sum(acc_ref[...], axis=(1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def cp_gram_pallas(x_factors: jax.Array, p_factors: jax.Array,
+                   block_k: int = 8, interpret: bool = True) -> jax.Array:
+    """x_factors (N, d, Rx), p_factors (N, K, d, Rp) -> (K,) float32.
+
+    Requires K % block_k == 0 (ops.py pads; padded projections are zeros,
+    whose Grams are zero, so padded outputs are zero and are sliced off).
+    """
+    n, d, rx = x_factors.shape
+    _, k, _, rp = p_factors.shape
+    assert k % block_k == 0, (k, block_k)
+    grid = (k // block_k,)
+    kernel = functools.partial(_cp_gram_kernel, n_modes=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, d, rx), lambda i: (0, 0, 0)),           # broadcast X
+            pl.BlockSpec((n, block_k, d, rp), lambda i: (0, i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_k,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_k, rx, rp), jnp.float32)],
+        interpret=interpret,
+    )(x_factors, p_factors)

@@ -1,0 +1,142 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These adapt the core-library formats (CPTensor/TTTensor/CPProjection/
+TTProjection with per-mode tuples) to the stacked, padded, MXU-aligned
+layouts the kernels want, and slice the padding back off:
+
+  * mode dims padded to a multiple of 8 with zero rows (Grams unchanged);
+  * K padded to the K-block with zero projections (outputs sliced off);
+  * TT boundary ranks zero-padded to R, chain started from e_00;
+  * SRP K padded to a multiple of 32 with -1 values (sign bit 0).
+
+On this CPU container kernels always run with interpret=True (the TPU
+lowering is the target; pass interpret=False on real hardware).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projections import CPProjection, TTProjection
+from repro.core.tensor_formats import CPTensor, TTTensor
+from repro.kernels.cp_gram import cp_gram_pallas
+from repro.kernels.e2lsh_quant import e2lsh_quant_pallas
+from repro.kernels.srp_pack import srp_pack_pallas
+from repro.kernels.tt_inner import tt_inner_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _default_interpret(interpret):
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def _pad_axis(a: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _check_equal_dims(dims):
+    if len(set(dims)) != 1:
+        raise ValueError(
+            f"kernel path needs equal mode dims, got {dims}; use the "
+            "repro.core.projections path for ragged modes")
+
+
+# ---------------------------------------------------------------------------
+# CP x CP inner products
+# ---------------------------------------------------------------------------
+
+
+def cp_inner_products(x: CPTensor, p: CPProjection, block_k: int = 8,
+                      interpret: bool | None = None) -> jax.Array:
+    """(K,) raw <P_k, X> values (scales applied) via the fused Gram kernel."""
+    _check_equal_dims(x.dims)
+    _check_equal_dims(p.dims)
+    xf = jnp.stack([f.astype(jnp.float32) for f in x.factors])   # (N, d, Rx)
+    pf = jnp.stack([f.astype(jnp.float32) for f in p.factors], 0)  # (N, K, d, Rp)
+    xf = _pad_axis(xf, 1, 8)
+    pf = _pad_axis(pf, 2, 8)
+    k = pf.shape[1]
+    pf = _pad_axis(pf, 1, block_k)
+    out = cp_gram_pallas(xf, pf, block_k=block_k,
+                         interpret=_default_interpret(interpret))
+    return (x.scale * p.scale) * out[:k]
+
+
+# ---------------------------------------------------------------------------
+# TT x TT inner products
+# ---------------------------------------------------------------------------
+
+
+def _stack_tt_cores(cores, rank: int) -> jax.Array:
+    """Zero-pad boundary cores to (rank, d, rank) and stack -> (N, R, d, R)."""
+    out = []
+    for c in cores:
+        c = c.astype(jnp.float32)
+        c = _pad_axis(_pad_axis(c, 0, rank) if c.shape[0] < rank else c,
+                      2, rank) if (c.shape[0] < rank or c.shape[2] < rank) else c
+        # _pad_axis pads to a multiple; boundary ranks are 1 so this yields rank
+        out.append(c)
+    return jnp.stack(out)
+
+
+def tt_inner_products(x: TTTensor, p: TTProjection, block_k: int = 8,
+                      interpret: bool | None = None) -> jax.Array:
+    """(K,) raw <T_k, X> values (scales applied) via the chain kernel."""
+    _check_equal_dims(x.dims)
+    _check_equal_dims(p.dims)
+    rx = max(max(c.shape[0], c.shape[2]) for c in x.cores)
+    rp = max(max(c.shape[1], c.shape[3]) for c in p.cores)
+    xc = _stack_tt_cores(x.cores, rx)                     # (N, Rx, d, Rx)
+    pc = []
+    for c in p.cores:  # (K, r, d, r)
+        c = c.astype(jnp.float32)
+        if c.shape[1] < rp:
+            c = _pad_axis(c, 1, rp)
+        if c.shape[3] < rp:
+            c = _pad_axis(c, 3, rp)
+        pc.append(c)
+    pc = jnp.stack(pc)                                    # (N, K, Rp, d, Rp)
+    xc = _pad_axis(xc, 2, 8)
+    pc = _pad_axis(pc, 3, 8)
+    k = pc.shape[1]
+    pc = _pad_axis(pc, 1, block_k)
+    out = tt_inner_pallas(xc, pc, block_k=block_k,
+                          interpret=_default_interpret(interpret))
+    return (x.scale * p.scale) * out[:k]
+
+
+# ---------------------------------------------------------------------------
+# Discretization tails
+# ---------------------------------------------------------------------------
+
+
+def srp_pack(values: jax.Array, block_b: int = 8,
+             interpret: bool | None = None) -> jax.Array:
+    """(B, K) raw values -> (B, ceil(K/32)) packed uint32 signatures."""
+    b, k = values.shape
+    v = _pad_axis(values.astype(jnp.float32), 1, 32, value=-1.0)
+    v = _pad_axis(v, 0, block_b, value=-1.0)
+    out = srp_pack_pallas(v, block_b=block_b,
+                          interpret=_default_interpret(interpret))
+    return out[:b]
+
+
+def e2lsh_quantize(values: jax.Array, offsets: jax.Array, w: float,
+                   block_b: int = 8, interpret: bool | None = None) -> jax.Array:
+    """(B, K) values + (K,) offsets -> int32 (B, K) hashcodes."""
+    b, k = values.shape
+    v = _pad_axis(values.astype(jnp.float32), 0, block_b)
+    out = e2lsh_quant_pallas(v, offsets.astype(jnp.float32), float(w),
+                             block_b=block_b,
+                             interpret=_default_interpret(interpret))
+    return out[:b]

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Shapes use the *stacked-equal-mode* layout the kernels operate on (all mode
+dimensions equal, boundary TT ranks zero-padded to R):
+
+  cp_inner_ref : x_factors (N, d, Rx), p_factors (N, K, d, Rp) -> (K,)
+  tt_inner_ref : x_cores (N, Rx, d, Rx), p_cores (N, K, Rp, d, Rp) -> (K,)
+                 (mode 0 cores live in row 0; the chain starts from e_00)
+  srp_pack_ref : values (B, K) -> uint32 (B, ceil(K/32))
+  e2lsh_quant_ref : values (B, K), offsets (K,), w -> int32 (B, K)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cp_inner_ref(x_factors: jax.Array, p_factors: jax.Array) -> jax.Array:
+    """Batched <P_k, X> for CP x CP (no scales): prod-of-Grams reduction."""
+    n = x_factors.shape[0]
+    h = None
+    for m in range(n):
+        g = jnp.einsum("dr,kdq->krq", x_factors[m], p_factors[m])
+        h = g if h is None else h * g
+    return jnp.sum(h, axis=(1, 2))
+
+
+def tt_inner_ref(x_cores: jax.Array, p_cores: jax.Array) -> jax.Array:
+    """Batched <T_k, X> for TT x TT with zero-padded boundary ranks.
+
+    State S_k in R^{Rx x Rp}, S0 = e_00 (only [0, 0] = 1); per mode:
+    S' = sum_i Gx[:, i, :]^T S Gp[:, i, :].
+    """
+    n, rx = x_cores.shape[0], x_cores.shape[1]
+    k, rp = p_cores.shape[1], p_cores.shape[2]
+    s = jnp.zeros((k, rx, rp), x_cores.dtype).at[:, 0, 0].set(1.0)
+    for m in range(n):
+        s = jnp.einsum("kab,aic,kbie->kce", s, x_cores[m], p_cores[m])
+    return s[:, 0, 0]
+
+
+def srp_pack_ref(values: jax.Array) -> jax.Array:
+    """sign-bit (v > 0) packed little-endian into uint32 words."""
+    bits = (values > 0).astype(jnp.uint32)
+    kdim = bits.shape[-1]
+    pad = (-kdim) % 32
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1)
+    words = bits.reshape(bits.shape[:-1] + (-1, 32))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(words << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def e2lsh_quant_ref(values: jax.Array, offsets: jax.Array, w: float) -> jax.Array:
+    """floor((v + b) / w) -> int32 (paper Eq. 4.1)."""
+    return jnp.floor((values + offsets) / w).astype(jnp.int32)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: batched TT x TT inner products (transfer-matrix chain).
+
+For K stacked TT projection tensors T_k and one TT input X, computes
+
+    out[k] = e_0^T ( prod_n  sum_i  Gx^(n)[:,i,:] (x) Gp_k^(n)[:,i,:] ) e_0
+
+via the standard chain: state S in R^{Rx x Rp}, S <- sum_i Gx[:,i,:]^T S
+Gp[:,i,:] per mode — the hot loop of TT-E2LSH / TT-SRP (Definitions 11, 13),
+O(K N d max{Rx,Rp}^3) FLOPs.
+
+TPU mapping
+-----------
+* Boundary cores are zero-padded to rank R by ops.py and the chain starts
+  from S0 = e_00, so every mode is a uniform (R, d, R) block — one BlockSpec,
+  no boundary specialization inside the kernel.
+* The running state S_k lives in a VMEM scratch across the whole mode loop;
+  per mode the update is two MXU matmuls:
+      tmp(b, i c) = S^T(b,a) @ Gx(a, i c)        # (Rx,Rx) x (Rx, d*Rx)
+      S'(c, e)    = tmp^T(c, b i) @ Gp(b i, e)   # reshape + (Rx, d*Rp) matmul
+  batched over the K-block. Nothing but the final (KBLK,) scalars leaves VMEM.
+* Mode loop is a static unroll (N is small); K-blocks form the grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tt_inner_kernel(x_ref, p_ref, o_ref, s_ref, *, n_modes: int):
+    # x_ref: (N, Rx, d, Rx); p_ref: (N, KBLK, Rp, d, Rp); o_ref: (KBLK,)
+    # s_ref: VMEM scratch (KBLK, Rx, Rp)
+    kblk, rx, rp = s_ref.shape
+    s0 = jnp.zeros((kblk, rx, rp), jnp.float32).at[:, 0, 0].set(1.0)
+    s_ref[...] = s0
+    for m in range(n_modes):  # static unroll
+        gx = x_ref[m]                        # (Rx, d, Rx)
+        gp = p_ref[m]                        # (KBLK, Rp, d, Rp)
+        d = gx.shape[1]
+        s = s_ref[...]                       # (KBLK, Rx, Rp)
+        # tmp[k, b, i, c] = sum_a s[k, a, b] * gx[a, i, c]
+        gx2 = gx.reshape(rx, d * rx)         # (a, i*c)
+        tmp = jax.lax.dot_general(
+            jnp.swapaxes(s, 1, 2),           # (KBLK, b=Rp, a=Rx)
+            gx2,
+            dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                    # (KBLK, Rp, d*Rx)
+        tmp = tmp.reshape(kblk, rp, d, rx)
+        # s'[k, c, e] = sum_{b, i} tmp[k, b, i, c] * gp[k, b, i, e]
+        tmp2 = tmp.reshape(kblk, rp * d, rx)
+        gp2 = gp.reshape(kblk, rp * d, rp)
+        s_ref[...] = jax.lax.dot_general(
+            tmp2, gp2,
+            dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )                                    # (KBLK, Rx, Rp)
+    o_ref[...] = s_ref[:, 0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def tt_inner_pallas(x_cores: jax.Array, p_cores: jax.Array,
+                    block_k: int = 8, interpret: bool = True) -> jax.Array:
+    """x_cores (N, Rx, d, Rx), p_cores (N, K, Rp, d, Rp) -> (K,) float32.
+
+    Mode-0 cores must be zero-padded into row 0 (ops.py does this); padded
+    K entries are all-zero cores giving exactly 0 output.
+    """
+    n, rx, d, _ = x_cores.shape
+    _, k, rp, _, _ = p_cores.shape
+    assert k % block_k == 0, (k, block_k)
+    grid = (k // block_k,)
+    kernel = functools.partial(_tt_inner_kernel, n_modes=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, rx, d, rx), lambda i: (0, 0, 0, 0)),     # broadcast X
+            pl.BlockSpec((n, block_k, rp, d, rp), lambda i: (0, i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_k,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_k, rx, rp), jnp.float32)],
+        interpret=interpret,
+    )(x_cores, p_cores)

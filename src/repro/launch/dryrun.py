@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x shape x mesh) cell
+against the production mesh with ShapeDtypeStruct inputs (no allocation),
+then record memory analysis, FLOP/byte cost analysis and the collective
+schedule for the roofline report.
+
+The two XLA_FLAGS lines above MUST run before any other import (jax locks
+the device count at first init); do not set this flag globally.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS
+from repro.distributed.sharding import axis_rules, named_sharding, tree_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (SHAPES, batch_specs, cache_specs,
+                                config_for_cell, rule_overrides)
+from repro.models import params as params_lib
+from repro.serving.engine import make_prefill_step, make_serve_step
+from repro.training.train_loop import (TrainConfig, abstract_state,
+                                       dryrun_train_config, make_train_step,
+                                       state_axes)
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _buffer_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum collective operand bytes from the compiled (per-partition) HLO.
+
+    Each collective instruction line carries its result shape; for
+    all-gather the moved bytes ~= result size ((n-1)/n of it crosses links),
+    for all-reduce ~= 2x operand size (ring reduce+broadcast), for
+    reduce-scatter ~= operand (= result x n) size. We record raw result
+    bytes per kind and apply the ring factors in the roofline step.
+    """
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?)([a-z0-9]+)\[([\d,]*)\]", stripped)
+        if not m:
+            continue
+        kind = next((k for k in _COLLECTIVES if f" {k}(" in stripped
+                     or f"{k}-start(" in stripped or f"{k}-done(" in stripped), None)
+        if kind is None:
+            continue
+        if f"{kind}-done(" in stripped:
+            continue  # counted at -start
+        # sum every buffer in the (possibly tuple) result
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(stripped.split(" = ", 1)[1].split("(", 1)[0] + "("):
+            total += _buffer_bytes(dt, dims)
+        if total == 0:
+            for dt, dims in _SHAPE_RE.findall(stripped):
+                total += _buffer_bytes(dt, dims)
+                break
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += total
+    return stats
+
+
+def _constrain(tree, axes_tree):
+    def leaf_is_axes(a):
+        return isinstance(a, tuple) and all(isinstance(e, (str, type(None)))
+                                            for e in a)
+    return jax.tree.map(
+        lambda a, x: jax.lax.with_sharding_constraint(
+            x, named_sharding(a, x.shape)),
+        axes_tree, tree, is_leaf=leaf_is_axes)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               config_variant=None, rule_extra=None) -> dict:
+    """Lower + compile one cell; returns the roofline-facing record."""
+    cell = SHAPES[shape_name]
+    cfg = config_variant or config_for_cell(arch, shape_name)
+    if cfg is None:
+        return {"status": "skipped",
+                "reason": "pure full-attention arch at 500k (DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    overrides = rule_overrides(cfg, mesh)
+    if rule_extra:
+        overrides.update(rule_extra)
+    with axis_rules(mesh, overrides) as ctx:
+        if cell.kind == "train":
+            tc = dryrun_train_config(cfg)
+            state_sds = abstract_state(cfg, tc)
+            st_axes = state_axes(cfg)
+            state_sh = tree_shardings(st_axes, state_sds)
+            b_sds, b_axes = batch_specs(cfg, cell, with_labels=True)
+            b_sh = tree_shardings(b_axes, b_sds)
+            inner = make_train_step(cfg, tc)
+
+            def step(state, batch):
+                new_state, metrics = inner(state, batch)
+                return _constrain(new_state, st_axes), metrics
+
+            jitted = jax.jit(step, in_shardings=(state_sh, b_sh),
+                             donate_argnums=0)
+            lowered = jitted.lower(state_sds, b_sds)
+        elif cell.kind == "prefill":
+            p_sds = params_lib.abstract_params(cfg)
+            p_axes = params_lib.param_axes(cfg)
+            p_sh = tree_shardings(p_axes, p_sds)
+            b_sds, b_axes = batch_specs(cfg, cell, with_labels=False)
+            b_sh = tree_shardings(b_axes, b_sds)
+            from repro.models import transformer as T
+            c_axes = T.cache_axes(cfg)
+            inner = make_prefill_step(cfg, max_len=cell.seq)
+
+            def step(params, batch):
+                logits, cache = inner(params, batch)
+                return logits, _constrain(cache, c_axes)
+
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(p_sds, b_sds)
+        else:  # decode
+            p_sds = params_lib.abstract_params(cfg)
+            p_axes = params_lib.param_axes(cfg)
+            p_sh = tree_shardings(p_axes, p_sds)
+            c_sds, c_axes = cache_specs(cfg, cell)
+            c_sh = tree_shardings(c_axes, c_sds)
+            tok_sds = jax.ShapeDtypeStruct((cell.batch, 1), jnp.int32)
+            tok_sh = named_sharding(("batch", None), tok_sds.shape)
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            pos_sh = named_sharding((), ())
+            inner = make_serve_step(cfg)
+
+            def step(params, cache, token, cur_pos):
+                logits, new_cache = inner(params, cache, token, cur_pos)
+                return logits, _constrain(new_cache, c_axes)
+
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+                             donate_argnums=1)
+            lowered = jitted.lower(p_sds, c_sds, tok_sds, pos_sds)
+
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        colls = collective_stats(hlo)
+        fallbacks = sorted({(f[0], f[1], "/".join(f[2])) for f in ctx.fallbacks})
+
+    return {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": cell.kind,
+        "config_name": cfg.name,
+        "n_params": params_lib.count_params(cfg),
+        "n_active_params": params_lib.count_active_params(cfg),
+        "compile_seconds": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_bytes": (mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+        },
+        "cost": {
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+        },
+        "collectives": colls,
+        "sharding_fallbacks": fallbacks,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Roofline-exact costs ("scan calculus")
+#
+# XLA's cost analysis counts a while-loop body ONCE regardless of trip count,
+# so the scan-over-layers compile under-reports FLOPs/collectives. We recover
+# exact per-step numbers from small *unrolled* auxiliary compiles:
+#     total(L) = outer + L * body            (homogeneous stacks)
+# with body = cost(L=2) - cost(L=1) from fully-unrolled variants (each layer
+# appears literally in the HLO). Whisper (enc+dec scans) and the hybrid arch
+# (nested group scan) get the analogous 3-variant linear solves. Memory is
+# taken from the full-depth scan compile (buffer assignment is exact there).
+# ---------------------------------------------------------------------------
+
+import dataclasses as _dc
+
+
+def _metric_vec(rec: dict) -> dict[str, float]:
+    v = {"flops": rec["cost"]["flops_per_device"],
+         "bytes": rec["cost"]["bytes_accessed_per_device"]}
+    for k, st in rec["collectives"].items():
+        v[f"coll.{k}.bytes"] = float(st["bytes"])
+        v[f"coll.{k}.count"] = float(st["count"])
+    return v
+
+
+def _lin(*terms) -> dict[str, float]:
+    """terms: (coef, vec) pairs -> coef-weighted sum, floored at 0."""
+    keys = terms[0][1].keys()
+    return {k: max(0.0, sum(c * v[k] for c, v in terms)) for k in keys}
+
+
+def roofline_costs(arch: str, shape_name: str, cfg, multi_pod: bool,
+                   rule_extra=None) -> dict:
+    """Exact per-step cost vector via unrolled aux compiles."""
+    rep = lambda **kw: _dc.replace(cfg, scan_unroll=True, **kw)
+    if cfg.block == "hybrid":
+        # total = outer + G*(P*mamba + shared)
+        va = rep(n_layers=1, shared_attn_period=1)   # outer + m + s
+        vb = rep(n_layers=2, shared_attn_period=2)   # outer + 2m + s
+        vc = rep(n_layers=2, shared_attn_period=1)   # outer + 2m + 2s
+        a, b, c = (_metric_vec(lower_cell(arch, shape_name, multi_pod,
+                                          config_variant=v,
+                                          rule_extra=rule_extra))
+                   for v in (va, vb, vc))
+        m = _lin((1, b), (-1, a))
+        s = _lin((1, c), (-1, b))
+        outer = _lin((1, a), (-1, m), (-1, s))
+        g = cfg.n_layers // cfg.shared_attn_period
+        p = cfg.shared_attn_period
+        return _lin((1, outer), (g * p, m), (g, s))
+    if cfg.encoder_decoder:
+        va = rep(n_layers=1, n_encoder_layers=1)
+        vb = rep(n_layers=1, n_encoder_layers=2)
+        vc = rep(n_layers=2, n_encoder_layers=1)
+        a, b, c = (_metric_vec(lower_cell(arch, shape_name, multi_pod,
+                                          config_variant=v,
+                                          rule_extra=rule_extra))
+                   for v in (va, vb, vc))
+        enc = _lin((1, b), (-1, a))
+        dec = _lin((1, c), (-1, a))
+        outer = _lin((1, a), (-1, enc), (-1, dec))
+        return _lin((1, outer), (cfg.n_encoder_layers, enc),
+                    (cfg.n_layers, dec))
+    if getattr(cfg, "moe_every", 1) == 2:
+        # alternating dense/MoE pairs: vary the PAIR count (2 and 4 layers)
+        va, vb = rep(n_layers=2), rep(n_layers=4)
+        a, b = (_metric_vec(lower_cell(arch, shape_name, multi_pod,
+                                       config_variant=v,
+                                       rule_extra=rule_extra))
+                for v in (va, vb))
+        pair = _lin((1, b), (-1, a))
+        outer = _lin((1, a), (-1, pair))
+        return _lin((1, outer), (cfg.n_layers // 2, pair))
+    va, vb = rep(n_layers=1), rep(n_layers=2)
+    a, b = (_metric_vec(lower_cell(arch, shape_name, multi_pod,
+                                   config_variant=v, rule_extra=rule_extra))
+            for v in (va, vb))
+    body = _lin((1, b), (-1, a))
+    outer = _lin((1, a), (-1, body))
+    return _lin((1, outer), (cfg.n_layers, body))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-aux", action="store_true",
+                    help="skip the unrolled roofline-exact aux compiles")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.all:
+        jobs = [(a, s, mp) for a in ARCH_IDS for s in SHAPES
+                for mp in ((False, True) if args.both_meshes
+                           else (args.multi_pod,))]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        jobs = [(args.arch, args.shape, m)
+                for m in ((False, True) if args.both_meshes
+                          else (args.multi_pod,))]
+
+    failures = 0
+    for arch, shape, mp in jobs:
+        mesh_tag = "2x16x16" if mp else "16x16"
+        path = os.path.join(args.out, f"{arch}__{shape}__{mesh_tag}.json")
+        if os.path.exists(path) and not args.force:
+            print(f"[dryrun] cached  {arch} x {shape} x {mesh_tag}")
+            continue
+        print(f"[dryrun] compile {arch} x {shape} x {mesh_tag} ...",
+              flush=True)
+        try:
+            rec = lower_cell(arch, shape, mp)
+            # roofline-exact costs: single-pod only (the roofline table is
+            # single-pod per EXPERIMENTS.md; multi-pod proves compilation)
+            if rec["status"] == "ok" and not mp and not args.no_aux:
+                cfg = config_for_cell(arch, shape)
+                rec["cost_true"] = roofline_costs(arch, shape, cfg, mp)
+        except Exception as e:  # a failure here is a bug in the system
+            failures += 1
+            rec = {"status": "failed", "arch": arch, "shape": shape,
+                   "mesh": mesh_tag, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(f"[dryrun] FAILED  {arch} x {shape} x {mesh_tag}: {e}")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec["status"] == "ok":
+            mem_gb = rec["memory"]["peak_per_device_bytes"] / 2**30
+            print(f"[dryrun] ok      {arch} x {shape} x {mesh_tag}: "
+                  f"{rec['cost']['flops_per_device']:.3e} flops/dev, "
+                  f"{mem_gb:.2f} GiB/dev, {rec['compile_seconds']}s")
+    print(f"[dryrun] done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,38 @@
+"""Elastic scaling: reshard a training state between mesh sizes.
+
+When a pod shrinks (lost slice) or grows, the controller rebuilds the mesh
+and calls `reshard`: every leaf is re-placed under the NEW mesh's
+NamedSharding resolved from the same logical axes — jax moves the shards
+(device_put handles arbitrary resharding, including across different axis
+factorizations). The divisibility fallback in the rule resolver means a
+param that can no longer shard evenly on the smaller mesh degrades to
+replication instead of failing, so scale-down always succeeds.
+
+Checkpoint-based elasticity (restore a 512-chip checkpoint onto 256 chips)
+follows the same path: checkpoints are stored unsharded per-leaf (see
+training/checkpoint.py), so restore + reshard = elastic restart.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import axis_rules, tree_shardings
+
+
+def reshard(tree, axes_tree, new_mesh, overrides=None):
+    """Re-place every leaf of `tree` under `new_mesh` using logical axes."""
+    sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    with axis_rules(new_mesh, overrides):
+        shardings = tree_shardings(axes_tree, sds)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def elastic_restore(ckpt_dir: str, like, axes_tree, new_mesh, overrides=None):
+    """Restore the latest checkpoint and shard it for the (new) mesh."""
+    from repro.training import checkpoint as ckpt_lib
+    tree, step, meta = ckpt_lib.restore_latest(ckpt_dir, like)
+    if tree is None:
+        return None, None
+    return reshard(tree, axes_tree, new_mesh, overrides), step

@@ -1,0 +1,114 @@
+"""Roofline analysis over the dry-run records.
+
+Per (arch x shape) single-pod cell:
+    compute    = HLO_FLOPs_per_chip / 197e12            [s]
+    memory     = HLO_bytes_per_chip / 819e9             [s]
+    collective = sum_k ring_factor_k * bytes_k / 50e9   [s]
+with ring factors: all-reduce 2x (reduce + broadcast ring), all-gather /
+reduce-scatter / all-to-all / collective-permute 1x of the recorded result
+bytes. MODEL_FLOPS = 6 N D (train) or 2 N D (inference), N = active params.
+
+Emits the EXPERIMENTS.md §Roofline table + per-cell bottleneck statements.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12       # TPU v5e bf16 / chip
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s/link ICI
+RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def analyse(rec: dict) -> dict:
+    ct = rec.get("cost_true")
+    flops = ct["flops"] if ct else rec["cost"]["flops_per_device"]
+    bytes_ = ct["bytes"] if ct else rec["cost"]["bytes_accessed_per_device"]
+    coll_bytes = 0.0
+    coll_detail = {}
+    for kind, fac in RING_FACTOR.items():
+        b = (ct[f"coll.{kind}.bytes"] if ct
+             else rec["collectives"][kind]["bytes"])
+        coll_detail[kind] = b
+        coll_bytes += fac * b
+    compute_t = flops / PEAK_FLOPS
+    memory_t = bytes_ / HBM_BW
+    coll_t = coll_bytes / LINK_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    bottleneck = max(terms, key=terms.get)
+    step_t = max(terms.values())
+
+    n_chips = rec["n_chips"]
+    n_active = rec["n_active_params"]
+    if rec["kind"] == "train":
+        tokens = {"train_4k": 256 * 4096}.get(rec["shape"], 0)
+        model_flops = 6.0 * n_active * tokens
+    elif rec["kind"] == "prefill":
+        tokens = 32 * 32768
+        model_flops = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence in the batch
+        tokens = {"decode_32k": 128, "long_500k": 1}.get(rec["shape"], 0)
+        model_flops = 2.0 * n_active * tokens
+    model_flops_per_chip = model_flops / n_chips
+    useful = model_flops_per_chip / max(flops, 1.0)
+    mfu = (model_flops_per_chip / step_t) / PEAK_FLOPS if step_t > 0 else 0.0
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "bottleneck": bottleneck,
+        "model_flops_per_chip": model_flops_per_chip,
+        "hlo_flops_per_chip": flops,
+        "useful_flops_ratio": useful,
+        "roofline_mfu": mfu,
+        "mem_gib_per_device": rec["memory"]["peak_per_device_bytes"] / 2**30,
+        "collective_bytes": coll_detail,
+        "fallbacks": rec.get("sharding_fallbacks", []),
+    }
+
+
+def load_records(directory: str, mesh: str = "16x16") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, f"*__{mesh}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def table(directory: str, mesh: str = "16x16") -> str:
+    rows = [analyse(r) for r in load_records(directory, mesh)]
+    hdr = ("| arch | shape | compute s | memory s | collective s | bottleneck "
+           "| MODEL/HLO flops | roofline MFU | HBM GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| **{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_mfu']*100:.1f}% | {r['mem_gib_per_device']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    if args.json:
+        rows = [analyse(r) for r in load_records(args.dir, args.mesh)]
+        print(json.dumps(rows, indent=1))
+    else:
+        print(table(args.dir, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Input ShapeDtypeStructs + logical axes for every (arch x shape) cell.
+
+The four assigned shape cells:
+    train_4k     seq 4,096  global_batch 256   -> train_step
+    prefill_32k  seq 32,768 global_batch 32    -> prefill_step
+    decode_32k   seq 32,768 global_batch 128   -> serve_step (1 new token,
+                                                 KV cache of seq_len)
+    long_500k    seq 524,288 global_batch 1    -> serve_step, sub-quadratic
+                                                 archs only (DESIGN.md)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, supports_long_context
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str      # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def config_for_cell(arch: str, shape: str) -> ModelConfig | None:
+    """None => the cell is skipped (pure full-attention arch at 500k)."""
+    if shape == "long_500k":
+        if not supports_long_context(arch):
+            return None
+        return get_config(arch, "long")
+    return get_config(arch, "full")
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, *, with_labels: bool):
+    """(sds_tree, axes_tree) for the model inputs of a train/prefill step."""
+    b, s = cell.batch, cell.seq
+    dt = jnp.dtype(cfg.dtype)
+    sds = {"tokens": _i32((b, s))}
+    axes = {"tokens": ("batch", None)}
+    if with_labels:
+        sds["labels"] = _i32((b, s))
+        axes["labels"] = ("batch", None)
+    if cfg.vision_tokens:
+        sds["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), dt)
+        axes["vision_embeds"] = ("batch", None, "embed")
+    if cfg.encoder_decoder:
+        sds["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), dt)
+        axes["frames"] = ("batch", "frames", "embed")
+    return sds, axes
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell):
+    """(sds_tree, axes_tree) for the decode cache at this cell's length."""
+    sds = jax.eval_shape(lambda: T.init_cache(cfg, cell.batch, cell.seq))
+    axes = T.cache_axes(cfg)
+    return sds, axes
+
+
+def rule_overrides(cfg: ModelConfig, mesh) -> dict:
+    """Per-arch sharding-rule adjustments.
+
+    * saved activations are sequence-sharded over "model" (Megatron-SP
+      style) so scan+remat residuals fit HBM on the big dense models;
+    * when kv_heads doesn't divide the model axis (GQA kv=8 on 16-wide TP),
+      decode caches shard their sequence dim over "model" instead.
+    """
+    ov: dict = {"act_seq": "model"}
+    model_size = mesh.shape.get("model", 1)
+    if cfg.n_kv_heads % model_size != 0:
+        ov["kv_seq"] = "model"
+    return ov

@@ -1,0 +1,194 @@
+"""Attention: GQA/MHA/MQA with RoPE, flash-style chunked softmax for
+train/prefill, ring-buffer sliding-window KV caches, and cache decode.
+
+Memory discipline: train/prefill never materializes (S, T) score matrices —
+a lax.scan over KV chunks carries the online-softmax state (m, l, acc), so
+activation memory is O(S * kv_chunk) per head group. Sliding-window archs
+(mixtral) keep only window-sized ring caches, which is what makes their
+long_500k decode cell feasible.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import norm, rope
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Per-layer decode cache (stacked over layers by the caller)."""
+    k: jax.Array  # (B, W, KV, hd)
+    v: jax.Array  # (B, W, KV, hd)
+
+
+def qkv_proj(cfg: ModelConfig, lp: dict, x: jax.Array, positions, pre: str = ""):
+    """x (B,S,D) -> q (B,S,H,hd), k,v (B,S,KV,hd), roped."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dq->bsq", x, lp[pre + "wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,dq->bsq", x, lp[pre + "wk"]).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,dq->bsq", x, lp[pre + "wv"]).reshape(b, s, kv, hd)
+    if cfg.use_rope and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool,
+                      window: int = 0, kv_chunk: int = 512) -> jax.Array:
+    """Flash-style attention. q (B,S,H,hd); k,v (B,T,KV,hd);
+    q_pos (B,S) / k_pos (B,T) int32, padded k positions = -1.
+
+    GQA layout note: the query head dim is kept INTACT (never reshaped to
+    (kv, group)) so the TP sharding on H survives; KV heads are repeated to
+    H per chunk instead — an (B, C, H, hd) chunk-sized copy, H-sharded,
+    versus an unshardable (H -> kv x g) reshape that would replicate the
+    (B, S, H, C) score tensor on every chip (a 64 GiB/step mistake on
+    mistral-large; see EXPERIMENTS.md §Perf).
+    """
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qf = shard(q.astype(jnp.float32) * scale, "batch", None, "heads", None)
+
+    pad = (-t) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = k.shape[1] // kv_chunk
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, kv_chunk, kvh, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, kv_chunk, kvh, hd), 1, 0)
+    pc = jnp.moveaxis(k_pos.reshape(b, n_chunks, kv_chunk), 1, 0)
+
+    def _rep(x):  # (B, C, KV, hd) -> (B, C, H, hd), H-sharded
+        if g > 1:
+            x = jnp.repeat(x, g, axis=2)
+        return shard(x, "batch", None, "heads", None)
+
+    @jax.checkpoint  # backward recomputes sc/p per chunk: the stacked
+    # (chunks, B, S, H, C) f32 probability saves otherwise dominate
+    # big-dense train memory (6+ GiB/chip on mistral-large; §Perf)
+    def body(carry, chunk):
+        m, l, acc = carry
+        kcj, vcj, kpj = chunk
+        kr = _rep(kcj.astype(jnp.float32))
+        vr = _rep(vcj.astype(jnp.float32))
+        sc = jnp.einsum("bshd,bchd->bshc", qf, kr)
+        sc = shard(sc, "batch", None, "heads", None)
+        valid = kpj[:, None, :] >= 0                      # (B, 1, C)
+        if causal:
+            valid &= kpj[:, None, :] <= q_pos[:, :, None]
+        if window:
+            valid &= (q_pos[:, :, None] - kpj[:, None, :]) < window
+        sc = jnp.where(valid[:, :, None, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bshc,bchd->bshd", p, vr)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, h), jnp.float32)
+    acc0 = jnp.zeros((b, s, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, cache_k, cache_v, cache_pos, cur_pos, *,
+                     window: int = 0) -> jax.Array:
+    """One-token attention over a (ring) cache.
+    q (B,1,H,hd); cache_k/v (B,W,KV,hd); cache_pos (W,) int32 (-1 = empty)."""
+    b, _, h, hd = q.shape
+    w, kvh = cache_k.shape[1], cache_k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32) * scale
+    sc = jnp.einsum("bkgh,bwkh->bkgw", qg, cache_k.astype(jnp.float32))
+    valid = (cache_pos >= 0) & (cache_pos <= cur_pos)
+    if window:
+        valid &= (cur_pos - cache_pos) < window
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgw,bwkh->bkgh", p, cache_v.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def cache_window(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def write_cache(cache: KVCache, k, v, cur_pos) -> KVCache:
+    """Write one decoded token's k/v at slot cur_pos % W (ring buffer)."""
+    w = cache.k.shape[1]
+    slot = cur_pos % w
+    return KVCache(
+        k=jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1),
+        v=jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1),
+    )
+
+
+def attention_block(cfg: ModelConfig, lp: dict, x, positions, *,
+                    causal: bool = True, window: int = 0,
+                    cache: KVCache | None = None, cache_pos=None,
+                    cur_pos=None, pre: str = ""):
+    """Pre-norm attention sub-block. Returns (residual_delta, new_cache).
+
+    Train/prefill: cache is None -> chunked flash attention over the batch.
+    Decode: cache given, x is (B, 1, D) -> ring-buffer decode.
+    """
+    h = norm(cfg, x, lp[pre + "ln"])
+    q, k, v = qkv_proj(cfg, lp, h, positions, pre=pre)
+    if cache is None:
+        out = chunked_attention(q, k, v, positions, positions,
+                                causal=causal, window=window)
+        # caller slices into its cache window; constrain like the cache so
+        # prefill's collected (L,B,S,KV,hd) stacks shard (kv_seq rule)
+        new_cache = KVCache(shard(k, "batch", "kv_seq", "kv_heads", None),
+                            shard(v, "batch", "kv_seq", "kv_heads", None))
+    else:
+        out = decode_attention(q, cache.k, cache.v, cache_pos, cur_pos,
+                               window=window)
+        new_cache = write_cache(cache, k, v, cur_pos)
+    out = shard(out, "batch", "seq", "heads", None)
+    b, s = out.shape[0], out.shape[1]
+    y = jnp.einsum("bsq,qd->bsd", out.reshape(b, s, -1), lp[pre + "wo"])
+    return y, new_cache
+
+
+def cross_attention_block(cfg: ModelConfig, lp: dict, x, enc_k, enc_v,
+                          enc_pos):
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    h = norm(cfg, x, lp["xln"])
+    b, s, _ = x.shape
+    hh, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dq->bsq", h, lp["xwq"]).reshape(b, s, hh, hd)
+    out = chunked_attention(q, enc_k, enc_v,
+                            jnp.zeros((b, s), jnp.int32), enc_pos,
+                            causal=False)
+    y = jnp.einsum("bsq,qd->bsd", out.reshape(b, s, -1), lp["xwo"])
+    return y
+
+
+def encode_kv(cfg: ModelConfig, lp: dict, enc_out: jax.Array):
+    """Project encoder output to cross-attention K/V once (cached)."""
+    b, t, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    k = jnp.einsum("bsd,dq->bsq", enc_out, lp["xwk"]).reshape(b, t, kv, hd)
+    v = jnp.einsum("bsd,dq->bsq", enc_out, lp["xwv"]).reshape(b, t, kv, hd)
+    return k, v

@@ -1,0 +1,77 @@
+"""Shared layers: norms, RoPE, activations, MLPs, embedding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def layernorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def norm(cfg: ModelConfig, x: jax.Array, scale: jax.Array) -> jax.Array:
+    return rmsnorm(x, scale) if cfg.norm == "rmsnorm" else layernorm(x, scale)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embeddings. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(cfg: ModelConfig, gate: jax.Array, up: jax.Array | None) -> jax.Array:
+    if cfg.act == "swiglu":
+        return jax.nn.silu(gate) * up
+    if cfg.act == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    return jax.nn.gelu(gate, approximate=True)
+
+
+def mlp(cfg: ModelConfig, lp: dict, x: jax.Array) -> jax.Array:
+    """Dense FFN with pre-norm. x: (B, S, D)."""
+    h = norm(cfg, x, lp["mlp_ln"])
+    if cfg.act in ("swiglu", "geglu"):
+        gate = jnp.einsum("bsd,df->bsf", h, lp["wi_gate"])
+        up = jnp.einsum("bsd,df->bsf", h, lp["wi_up"])
+        a = activation(cfg, gate, up)
+    else:
+        a = activation(cfg, jnp.einsum("bsd,df->bsf", h, lp["wi"]), None)
+    a = shard(a, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", a, lp["mlp_wo"])
+
+
+def embed_tokens(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = params["embed"]["tokens"][tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def lm_logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = norm(cfg, x, params["final_norm"])
+    head = (params["embed"]["tokens"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, "batch", "seq", "vocab")

@@ -1,0 +1,210 @@
+"""LSH attention: the paper's CP-SRP (Definition 12) applied to long context.
+
+Each head vector in R^{hd} is viewed as a 2-mode tensor (hd = m1 x m2) and
+hashed with K CP-Rademacher projection tensors of rank R (Definition 6):
+code bit k = sign(<P_k, reshape(x)>), bucket id = packed K bits. Queries and
+keys that share a bucket are likely to have high cosine similarity (Theorem
+8), so attention is restricted to bucket-mates:
+
+  * prefill: sort tokens by (bucket, position) per head, attend within
+    consecutive chunks + one look-back chunk (Reformer-style), causal on
+    the ORIGINAL positions; unsort. O(S * chunk) instead of O(S^2).
+  * decode: O(S) integer code-match against the cache + top-C candidate
+    selection (forced recency window), then exact attention over C keys.
+
+This is the bridge between the paper and the LM substrate: the projection
+runs through the exact math of core/projections (batched CP Gram einsums),
+with factors sign()-ed to Rademacher per Definition 6.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import norm
+from repro.models.attention import qkv_proj, NEG_INF
+
+
+class LSHKVCache(NamedTuple):
+    k: jax.Array      # (B, W, KV, hd)
+    v: jax.Array      # (B, W, KV, hd)
+    codes: jax.Array  # (B, W, KV) int32 bucket ids of cached keys
+
+
+def srp_bucket_codes(x: jax.Array, f1: jax.Array, f2: jax.Array) -> jax.Array:
+    """x (..., hd) -> int32 bucket ids via CP-SRP (Defs 6, 12).
+
+    f1 (K, m1, R), f2 (K, m2, R): Gaussian params sign()-ed to Rademacher.
+    value_k = (1/sqrt(R)) sum_{i,j} x[i,j] sum_r f1[k,i,r] f2[k,j,r].
+    """
+    k, m1, r = f1.shape
+    m2 = f2.shape[1]
+    a1 = jnp.sign(f1.astype(jnp.float32))
+    a2 = jnp.sign(f2.astype(jnp.float32))
+    x2 = x.astype(jnp.float32).reshape(x.shape[:-1] + (m1, m2))
+    t = jnp.einsum("...ij,kjr->...kir", x2, a2)
+    vals = jnp.einsum("...kir,kir->...k", t, a1) / math.sqrt(r)
+    bits = (vals > 0).astype(jnp.int32)
+    weights = (1 << jnp.arange(k, dtype=jnp.int32))
+    return jnp.sum(bits * weights, axis=-1)
+
+
+def _sort_by(perm: jax.Array, x: jax.Array) -> jax.Array:
+    """take_along_axis over the S axis; x (B,H,S,...), perm (B,H,S)."""
+    idx = perm.reshape(perm.shape + (1,) * (x.ndim - perm.ndim))
+    return jnp.take_along_axis(x, idx, axis=2)
+
+
+def lsh_attention_prefill(cfg: ModelConfig, proj: dict, q, k, v, positions):
+    """q (B,S,H,hd), k/v (B,S,KV,hd) -> out (B,S,H,hd). O(S * lsh_chunk)."""
+    b, s_orig, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    c = min(cfg.lsh_chunk, s_orig)
+    scale = 1.0 / math.sqrt(hd)
+
+    # pad S to a multiple of the chunk; padded tokens get positions beyond
+    # the sequence (causally invisible to real queries) and max bucket codes
+    # (sort to the end); padded query rows are sliced off after unsorting.
+    pad = (-s_orig) % c
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+        positions = jnp.pad(positions, ((0, 0), (0, pad)),
+                            constant_values=jnp.iinfo(jnp.int32).max // 2)
+    s = s_orig + pad
+
+    # bucket codes; keys hashed per kv head then repeated over the group
+    qc = srp_bucket_codes(q, proj["f1"], proj["f2"])              # (B,S,H)
+    kc = jnp.repeat(srp_bucket_codes(k, proj["f1"], proj["f2"]),
+                    g, axis=2)                                     # (B,S,H)
+    if pad:
+        pad_mask = jnp.arange(s) >= s_orig
+        qc = jnp.where(pad_mask[None, :, None], 1 << 30, qc)
+        kc = jnp.where(pad_mask[None, :, None], 1 << 30, kc)
+
+    # head-major layout
+    qh = jnp.moveaxis(q, 2, 1)                                     # (B,H,S,hd)
+    kh = jnp.moveaxis(jnp.repeat(k, g, axis=2), 2, 1)
+    vh = jnp.moveaxis(jnp.repeat(v, g, axis=2), 2, 1)
+    qch = jnp.moveaxis(qc, 2, 1)                                   # (B,H,S)
+    kch = jnp.moveaxis(kc, 2, 1)
+    pos_b = jnp.broadcast_to(positions[:, None, :], (b, h, s))
+
+    # stable sort by (bucket, position) — lexsort avoids int32 overflow
+    qperm = jnp.lexsort((pos_b, qch), axis=-1)
+    kperm = jnp.lexsort((pos_b, kch), axis=-1)
+    qs = _sort_by(qperm, qh).astype(jnp.float32) * scale
+    ks = _sort_by(kperm, kh).astype(jnp.float32)
+    vs = _sort_by(kperm, vh).astype(jnp.float32)
+    qpos = jnp.take_along_axis(pos_b, qperm, axis=-1)
+    kpos = jnp.take_along_axis(pos_b, kperm, axis=-1)
+
+    nc = s // c
+    qs = qs.reshape(b, h, nc, c, hd)
+    ks = ks.reshape(b, h, nc, c, hd)
+    vs = vs.reshape(b, h, nc, c, hd)
+    qpos_c = qpos.reshape(b, h, nc, c)
+    kpos_c = kpos.reshape(b, h, nc, c)
+
+    # each q chunk sees its own + the previous k chunk (wrap masked causally)
+    k2 = jnp.concatenate([jnp.roll(ks, 1, axis=2), ks], axis=3)    # (B,H,nc,2c,hd)
+    v2 = jnp.concatenate([jnp.roll(vs, 1, axis=2), vs], axis=3)
+    kp2 = jnp.concatenate([jnp.roll(kpos_c, 1, axis=2), kpos_c], axis=3)
+
+    sc = jnp.einsum("bhnqd,bhnkd->bhnqk", qs, k2)
+    causal = kp2[:, :, :, None, :] <= qpos_c[..., None]
+    sc = jnp.where(causal, sc, NEG_INF)
+    # a token always sees at least itself (same bucket, same chunk)
+    p = jax.nn.softmax(sc, axis=-1)
+    out_s = jnp.einsum("bhnqk,bhnkd->bhnqd", p, v2).reshape(b, h, s, hd)
+
+    # unsort, drop padding rows
+    inv = jnp.argsort(qperm, axis=-1)
+    out = _sort_by(inv, out_s)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)[:, :s_orig]     # (B,S,H,hd)
+
+
+def lsh_attention_decode(cfg: ModelConfig, proj: dict, q, cache: LSHKVCache,
+                         cache_pos, cur_pos):
+    """q (B,1,H,hd) over a full-length hashed cache. O(S) match + O(C) attn."""
+    b, _, h, hd = q.shape
+    w, kvh = cache.k.shape[1], cache.k.shape[2]
+    g = h // kvh
+    cand = min(cfg.lsh_candidates, w)
+    scale = 1.0 / math.sqrt(hd)
+
+    qc = srp_bucket_codes(q, proj["f1"], proj["f2"])[:, 0]         # (B,H)
+    kc = jnp.repeat(cache.codes, g, axis=2)                        # (B,W,H)
+
+    valid = (cache_pos >= 0) & (cache_pos <= cur_pos)              # (W,)
+    match = (kc == qc[:, None, :]) & valid[None, :, None]
+    recent = ((cur_pos - cache_pos) < cfg.lsh_recent) & valid      # (W,)
+
+    # selection score: recency dominates, then bucket match, newer first
+    sel = (recent[None, :, None].astype(jnp.float32) * 4e9
+           + match.astype(jnp.float32) * 2e9
+           + cache_pos[None, :, None].astype(jnp.float32))
+    sel = jnp.where(valid[None, :, None], sel, -1.0)
+    sel_h = jnp.moveaxis(sel, 1, 2)                                # (B,H,W)
+    _, idx = jax.lax.top_k(sel_h, cand)                            # (B,H,C)
+
+    # Gather the C candidates straight from the cache without materializing
+    # the group-repeated (B, W, H, hd) copy (2x 13 GiB/chip at 500k). The
+    # gather must index ONLY the W axis: q heads are contiguous per kv head,
+    # so idx regroups to (B, KV, g*C) and take_along_axis runs along W with
+    # the sharded KV dim as a batch dim — a flat (slot*KV+head) index would
+    # gather ACROSS the sharded dim and all-gather the whole cache (§Perf).
+    idx_kv = idx.reshape(b, kvh, g * cand)                         # (B,KV,g*C)
+    k_t = jnp.swapaxes(cache.k, 1, 2)                              # (B,KV,W,hd)
+    v_t = jnp.swapaxes(cache.v, 1, 2)
+    kg = jnp.take_along_axis(k_t, idx_kv[..., None], axis=2)
+    vg = jnp.take_along_axis(v_t, idx_kv[..., None], axis=2)
+    kg = kg.reshape(b, h, cand, hd)
+    vg = vg.reshape(b, h, cand, hd)
+    attendable = jnp.take_along_axis(
+        jnp.moveaxis(match | recent[None, :, None], 1, 2), idx, axis=2)
+
+    qf = q[:, 0].astype(jnp.float32) * scale                       # (B,H,hd)
+    sc = jnp.einsum("bhd,bhcd->bhc", qf, kg.astype(jnp.float32))
+    sc = jnp.where(attendable, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhc,bhcd->bhd", p, vg.astype(jnp.float32))
+    return out[:, None].astype(q.dtype)                            # (B,1,H,hd)
+
+
+def lsh_attention_block(cfg: ModelConfig, lp: dict, proj: dict, x, positions,
+                        *, cache: LSHKVCache | None = None, cache_pos=None,
+                        cur_pos=None):
+    """Drop-in attention sub-block using CP-SRP bucketing. Returns
+    (residual_delta, new_cache)."""
+    h = norm(cfg, x, lp["ln"])
+    q, k, v = qkv_proj(cfg, lp, h, positions)
+    if cache is None:
+        out = lsh_attention_prefill(cfg, proj, q, k, v, positions)
+        codes = srp_bucket_codes(k, proj["f1"], proj["f2"])
+        new_cache = LSHKVCache(
+            k=shard(k, "batch", "kv_seq", "kv_heads", None),
+            v=shard(v, "batch", "kv_seq", "kv_heads", None),
+            codes=shard(codes, "batch", "kv_seq", "kv_heads"))
+    else:
+        out = lsh_attention_decode(cfg, proj, q, cache, cache_pos, cur_pos)
+        codes = srp_bucket_codes(k, proj["f1"], proj["f2"])
+        slot = cur_pos  # full-length cache, no ring
+        new_cache = LSHKVCache(
+            k=jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1),
+            v=jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1),
+            codes=jax.lax.dynamic_update_slice_in_dim(cache.codes, codes,
+                                                      slot, axis=1),
+        )
+    b, s = out.shape[0], out.shape[1]
+    y = jnp.einsum("bsq,qd->bsd", out.reshape(b, s, -1), lp["wo"])
+    return y, new_cache

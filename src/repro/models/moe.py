@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN: capacity-bounded slot dispatch.
+
+Design (production pattern, XLA-SPMD friendly):
+  * router top-k, softmax over the selected logits (mixtral-style);
+  * every (token, choice) assignment gets a rank within its expert via a
+    one-hot cumsum; assignments past the expert capacity C are dropped;
+  * tokens are scattered into an (E, C, D) dispatch buffer — a real
+    scatter, NOT a one-hot einsum, so HLO FLOPs stay honest for roofline;
+  * expert FFNs run as batched matmuls (E, C, D) x (E, D, F);
+  * results gather back by slot and combine weighted by the gates.
+
+Sharding: the dispatch buffer and expert weights carry the "expert" logical
+axis (-> "model" mesh axis). For archs where E divides the model axis
+(llama4: 128 % 16 == 0) this is expert parallelism; where it does not
+(mixtral: 8 experts on 16 chips) the divisibility fallback replicates E and
+shards the FFN hidden dim instead — tensor-parallel experts. Both modes come
+out of the same code path + rules.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import activation, norm
+
+
+def moe_block(cfg: ModelConfig, lp: dict, x: jax.Array):
+    """x (B,S,D) -> (out (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    h = norm(cfg, x, lp["mlp_ln"])
+    ht = h.reshape(b * s, d)
+    t = b * s
+
+    logits = jnp.einsum("td,de->te", ht, lp["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_logits, top_idx = jax.lax.top_k(logits, k)          # (T, k)
+    gates = jax.nn.softmax(top_logits, axis=-1).astype(x.dtype)
+
+    # load-balance aux loss (Switch/Mixtral): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)                            # (E,)
+    ce = jnp.mean(
+        (jax.nn.one_hot(top_idx, e, dtype=jnp.float32).sum(axis=1)), axis=0)
+    aux_loss = e * jnp.sum(me * ce)
+
+    capacity = int(math.ceil(t * k / e * cfg.capacity_factor))
+    capacity = max(capacity, 4)
+
+    flat_e = top_idx.reshape(t * k)                         # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)     # (T*k, E)
+    ranks = (jnp.cumsum(onehot, axis=0) * onehot).sum(axis=-1) - 1
+    keep = ranks < capacity
+    # dropped assignments get out-of-bounds slots -> scatter mode="drop"
+    # (no +1 overflow row: E*C+1 would be unshardable)
+    slot = jnp.where(keep, flat_e * capacity + ranks,
+                     jnp.iinfo(jnp.int32).max)
+
+    # dispatch scatter. Sharding note: the (T*k, D) source and (E*C, D)
+    # buffer are sharded on the FEATURE dim, never the row dim — SPMD
+    # partitioning of a row-indexed scatter whose row dim is sharded
+    # materializes u32 per-element index tensors + all-gathers them
+    # (a 48 GiB/chip catastrophe on mixtral; EXPERIMENTS.md §Dry-run).
+    # Feature-sharded, every chip scatters full rows of its D-slice locally.
+    tok_of = jnp.repeat(jnp.arange(t), k)
+    # feature-shard ht BEFORE the row gather: a gather whose operand rows
+    # are batch-sharded replicates a (T*k, D) f32 copy on every chip
+    ht_d = shard(ht, None, "moe_d")
+    src = shard(ht_d[tok_of], None, "moe_d")
+    buf = jnp.zeros((e * capacity, d), x.dtype)
+    buf = shard(buf.at[slot].set(src, mode="drop", unique_indices=False),
+                None, "moe_d")
+    # "expert" -> EP over the model axis when E divides it (llama4);
+    # otherwise (mixtral, 8e on 16-way TP) E is replicated, the capacity dim
+    # shards over DP and the FFN hidden dim over TP — both from one rule set.
+    # keep the feature dim sharded through the reshape: resharding D -> C
+    # here costs a full all-gather of the (E, C, D) buffer on the multi-pod
+    # mesh (a 60 GiB/chip copy); contraction over the sharded D is a psum.
+    xe = buf.reshape(e, capacity, d)
+    xe = shard(xe, "expert", "capacity", "moe_d")
+
+    # expert FFN (batched matmuls; MXU-friendly)
+    g = jnp.einsum("ecd,edf->ecf", xe, lp["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, lp["we_up"])
+    a = activation(cfg, g, u)
+    a = shard(a, "expert", "capacity", "mlp")
+    ye = jnp.einsum("ecf,efd->ecd", a, lp["we_down"])
+    ye = shard(ye, "expert", "capacity", "moe_d")
+
+    # combine: gather by slot, weight by gate, sum over the k choices
+    # (feature-sharded for the same scatter-transpose reason as dispatch)
+    yflat = shard(ye.reshape(e * capacity, d), None, "moe_d")
+    safe_slot = jnp.minimum(slot, e * capacity - 1)
+    per_choice = yflat[safe_slot] * (gates.reshape(t * k, 1)
+                                     * keep[:, None].astype(ye.dtype))
+    per_choice = shard(per_choice, None, "moe_d")
+    out = per_choice.reshape(t, k, d).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        sg = jnp.einsum("td,df->tf", ht, lp["ws_gate"])
+        su = jnp.einsum("td,df->tf", ht, lp["ws_up"])
+        out = out + jnp.einsum("tf,fd->td", activation(cfg, sg, su),
+                               lp["ws_down"])
+    return out.reshape(b, s, d), aux_loss
+
+
+def moe_block_dense_reference(cfg: ModelConfig, lp: dict, x: jax.Array):
+    """O(E x tokens) reference: every expert on every token, masked combine.
+    Used only in tests to validate the dispatch path (no capacity drops)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    h = norm(cfg, x, lp["mlp_ln"])
+    ht = h.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", ht, lp["router"]).astype(jnp.float32)
+    top_logits, top_idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(top_logits, axis=-1)
+    g = jnp.einsum("td,edf->etf", ht, lp["we_gate"])
+    u = jnp.einsum("td,edf->etf", ht, lp["we_up"])
+    ye = jnp.einsum("etf,efd->etd", activation(cfg, g, u), lp["we_down"])
+    weights = jnp.zeros((b * s, e), jnp.float32)
+    weights = jax.vmap(lambda w, i, gv: w.at[i].add(gv))(weights, top_idx, gates)
+    out = jnp.einsum("te,etd->td", weights.astype(ye.dtype), ye)
+    if cfg.n_shared_experts:
+        sg = jnp.einsum("td,df->tf", ht, lp["ws_gate"])
+        su = jnp.einsum("td,df->tf", ht, lp["ws_up"])
+        out = out + jnp.einsum("tf,fd->td", activation(cfg, sg, su),
+                               lp["ws_down"])
+    return out.reshape(b, s, d)

@@ -1,0 +1,220 @@
+"""Parameter specs: the single source of truth for shapes, logical sharding
+axes and init of every architecture's parameters.
+
+`param_specs(cfg)` returns a nested dict of ParamSpec; `init_params` /
+`abstract_params` / `param_axes` are derived views, so shapes, shardings and
+initialization can never drift apart. Per-layer weights carry a leading
+`n_layers` dim ("layers", never sharded) and are consumed by lax.scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"      # normal | zeros | ones | ssm_a | ssm_dt
+    scale: float = 0.02
+
+
+def _attn_specs(cfg: ModelConfig, layers: int | None, cross: bool = False) -> dict:
+    """Attention weights; leading layers dim if `layers` given."""
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    L = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    pre = "x" if cross else ""
+    return {
+        f"{pre}ln": ParamSpec(L + (d,), lax_ + ("embed",), init="ones"),
+        f"{pre}wq": ParamSpec(L + (d, h * hd), lax_ + ("fsdp_embed", "heads")),
+        f"{pre}wk": ParamSpec(L + (d, kv * hd), lax_ + ("fsdp_embed", "kv_heads")),
+        f"{pre}wv": ParamSpec(L + (d, kv * hd), lax_ + ("fsdp_embed", "kv_heads")),
+        f"{pre}wo": ParamSpec(L + (h * hd, d), lax_ + ("heads", "fsdp_embed"),
+                              scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig, layers: int | None, d_ff: int = 0) -> dict:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    L = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    out = {"mlp_ln": ParamSpec(L + (d,), lax_ + ("embed",), init="ones")}
+    if cfg.act in ("swiglu", "geglu"):
+        out["wi_gate"] = ParamSpec(L + (d, f), lax_ + ("fsdp_embed", "mlp"))
+        out["wi_up"] = ParamSpec(L + (d, f), lax_ + ("fsdp_embed", "mlp"))
+    else:
+        out["wi"] = ParamSpec(L + (d, f), lax_ + ("fsdp_embed", "mlp"))
+    out["mlp_wo"] = ParamSpec(L + (f, d), lax_ + ("mlp", "fsdp_embed"),
+                              scale=0.02 / math.sqrt(2 * cfg.n_layers))
+    return out
+
+
+def _moe_specs(cfg: ModelConfig, layers: int) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    L, lax_ = (layers,), ("layers",)
+    del layers
+    out = {
+        "mlp_ln": ParamSpec(L + (d,), lax_ + ("embed",), init="ones"),
+        "router": ParamSpec(L + (d, e), lax_ + ("embed", None)),
+        "we_gate": ParamSpec(L + (e, d, f), lax_ + ("expert", "fsdp_embed", "mlp")),
+        "we_up": ParamSpec(L + (e, d, f), lax_ + ("expert", "fsdp_embed", "mlp")),
+        "we_down": ParamSpec(L + (e, f, d), lax_ + ("expert", "mlp", "fsdp_embed"),
+                             scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        out["ws_gate"] = ParamSpec(L + (d, fs), lax_ + ("fsdp_embed", "mlp"))
+        out["ws_up"] = ParamSpec(L + (d, fs), lax_ + ("fsdp_embed", "mlp"))
+        out["ws_down"] = ParamSpec(L + (fs, d), lax_ + ("mlp", "fsdp_embed"),
+                                   scale=0.02 / math.sqrt(2 * cfg.n_layers))
+    return out
+
+
+def _ssm_specs(cfg: ModelConfig, layers: int) -> dict:
+    d, din, h = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    gs = cfg.ssm_groups * cfg.ssm_state
+    L, lax_ = (layers,), ("layers",)
+    return {
+        "ssm_ln": ParamSpec(L + (d,), lax_ + ("embed",), init="ones"),
+        "w_xBC": ParamSpec(L + (d, din + 2 * gs), lax_ + ("fsdp_embed", "ssm_inner")),
+        "w_z": ParamSpec(L + (d, din), lax_ + ("fsdp_embed", "ssm_inner")),
+        "w_dt": ParamSpec(L + (d, h), lax_ + ("fsdp_embed", "ssm_heads")),
+        "conv_w": ParamSpec(L + (cfg.conv_width, din + 2 * gs),
+                            lax_ + ("conv", "ssm_inner"), scale=0.2),
+        "A_log": ParamSpec(L + (h,), lax_ + ("ssm_heads",), init="ssm_a"),
+        "ssm_D": ParamSpec(L + (h,), lax_ + ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec(L + (h,), lax_ + ("ssm_heads",), init="ssm_dt"),
+        "norm_z": ParamSpec(L + (din,), lax_ + ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec(L + (din, d), lax_ + ("ssm_inner", "fsdp_embed"),
+                              scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    specs: dict = {
+        "embed": {"tokens": ParamSpec((v, d), ("vocab", "fsdp_embed"))},
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, v), ("fsdp_embed", "vocab"))
+
+    L = cfg.n_layers
+    if cfg.block == "attn_dense":
+        specs["blocks"] = {**_attn_specs(cfg, L), **_mlp_specs(cfg, L)}
+    elif cfg.block == "attn_moe":
+        lm = L // cfg.moe_every
+        specs["blocks"] = {**_attn_specs(cfg, lm), **_moe_specs(cfg, lm)}
+        if cfg.moe_every == 2:
+            specs["dense_blocks"] = {
+                **_attn_specs(cfg, lm),
+                **_mlp_specs(cfg, lm, d_ff=cfg.d_ff_dense)}
+    elif cfg.block == "ssm":
+        specs["blocks"] = _ssm_specs(cfg, L)
+    elif cfg.block == "hybrid":
+        specs["blocks"] = _ssm_specs(cfg, L)
+        specs["shared"] = {**_attn_specs(cfg, None), **_mlp_specs(cfg, None)}
+    else:
+        raise ValueError(cfg.block)
+
+    if cfg.lsh_attention:
+        # CP-SRP projection tensors over the (hd1, hd2)-matricized head dim
+        # (paper Definition 6/12): two stacked factor matrices, K = num_hashes.
+        m1, m2 = _factor_head_dim(cfg.hd)
+        specs["lsh_proj"] = {
+            "f1": ParamSpec((cfg.lsh_num_hashes, m1, cfg.lsh_rank),
+                            ("lsh_hash", None, "lsh_rank"), scale=1.0),
+            "f2": ParamSpec((cfg.lsh_num_hashes, m2, cfg.lsh_rank),
+                            ("lsh_hash", None, "lsh_rank"), scale=1.0),
+        }
+
+    if cfg.encoder_decoder:
+        specs["encoder"] = {
+            "pos": ParamSpec((cfg.encoder_seq, d), ("frames", "embed"), scale=0.02),
+            "blocks": {**_attn_specs(cfg, cfg.n_encoder_layers),
+                       **_mlp_specs(cfg, cfg.n_encoder_layers)},
+            "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        }
+        # decoder blocks gain cross-attention
+        specs["blocks"].update(_attn_specs(cfg, L, cross=True))
+        specs["dec_pos"] = ParamSpec((8192, d), (None, "embed"), scale=0.02)
+    return specs
+
+
+def _factor_head_dim(hd: int) -> tuple[int, int]:
+    """Split head_dim into two near-square mode dims for the CP projection."""
+    m1 = int(math.sqrt(hd))
+    while hd % m1:
+        m1 -= 1
+    return m1, hd // m1
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a":
+        # A in [1, 16), stored as log: standard mamba2 init
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "ssm_dt":
+        # dt bias s.t. softplus(bias) in [1e-3, 1e-1]
+        u = jax.random.uniform(key, spec.shape, jnp.float32,
+                               math.log(1e-3), math.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    return (spec.scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(cfg.dtype)
+    arrs = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct tree (no allocation) for AOT lowering."""
+    specs = param_specs(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+                        is_leaf=_is_spec)
+
+
+def param_axes(cfg: ModelConfig):
+    """Tree of logical-axis tuples matching the params tree."""
+    return jax.tree.map(lambda s: s.axes, param_specs(cfg), is_leaf=_is_spec)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: routed top_k + shared experts only)."""
+    if not cfg.n_experts:
+        return count_params(cfg)
+    total = count_params(cfg)
+    specs = param_specs(cfg)["blocks"]
+    expert_leaves = [v for k, v in specs.items() if k.startswith("we_")]
+    expert_total = sum(int(np.prod(s.shape)) for s in expert_leaves)
+    active_frac = cfg.top_k / cfg.n_experts
+    return int(total - expert_total * (1.0 - active_frac))

@@ -1,0 +1,217 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) blocks.
+
+Train/prefill uses the chunked SSD algorithm: quadratic attention-like
+intra-chunk term + a linear inter-chunk state recurrence (lax.scan over
+chunks). Decode is the O(1) recurrent update on a (H, P, N) state. A
+property test checks the chunked path equals the naive recurrence.
+
+Layout: d_inner = expand * d_model, H = d_inner / head_dim heads, state dim
+N per head, G groups for B/C (G=1 here). The conv is a causal depthwise
+width-4 conv over the concatenated [x, B, C] streams, as in Mamba2.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import norm, rmsnorm
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array  # (B, H, P, N) f32
+    conv: jax.Array   # (B, W-1, CH) — last conv_width-1 pre-activation inputs
+
+
+def _head_or_chunk_axes(n_heads: int) -> tuple[str | None, str | None]:
+    """(chunk_dim_name, head_dim_name) for sharding the SSD intra-chunk
+    tensors: prefer sharding heads over the model axis; when the head count
+    doesn't divide it, shard the chunk-index dim instead."""
+    from repro.distributed import sharding as sh
+    ctx = sh.current()
+    if ctx is None:
+        return None, None
+    axes = ctx.rules.get("ssm_heads")
+    if axes and n_heads % ctx.axis_size(axes) == 0:
+        return None, "ssm_heads"
+    return "chunks", None
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    din = cfg.d_inner
+    gs = cfg.ssm_groups * cfg.ssm_state
+    x = xbc[..., :din]
+    bmat = xbc[..., din:din + gs]
+    cmat = xbc[..., din + gs:]
+    sh = xbc.shape[:-1]
+    x = x.reshape(sh + (cfg.ssm_heads, cfg.ssm_head_dim))
+    bmat = bmat.reshape(sh + (cfg.ssm_groups, cfg.ssm_state))
+    cmat = cmat.reshape(sh + (cfg.ssm_groups, cfg.ssm_state))
+    return x, bmat, cmat
+
+
+def _rep_groups(cfg: ModelConfig, m: jax.Array) -> jax.Array:
+    """(..., G, N) -> (..., H, N) by repeating each group over its heads."""
+    rep = cfg.ssm_heads // cfg.ssm_groups
+    return jnp.repeat(m, rep, axis=-2)
+
+
+def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B,S,CH), w (W,CH) -> (B,S,CH)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # width is 4: cheap static unroll
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H) [post-softplus], a (H,) [negative],
+    bmat/cmat (B,S,H,N) [already group-repeated]. Returns (y (B,S,H,P),
+    final_state (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+
+    pad = (-s) % chunk
+    if pad:  # zero dt => exp(0)=1 decay, zero input: padding is exact
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, h, n)
+    cc = cmat.reshape(b, nc, chunk, h, n)
+    # shard the big intra-chunk tensors: heads over "model" where divisible
+    # (zamba2 H=112), else the chunk-index dim (mamba2-130m H=24 -> nc)
+    hax = _head_or_chunk_axes(h)
+    xc = shard(xc, "batch", hax[0], None, hax[1], None)
+    dtc = shard(dtc, "batch", hax[0], None, hax[1])
+    bc = shard(bc, "batch", hax[0], None, hax[1], None)
+    cc = shard(cc, "batch", hax[0], None, hax[1], None)
+
+    da = dtc * a  # (b, nc, q, h), negative
+    cs = jnp.cumsum(da, axis=2)  # inclusive cumulative decay within chunk
+
+    # ---- intra-chunk (masked attention-like term) ----
+    # M[i, j] = (C_i . B_j) * exp(cs_i - cs_j) * dt_j   for i >= j
+    scores = jnp.einsum("bcihn,bcjhn->bchij", cc, bc)
+    scores = shard(scores, "batch", hax[0], hax[1], None, None)
+    li = cs.transpose(0, 1, 3, 2)  # (b, nc, h, q)
+    ldiff = li[..., :, None] - li[..., None, :]  # cs_i - cs_j
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask, jnp.exp(ldiff), 0.0)
+    decay = shard(decay, "batch", hax[0], hax[1], None, None)
+    m = scores * decay * dtc.transpose(0, 1, 3, 2)[..., None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", m, xc)
+
+    # ---- chunk states ----
+    # S_c = sum_j exp(cs_last - cs_j) dt_j B_j (x) x_j  -> (b, nc, h, p, n)
+    w = jnp.exp(cs[:, :, -1:, :] - cs) * dtc  # (b, nc, q, h)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w, bc, xc)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # (b, nc, h)
+
+    def scan_fn(carry, inp):
+        st_c, dec = inp  # (b,h,p,n), (b,h)
+        new = carry * dec[:, :, None, None] + st_c
+        return new, carry  # emit the state *entering* the chunk
+
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b, nc, h, p, n)
+
+    # ---- inter-chunk contribution ----
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp",
+                         cc * jnp.exp(cs)[..., None], prev_states)
+
+    y = (y_intra + y_inter).reshape(b, nc * chunk, h, p)[:, :s]
+    return y.astype(dtype), final_state
+
+
+def ssd_decode_step(state, x, dt, a, bmat, cmat):
+    """O(1) recurrent update. state (B,H,P,N); x (B,H,P); dt (B,H);
+    bmat/cmat (B,H,N). Returns (y (B,H,P), new_state)."""
+    da = jnp.exp(dt * a)  # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, bmat, x)
+    new_state = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", cmat, new_state)
+    return y, new_state
+
+
+def ssm_block(cfg: ModelConfig, lp: dict, x: jax.Array, *,
+              cache: SSMCache | None = None):
+    """Mamba2 block. Train/prefill: cache None, x (B,S,D).
+    Decode: cache given, x (B,1,D). Returns (y, new_cache)."""
+    b, s, d = x.shape
+    h = norm(cfg, x, lp["ssm_ln"])
+    xbc = jnp.einsum("bsd,dc->bsc", h, lp["w_xBC"])
+    xbc = shard(xbc, "batch", "seq", "ssm_inner")
+    z = jnp.einsum("bsd,dc->bsc", h, lp["w_z"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", h, lp["w_dt"])
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))  # (H,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+
+    new_cache = None
+    if cache is None:
+        conv_out = causal_conv(xbc, lp["conv_w"])
+        xbc_act = jax.nn.silu(conv_out)
+        xs, bm, cm = _split_xbc(cfg, xbc_act)
+        bm = _rep_groups(cfg, bm)
+        cm = _rep_groups(cfg, cm)
+        y, final_state = ssd_chunked(xs, dt, a, bm, cm, cfg.ssm_chunk)
+        wminus1 = cfg.conv_width - 1
+        tail = xbc[:, -wminus1:, :] if s >= wminus1 else jnp.pad(
+            xbc, ((0, 0), (wminus1 - s, 0), (0, 0)))
+        new_cache = SSMCache(state=final_state, conv=tail)
+        y = y + lp["ssm_D"].astype(jnp.float32)[None, None, :, None] * \
+            xs.astype(jnp.float32)
+    else:
+        window = jnp.concatenate([cache.conv, xbc], axis=1)  # (B, W, CH)
+        conv_out = jnp.einsum("bwc,wc->bc", window, lp["conv_w"])[:, None, :]
+        xbc_act = jax.nn.silu(conv_out)
+        xs, bm, cm = _split_xbc(cfg, xbc_act)
+        bm = _rep_groups(cfg, bm)[:, 0]
+        cm = _rep_groups(cfg, cm)[:, 0]
+        x1 = xs[:, 0]
+        y1, new_state = ssd_decode_step(
+            cache.state, x1.astype(jnp.float32), dt[:, 0], a,
+            bm.astype(jnp.float32), cm.astype(jnp.float32))
+        y1 = y1 + lp["ssm_D"].astype(jnp.float32)[None, :, None] * \
+            x1.astype(jnp.float32)
+        y = y1[:, None]
+        new_cache = SSMCache(state=new_state, conv=window[:, 1:])
+        xs = x1[:, None]
+
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), lp["norm_z"])
+    out = jnp.einsum("bsc,cd->bsd", y, lp["out_proj"])
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMCache:
+    return SSMCache(
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_channels),
+                       jnp.dtype(cfg.dtype)),
+    )

@@ -1,0 +1,533 @@
+"""Model assembly: decoder-only LM, hybrid Mamba2+shared-attention, and the
+Whisper-style encoder-decoder — one scan-over-layers engine for all 10 archs.
+
+Entry points (all pure functions of (cfg, params, ...)):
+  forward(cfg, params, batch)                  -> logits          (train/prefill)
+  loss_fn(cfg, params, batch)                  -> (loss, metrics) (train)
+  init_cache(cfg, batch, max_len)              -> cache pytree    (decode)
+  prefill(cfg, params, batch, max_len)         -> (logits, cache)
+  decode_step(cfg, params, token, cache, pos)  -> (logits, cache) (serving)
+
+Layer heterogeneity is handled structurally: homogeneous archs scan stacked
+params; the hybrid arch scans groups of `shared_attn_period` Mamba2 layers
+followed by one weight-shared attention+MLP block (zamba2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import params as params_lib
+from repro.models.attention import (KVCache, attention_block, cache_window,
+                                    cross_attention_block, encode_kv)
+from repro.models.layers import embed_tokens, lm_logits, mlp, norm
+from repro.models.lsh_attention import (LSHKVCache, lsh_attention_block)
+from repro.models.moe import moe_block
+from repro.models.ssm import SSMCache, init_ssm_cache, ssm_block
+
+
+# ---------------------------------------------------------------------------
+# Single decoder layer (all block kinds)
+# ---------------------------------------------------------------------------
+
+
+def decoder_layer(cfg: ModelConfig, lp: dict, x, positions, *,
+                  layer_cache=None, cache_pos=None, cur_pos=None,
+                  enc_kv=None, enc_pos=None, lsh_proj=None):
+    """Returns (x, new_layer_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.block in ("ssm", "hybrid"):
+        delta, new_cache = ssm_block(cfg, lp, x, cache=layer_cache)
+        return shard(x + delta, "batch", "act_seq", "embed"), new_cache, aux
+
+    if cfg.lsh_attention:
+        delta, new_cache = lsh_attention_block(
+            cfg, lp, lsh_proj, x, positions, cache=layer_cache,
+            cache_pos=cache_pos, cur_pos=cur_pos)
+    else:
+        delta, new_cache = attention_block(
+            cfg, lp, x, positions, causal=True, window=cfg.sliding_window,
+            cache=layer_cache, cache_pos=cache_pos, cur_pos=cur_pos)
+    x = x + delta
+    x = shard(x, "batch", "act_seq", "embed")
+
+    if cfg.encoder_decoder:
+        assert enc_kv is not None
+        x = x + cross_attention_block(cfg, lp, x, enc_kv[0], enc_kv[1], enc_pos)
+
+    if cfg.block == "attn_moe":
+        delta, aux = moe_block(cfg, lp, x)
+    else:
+        delta = mlp(cfg, lp, x)
+    x = x + delta
+    return shard(x, "batch", "act_seq", "embed"), new_cache, aux
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "nothing": save only inputs (full remat)
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+
+def _scan_blocks(cfg: ModelConfig, blocks, x, positions, *, caches=None,
+                 cache_pos=None, cur_pos=None, enc_kv=None, enc_pos=None,
+                 lsh_proj=None, collect_kv=False):
+    """Homogeneous layer scan. caches/new caches are stacked over layers.
+    Returns (x, new_caches | collected kv, aux_sum)."""
+
+    def body(carry, per_layer):
+        h, aux_sum = carry
+        lp, lc, lenc = per_layer
+        h, new_cache, aux = decoder_layer(
+            cfg, lp, h, positions, layer_cache=lc, cache_pos=cache_pos,
+            cur_pos=cur_pos, enc_kv=lenc, enc_pos=enc_pos, lsh_proj=lsh_proj)
+        out = new_cache if (collect_kv or lc is not None) else None
+        return (h, aux_sum + aux), out
+
+    body = _remat(cfg, body)
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (blocks, caches, enc_kv),
+        unroll=True if cfg.scan_unroll else 1)
+    return x, new_caches, aux
+
+
+@functools.lru_cache(maxsize=None)
+def _dense_view(cfg: ModelConfig) -> ModelConfig:
+    """cfg for the interleaved dense layers of a moe_every=2 arch."""
+    return dataclasses.replace(cfg, block="attn_dense", d_ff=cfg.d_ff_dense)
+
+
+def _alt_blocks(cfg: ModelConfig, params, x, positions, *, caches=None,
+                cache_pos=None, cur_pos=None, collect_kv=False):
+    """llama4-style alternation: scan over (dense layer, MoE layer) pairs.
+    Caches come in/out as a single (L, ...) stack; internally (L/2, 2, ...)."""
+    dense_cfg = _dense_view(cfg)
+    lm = cfg.n_layers // 2
+    pair_caches = None
+    if caches is not None:
+        pair_caches = jax.tree.map(
+            lambda a: a.reshape((lm, 2) + a.shape[1:]), caches)
+
+    def body(carry, per):
+        h, aux_sum = carry
+        lpd, lpm, lc = per
+        lcd = lcm = None
+        if lc is not None:
+            lcd = jax.tree.map(lambda a: a[0], lc)
+            lcm = jax.tree.map(lambda a: a[1], lc)
+        h, ncd, a1 = decoder_layer(dense_cfg, lpd, h, positions,
+                                   layer_cache=lcd, cache_pos=cache_pos,
+                                   cur_pos=cur_pos)
+        h, ncm, a2 = decoder_layer(cfg, lpm, h, positions,
+                                   layer_cache=lcm, cache_pos=cache_pos,
+                                   cur_pos=cur_pos)
+        out = None
+        if collect_kv or lc is not None:
+            out = jax.tree.map(lambda a, b: jnp.stack([a, b]), ncd, ncm)
+        return (h, aux_sum + a1 + a2), out
+
+    body = _remat(cfg, body)
+    (x, aux), new_pairs = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["dense_blocks"], params["blocks"], pair_caches),
+        unroll=True if cfg.scan_unroll else 1)
+    new_caches = None
+    if new_pairs is not None:
+        new_caches = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_pairs)
+    return x, new_caches, aux
+
+
+def _hybrid_blocks(cfg: ModelConfig, params, x, positions, *, caches=None,
+                   cache_pos=None, cur_pos=None, collect_kv=False):
+    """zamba2: groups of `period` Mamba2 layers + one shared attn/MLP block.
+
+    Mamba params stacked (L, ...) -> (G, P, ...); the shared block's cache is
+    stacked (G, ...) since each application attends over its own K/V.
+    """
+    period = cfg.shared_attn_period
+    groups = cfg.n_layers // period
+    blocks = jax.tree.map(
+        lambda a: a.reshape((groups, period) + a.shape[1:]), params["blocks"])
+    shared = params["shared"]
+    m_caches, s_caches = (caches if caches is not None else (None, None))
+
+    def group_body(carry, per_group):
+        h, aux_sum = carry
+        gblocks, gmcache, gscache = per_group
+
+        def inner(c, per_layer):
+            hh, aux_in = c
+            lp, lc = per_layer
+            hh, nc, aux = decoder_layer(cfg, lp, hh, positions,
+                                        layer_cache=lc, cur_pos=cur_pos)
+            return (hh, aux_in + aux), nc
+
+        (h, aux_sum), new_m = jax.lax.scan(
+            _remat(cfg, inner), (h, aux_sum), (gblocks, gmcache),
+            unroll=True if cfg.scan_unroll else 1)
+        # weight-shared attention + MLP block
+        delta, new_s = attention_block(
+            cfg, shared, h, positions, causal=True,
+            window=cfg.sliding_window, cache=gscache,
+            cache_pos=cache_pos, cur_pos=cur_pos)
+        h = h + delta
+        h = h + mlp(cfg, shared, h)
+        out_s = new_s if (collect_kv or gscache is not None) else None
+        return (h, aux_sum), (new_m, out_s)
+
+    (x, aux), (new_m, new_s) = jax.lax.scan(
+        _remat(cfg, group_body), (x, jnp.zeros((), jnp.float32)),
+        (blocks, m_caches, s_caches),
+        unroll=True if cfg.scan_unroll else 1)
+    return x, (new_m, new_s), aux
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def run_encoder(cfg: ModelConfig, params, frames):
+    """frames (B, T, D) precomputed embeddings (stubbed conv frontend)."""
+    enc = params["encoder"]
+    b, t, _ = frames.shape
+    x = frames + enc["pos"][None, :t]
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(carry, lp):
+        h, _ = carry
+        delta, _ = attention_block(cfg, lp, h, pos, causal=False)
+        h = h + delta
+        h = h + mlp(cfg, lp, h)
+        return (h, jnp.zeros((), jnp.float32)), None
+
+    (x, _), _ = jax.lax.scan(_remat(cfg, body),
+                             (x, jnp.zeros((), jnp.float32)), enc["blocks"],
+                             unroll=True if cfg.scan_unroll else 1)
+    return norm(cfg, x, enc["final_norm"]), pos
+
+
+def _dec_enc_kv(cfg: ModelConfig, params, enc_out):
+    """Per-decoder-layer cross K/V, stacked (L, B, T, KV, hd)."""
+    def per_layer(lp):
+        return encode_kv(cfg, lp, enc_out)
+    return jax.vmap(per_layer, in_axes=0)(  # vmap over stacked layer params
+        params["blocks"])
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def _prepare_inputs(cfg: ModelConfig, params, batch):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.vision_tokens:
+        p = cfg.vision_tokens
+        vis = batch["vision_embeds"].astype(x.dtype)  # (B, P, D)
+        mask = (jnp.arange(s) < p)[None, :, None]
+        vis_full = jnp.pad(vis, ((0, 0), (0, s - p), (0, 0)))
+        x = jnp.where(mask, vis_full, x)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.encoder_decoder:
+        n_pos = params["dec_pos"].shape[0]
+        x = x + params["dec_pos"][jnp.arange(s) % n_pos][None]
+    return x, positions
+
+
+def forward(cfg: ModelConfig, params, batch, *, collect_kv=False):
+    """Full-sequence pass. Returns (logits, kv_stacks | None, aux)."""
+    x, positions = _prepare_inputs(cfg, params, batch)
+    enc_kv = enc_pos = None
+    if cfg.encoder_decoder:
+        enc_out, enc_pos = run_encoder(cfg, params, batch["frames"])
+        enc_kv = _dec_enc_kv(cfg, params, enc_out)
+    if cfg.block == "hybrid":
+        x, kv, aux = _hybrid_blocks(cfg, params, x, positions,
+                                    collect_kv=collect_kv)
+    elif cfg.block == "attn_moe" and cfg.moe_every == 2:
+        x, kv, aux = _alt_blocks(cfg, params, x, positions,
+                                 collect_kv=collect_kv)
+    else:
+        x, kv, aux = _scan_blocks(cfg, params["blocks"], x, positions,
+                                  enc_kv=enc_kv, enc_pos=enc_pos,
+                                  lsh_proj=params.get("lsh_proj"),
+                                  collect_kv=collect_kv)
+    logits = lm_logits(cfg, params, x)
+    return logits, kv, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Next-token CE (labels < 0 are masked) + MoE aux loss."""
+    logits, _, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    ce = (logz - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = ce.sum() / denom
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "aux": aux, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+
+class DecodeCache(NamedTuple):
+    pos: jax.Array            # (W,) int32 positions of cache slots, -1 empty
+    layers: Any               # stacked per-layer caches (see init_cache)
+    shared: Any = None        # hybrid: (G, ...) KVCache for the shared block
+    enc_kv: Any = None        # enc-dec: (L, B, T, KV, hd) cross K/V
+    enc_pos: Any = None       # (B, T) encoder positions
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> DecodeCache:
+    dt = jnp.dtype(cfg.dtype)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    w = cache_window(cfg, max_len)
+    l = cfg.n_layers
+    pos = jnp.full((w,), -1, jnp.int32)
+
+    def kv_stack(lead, width):
+        return KVCache(
+            k=jnp.zeros(lead + (batch, width, kv, hd), dt),
+            v=jnp.zeros(lead + (batch, width, kv, hd), dt))
+
+    shared = None
+    if cfg.block in ("ssm", "hybrid"):
+        per = init_ssm_cache(cfg, batch)
+        layers = jax.tree.map(
+            lambda a: jnp.zeros((l,) + a.shape, a.dtype), per)
+        if cfg.block == "hybrid":
+            g = cfg.n_layers // cfg.shared_attn_period
+            layers = jax.tree.map(
+                lambda a: a.reshape((g, cfg.shared_attn_period) + a.shape[1:]),
+                layers)
+            shared = kv_stack((g,), w)
+    elif cfg.lsh_attention:
+        layers = LSHKVCache(
+            k=jnp.zeros((l, batch, w, kv, hd), dt),
+            v=jnp.zeros((l, batch, w, kv, hd), dt),
+            codes=jnp.zeros((l, batch, w, kv), jnp.int32))
+    else:
+        layers = kv_stack((l,), w)
+
+    enc_kv = enc_pos = None
+    if cfg.encoder_decoder:
+        t = cfg.encoder_seq
+        enc_kv = (jnp.zeros((l, batch, t, kv, hd), dt),
+                  jnp.zeros((l, batch, t, kv, hd), dt))
+        enc_pos = jnp.zeros((batch, t), jnp.int32)
+    return DecodeCache(pos=pos, layers=layers, shared=shared,
+                       enc_kv=enc_kv, enc_pos=enc_pos)
+
+
+def cache_axes(cfg: ModelConfig) -> DecodeCache:
+    """Logical sharding axes matching init_cache's structure."""
+    kvc = KVCache(k=(None, "batch", "kv_seq", "kv_heads", None),
+                  v=(None, "batch", "kv_seq", "kv_heads", None))
+    shared = None
+    if cfg.block in ("ssm", "hybrid"):
+        layers = SSMCache(
+            state=(None, "batch", "ssm_heads", None, None),
+            conv=(None, "batch", None, "ssm_inner"))
+        if cfg.block == "hybrid":
+            layers = SSMCache(state=(None,) + layers.state,
+                              conv=(None,) + layers.conv)
+            shared = kvc
+    elif cfg.lsh_attention:
+        layers = LSHKVCache(k=kvc.k, v=kvc.v,
+                            codes=(None, "batch", "kv_seq", "kv_heads"))
+    else:
+        layers = kvc
+    enc_kv = enc_pos = None
+    if cfg.encoder_decoder:
+        enc_kv = ((None, "batch", "frames", "kv_heads", None),) * 2
+        enc_pos = ("batch", "frames")
+    return DecodeCache(pos=(None,), layers=layers, shared=shared,
+                       enc_kv=enc_kv, enc_pos=enc_pos)
+
+
+# ---------------------------------------------------------------------------
+# Prefill & decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    """Run the full prompt, return (last-position logits, filled cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    logits, kv, _ = forward(cfg, params, batch, collect_kv=True)
+    cache = init_cache(cfg, b, max_len)
+    w = cache.pos.shape[0]
+
+    def ring_place(stack, width):
+        """Last `width` positions of (L,B,S,...) -> ring-aligned (L,B,W,...).
+
+        slot = pos %% w over the trailing positions is a pure rotation, so
+        this is pad+roll — static ops only. A fancy-index scatter here would
+        hit the sharded-indexed-dim SPMD pathology on seq-sharded caches
+        (u32 index blow-up; EXPERIMENTS.md §Perf iteration 12).
+        """
+        take = min(s, width)
+        vals = stack[:, :, -take:]
+        if take < width:
+            pad_widths = [(0, 0)] * vals.ndim
+            pad_widths[2] = (0, width - take)
+            vals = jnp.pad(vals, pad_widths)
+        return jnp.roll(vals, (s - take) % width, axis=2)
+
+    def fill_kv(c: KVCache, new: KVCache) -> KVCache:
+        return KVCache(k=ring_place(new.k, w), v=ring_place(new.v, w))
+
+    layers = cache.layers
+    shared = cache.shared
+    if cfg.block in ("ssm", "hybrid"):
+        m_kv, s_kv = (kv if cfg.block == "hybrid" else (kv, None))
+        layers = m_kv  # SSMCache stacks: final states from prefill
+        if cfg.block == "hybrid":
+            shared = fill_kv(cache.shared, s_kv)
+    elif cfg.lsh_attention:
+        layers = LSHKVCache(k=ring_place(kv.k, w), v=ring_place(kv.v, w),
+                            codes=ring_place(kv.codes, w))
+    else:
+        layers = fill_kv(cache.layers, kv)
+
+    take = min(s, w)
+    pos_arr = cache.pos.at[jnp.arange(s - take, s) % w].set(
+        jnp.arange(s - take, s, dtype=jnp.int32))
+    enc_kv = enc_pos = None
+    if cfg.encoder_decoder:
+        enc_out, enc_pos = run_encoder(cfg, params, batch["frames"])
+        enc_kv = _dec_enc_kv(cfg, params, enc_out)
+    cache = DecodeCache(pos=pos_arr, layers=layers, shared=shared,
+                        enc_kv=enc_kv, enc_pos=enc_pos)
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache: DecodeCache,
+                cur_pos):
+    """One decode step. token (B, 1) int32; cur_pos scalar int32.
+    Returns (logits (B, V), new cache)."""
+    b = token.shape[0]
+    x = embed_tokens(cfg, params, token)
+    if cfg.encoder_decoder:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], cur_pos % params["dec_pos"].shape[0], 1)[None]
+    positions = jnp.full((b, 1), cur_pos, jnp.int32)
+    lsh_proj = params.get("lsh_proj")
+
+    if cfg.block == "hybrid":
+        period = cfg.shared_attn_period
+        groups = cfg.n_layers // period
+        blocks = jax.tree.map(
+            lambda a: a.reshape((groups, period) + a.shape[1:]),
+            params["blocks"])
+        shared = params["shared"]
+
+        def group_body(h, per_group):
+            gblocks, gmcache, gscache = per_group
+
+            def inner(hh, per_layer):
+                lp, lc = per_layer
+                hh, nc, _ = decoder_layer(cfg, lp, hh, positions,
+                                          layer_cache=lc, cur_pos=cur_pos)
+                return hh, nc
+
+            h, new_m = jax.lax.scan(inner, h, (gblocks, gmcache),
+                                    unroll=True if cfg.scan_unroll else 1)
+            delta, new_s = attention_block(
+                cfg, shared, h, positions, causal=True,
+                window=cfg.sliding_window, cache=gscache,
+                cache_pos=cache.pos, cur_pos=cur_pos)
+            h = h + delta + mlp(cfg, shared, h + delta)
+            return h, (new_m, new_s)
+
+        x, new_layers = jax.lax.scan(
+            group_body, x, (blocks, cache.layers, cache.shared),
+            unroll=True if cfg.scan_unroll else 1)
+        new_cache_layers, new_shared = new_layers
+    elif cfg.block == "attn_moe" and cfg.moe_every == 2:
+        # in-place pair loop: cache updated in the carry (no ys double-buffer)
+        dense_cfg = _dense_view(cfg)
+        lm = cfg.n_layers // 2
+
+        def pair_body(i, carry):
+            h, lay = carry
+            idx = lambda t, j: jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, j, keepdims=False), t)
+            upd = lambda t, n_, j: jax.tree.map(
+                lambda s, v: jax.lax.dynamic_update_index_in_dim(s, v, j, 0),
+                t, n_)
+            h, ncd, _ = decoder_layer(dense_cfg, idx(params["dense_blocks"], i),
+                                      h, positions, layer_cache=idx(lay, 2 * i),
+                                      cache_pos=cache.pos, cur_pos=cur_pos)
+            lay = upd(lay, ncd, 2 * i)
+            h, ncm, _ = decoder_layer(cfg, idx(params["blocks"], i), h,
+                                      positions, layer_cache=idx(lay, 2 * i + 1),
+                                      cache_pos=cache.pos, cur_pos=cur_pos)
+            lay = upd(lay, ncm, 2 * i + 1)
+            return (h, lay)
+
+        x, new_cache_layers = jax.lax.fori_loop(
+            0, lm, pair_body, (x, cache.layers),
+            unroll=cfg.n_layers // 2 if cfg.scan_unroll else 1)
+        new_shared = cache.shared
+    else:
+        # in-place layer loop: the cache is updated inside the while-loop
+        # carry (dynamic_update_index), so XLA aliases one cache buffer
+        # instead of the xs+ys pair a scan would double-buffer — halves
+        # decode HBM on the KV-dominated cells (see EXPERIMENTS.md §Perf).
+        blocks = params["blocks"]
+
+        def body(i, carry):
+            h, lay = carry
+            idx = lambda t: jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False), t)
+            lp = idx(blocks)
+            lc = idx(lay)
+            lenc = idx(cache.enc_kv) if cache.enc_kv is not None else None
+            h, nc, _ = decoder_layer(
+                cfg, lp, h, positions, layer_cache=lc, cache_pos=cache.pos,
+                cur_pos=cur_pos, enc_kv=lenc, enc_pos=cache.enc_pos,
+                lsh_proj=lsh_proj)
+            lay = jax.tree.map(
+                lambda s, v: jax.lax.dynamic_update_index_in_dim(s, v, i, 0),
+                lay, nc)
+            return (h, lay)
+
+        x, new_cache_layers = jax.lax.fori_loop(
+            0, cfg.n_layers, body, (x, cache.layers),
+            unroll=cfg.n_layers if cfg.scan_unroll else 1)
+        new_shared = cache.shared
+
+    logits = lm_logits(cfg, params, x)[:, 0]
+    w = cache.pos.shape[0]
+    new_pos = cache.pos.at[cur_pos % w].set(cur_pos)
+    new_cache = DecodeCache(pos=new_pos, layers=new_cache_layers,
+                            shared=new_shared, enc_kv=cache.enc_kv,
+                            enc_pos=cache.enc_pos)
+    return logits, new_cache

@@ -1,0 +1,61 @@
+"""Serving engine: prefill / decode step factories + a batched generation
+loop. These are the functions the dry-run lowers for the inference cells
+and the functions examples/serve-style drivers call on real hardware."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    """prefill_step(params, batch) -> (last_logits (B, V), DecodeCache)."""
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, token, cur_pos) -> (logits, cache).
+    One new token against a KV cache of the cell's seq_len; the cache is
+    donated by the launcher so decode is in-place on device."""
+    def serve_step(params, cache, token, cur_pos):
+        return T.decode_step(cfg, params, token, cache, cur_pos)
+    return serve_step
+
+
+def greedy_generate(cfg: ModelConfig, params, batch, *, steps: int,
+                    max_len: int, temperature: float = 0.0, key=None):
+    """Host-driven generation loop (examples + tests)."""
+    serve = jax.jit(make_serve_step(cfg))
+
+    def mask_pad(logits):  # padded vocab ids are never sampled
+        if cfg.padded_vocab == cfg.vocab_size:
+            return logits
+        return jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                         logits, -jnp.inf)
+
+    last, cache = jax.jit(
+        make_prefill_step(cfg, max_len))(params, batch)
+    last = mask_pad(last)
+    cur = batch["tokens"].shape[1]
+    tok = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(steps - 1):
+        logits, cache = serve(params, cache, tok, jnp.asarray(cur, jnp.int32))
+        logits = mask_pad(logits)
+        if temperature > 0.0 and key is not None:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits / temperature, axis=-1)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+        cur += 1
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,123 @@
+"""Gradient compression via the paper's tensorized random projection.
+
+Each gradient matrix G in R^{d1 x d2} is sketched with K fresh
+CP-Rademacher projection tensors (Definition 6/8): s_k = <P_k, G>. On a
+real pod the DP all-reduce moves the K-vector instead of d1*d2 numbers
+(all workers derive the same P_k from the shared (seed, step), so only s
+crosses the wire), and the projection factors occupy O(K (d1+d2) R) — the
+paper's space win — versus O(K d1 d2) for a dense sketch.
+
+Decompression is *sketch-and-project*: G^ = argmin ||G^||_F s.t.
+<P_k, G^> = s_k, i.e. G^ = sum_k alpha_k P_k with (Gram M) alpha = s and
+M[k,l] = <P_k, P_l> computed by the paper's CP x CP contraction. Because
+G - G^ is an ORTHOGONAL projection of G, the error-feedback recursion
+e <- (I - Proj_step)(g + e) is non-expansive, and with projections
+re-sampled every step it contracts at rate ~(1 - K/(d1 d2)) in expectation
+— unlike the naive unbiased estimate (1/K) sum s_k P_k, whose EF loop
+diverges (documented negative result, see EXPERIMENTS.md §Perf notes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressorState(NamedTuple):
+    error: Any  # error-feedback accumulator, f32, like params
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    num_projections: int = 64   # K
+    rank: int = 2               # R
+    min_size: int = 65536       # leaves smaller than this are sent raw
+    seed: int = 1234
+    ridge: float = 1e-5
+
+
+def _matricize_shape(shape) -> tuple[int, int] | None:
+    if len(shape) < 2:
+        return None
+    d1 = shape[0]
+    d2 = math.prod(shape[1:])
+    return d1, d2
+
+
+def init_compressor(cfg: CompressionConfig, params, key=None):
+    """Returns (sketch_params, state). sketch_params is the static seed —
+    factors are re-derived per (step, leaf), never stored."""
+    del key
+    err = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return jnp.asarray(cfg.seed, jnp.uint32), CompressorState(error=err)
+
+
+def _rademacher(key, shape):
+    return (2.0 * jax.random.bernoulli(key, 0.5, shape).astype(jnp.float32)
+            ) - 1.0
+
+
+def _factors(cfg: CompressionConfig, seed, step, leaf_idx, d1, d2):
+    key = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(seed), step), leaf_idx)
+    k1, k2 = jax.random.split(key)
+    fa = _rademacher(k1, (cfg.num_projections, d1, cfg.rank))
+    fb = _rademacher(k2, (cfg.num_projections, d2, cfg.rank))
+    return fa, fb
+
+
+def _sketch(g2, fa, fb, rank):
+    # s_k = (1/sqrt(R)) sum_r a_{k,:,r}^T G b_{k,:,r}   (paper Eq. 3.11)
+    t = jnp.einsum("ij,kjr->kir", g2, fb)
+    return jnp.einsum("kir,kir->k", t, fa) / math.sqrt(rank)
+
+
+def _projection_gram(fa, fb, rank):
+    """M[k,l] = <P_k, P_l> via the paper's CP x CP contraction (Hadamard
+    of per-mode Grams, batched over the (k,l) pair grid)."""
+    ga = jnp.einsum("kir,lis->klrs", fa, fa)
+    gb = jnp.einsum("kjr,ljs->klrs", fb, fb)
+    return jnp.einsum("klrs,klrs->kl", ga, gb) / rank
+
+
+def _project(s, fa, fb, rank, ridge):
+    """Least-norm G^ with <P_k, G^> = s_k (sketch-and-project)."""
+    m = _projection_gram(fa, fb, rank)
+    k = m.shape[0]
+    alpha = jnp.linalg.solve(m + ridge * jnp.trace(m) / k * jnp.eye(k), s)
+    return jnp.einsum("k,kir,kjr->ij", alpha, fa, fb) / math.sqrt(rank)
+
+
+def roundtrip(cfg: CompressionConfig, sketch_seed, state: CompressorState,
+              grads, step=None):
+    """compress -> (where the DP all-reduce of `s` would run) -> project
+    back + error feedback. Returns (approx_grads, new_state, metrics)."""
+    if step is None:
+        step = jnp.zeros((), jnp.uint32)
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(state.error)
+    out_g, out_e, ratios = [], [], []
+    for i, (g, e) in enumerate(zip(leaves, err_leaves)):
+        ms = _matricize_shape(g.shape)
+        if ms is None or g.size < cfg.min_size:
+            out_g.append(g)
+            out_e.append(jnp.zeros_like(e))
+            continue
+        d1, d2 = ms
+        fa, fb = _factors(cfg, sketch_seed, step, i, d1, d2)
+        gf = g.astype(jnp.float32) + e
+        g2 = gf.reshape(d1, d2)
+        s = _sketch(g2, fa, fb, cfg.rank)           # <- the only comm
+        ghat = _project(s, fa, fb, cfg.rank, cfg.ridge).reshape(g.shape)
+        out_g.append(ghat.astype(g.dtype))
+        out_e.append(gf - ghat)
+        ratios.append(s.size / g.size)
+    new_err = jax.tree.unflatten(treedef, out_e)
+    mean_ratio = (sum(ratios) / len(ratios)) if ratios else 1.0
+    return (jax.tree.unflatten(treedef, out_g),
+            CompressorState(error=new_err),
+            {"comm_ratio": jnp.asarray(mean_ratio, jnp.float32)})

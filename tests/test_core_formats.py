@@ -1,0 +1,168 @@
+"""Unit + property tests: tensor formats and in-format contractions vs dense oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CPTensor, TTTensor, cp_rademacher, tt_rademacher,
+                        cp_random_data, tt_random_data, cp_to_dense,
+                        tt_to_dense, dense_to_tt, khatri_rao)
+from repro.core import contractions as C
+
+jax.config.update("jax_enable_x64", False)
+
+dims_strategy = st.lists(st.integers(2, 6), min_size=2, max_size=4)
+
+
+def _key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+class TestFormats:
+    def test_cp_to_dense_matches_outer_products(self):
+        key = _key(0)
+        x = cp_random_data(key, (3, 4, 5), rank=2)
+        dense = cp_to_dense(x)
+        # manual: sum_r a_r o b_r o c_r
+        a, b, c = x.factors
+        want = jnp.einsum("ir,jr,kr->ijk", a, b, c)
+        np.testing.assert_allclose(dense, want, rtol=1e-5)
+
+    def test_tt_to_dense_elementwise(self):
+        key = _key(1)
+        x = tt_random_data(key, (3, 4, 5), rank=3)
+        dense = tt_to_dense(x)
+        g1, g2, g3 = x.cores
+        for idx in [(0, 0, 0), (2, 3, 4), (1, 2, 3)]:
+            i, j, k = idx
+            want = (g1[:, i, :] @ g2[:, j, :] @ g3[:, k, :]).reshape(())
+            np.testing.assert_allclose(dense[idx], want * x.scale, rtol=1e-4)
+
+    def test_rademacher_entries_are_pm1(self):
+        x = cp_rademacher(_key(2), (4, 5), rank=3)
+        for f in x.factors:
+            assert set(np.unique(np.asarray(f))) <= {-1.0, 1.0}
+        t = tt_rademacher(_key(3), (4, 5, 6), rank=2)
+        for c in t.cores:
+            assert set(np.unique(np.asarray(c))) <= {-1.0, 1.0}
+
+    def test_scales_match_definitions(self):
+        # Def. 6: 1/sqrt(R); Def. 7: 1/sqrt(R^{N-1})
+        assert cp_rademacher(_key(0), (4, 4, 4), rank=9).scale == pytest.approx(1 / 3)
+        assert tt_rademacher(_key(0), (4, 4, 4), rank=4).scale == pytest.approx(1 / 4)
+
+    def test_storage_sizes(self):
+        # paper Tables 1-2: CP O(NdR), TT O(NdR^2)
+        n, d, r = 4, 6, 3
+        cp = cp_rademacher(_key(0), (d,) * n, rank=r)
+        assert cp.storage_size() == n * d * r
+        tt = tt_rademacher(_key(0), (d,) * n, rank=r)
+        assert tt.storage_size() == 2 * d * r + (n - 2) * d * r * r
+
+    def test_tt_svd_roundtrip(self):
+        key = _key(4)
+        x = jax.random.normal(key, (4, 5, 6))
+        tt = dense_to_tt(x, max_rank=30)  # full rank -> exact
+        np.testing.assert_allclose(tt_to_dense(tt), x, atol=1e-4)
+
+    def test_tt_svd_truncation_monotone(self):
+        x = jax.random.normal(_key(5), (5, 6, 7))
+        errs = []
+        for r in (1, 3, 8, 30):
+            tt = dense_to_tt(x, max_rank=r)
+            errs.append(float(jnp.linalg.norm(tt_to_dense(tt) - x)))
+        assert errs == sorted(errs, reverse=True)
+        assert errs[-1] < 1e-3
+
+    def test_khatri_rao_shape_and_values(self):
+        a = jnp.arange(6.0).reshape(3, 2)
+        b = jnp.arange(8.0).reshape(4, 2)
+        kr = khatri_rao([a, b])
+        assert kr.shape == (12, 2)
+        np.testing.assert_allclose(kr[:, 0], jnp.kron(a[:, 0], b[:, 0]))
+
+
+class TestContractionsVsDense:
+    """Every in-format inner product must equal the dense oracle."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(dims=dims_strategy, rx=st.integers(1, 4), ry=st.integers(1, 4),
+           seed=st.integers(0, 2**16))
+    def test_cp_cp(self, dims, rx, ry, seed):
+        k1, k2 = jax.random.split(_key(seed))
+        x = cp_random_data(k1, dims, rx)
+        y = cp_random_data(k2, dims, ry)
+        want = jnp.vdot(cp_to_dense(x), cp_to_dense(y))
+        np.testing.assert_allclose(C.inner_cp_cp(x, y), want, rtol=2e-4, atol=2e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(dims=dims_strategy, rx=st.integers(1, 4), ry=st.integers(1, 4),
+           seed=st.integers(0, 2**16))
+    def test_tt_tt(self, dims, rx, ry, seed):
+        k1, k2 = jax.random.split(_key(seed))
+        x = tt_random_data(k1, dims, rx)
+        y = tt_random_data(k2, dims, ry)
+        want = jnp.vdot(tt_to_dense(x), tt_to_dense(y))
+        np.testing.assert_allclose(C.inner_tt_tt(x, y), want, rtol=2e-4, atol=2e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(dims=dims_strategy, rx=st.integers(1, 4), ry=st.integers(1, 4),
+           seed=st.integers(0, 2**16))
+    def test_cp_tt(self, dims, rx, ry, seed):
+        k1, k2 = jax.random.split(_key(seed))
+        x = cp_random_data(k1, dims, rx)
+        y = tt_random_data(k2, dims, ry)
+        want = jnp.vdot(cp_to_dense(x), tt_to_dense(y))
+        np.testing.assert_allclose(C.inner_cp_tt(x, y), want, rtol=2e-4, atol=2e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(dims=dims_strategy, r=st.integers(1, 4), seed=st.integers(0, 2**16))
+    def test_dense_cp(self, dims, r, seed):
+        k1, k2 = jax.random.split(_key(seed))
+        x = jax.random.normal(k1, tuple(dims))
+        y = cp_random_data(k2, dims, r)
+        want = jnp.vdot(x, cp_to_dense(y))
+        np.testing.assert_allclose(C.inner_dense_cp(x, y), want, rtol=2e-4, atol=2e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(dims=dims_strategy, r=st.integers(1, 4), seed=st.integers(0, 2**16))
+    def test_dense_tt(self, dims, r, seed):
+        k1, k2 = jax.random.split(_key(seed))
+        x = jax.random.normal(k1, tuple(dims))
+        y = tt_random_data(k2, dims, r)
+        want = jnp.vdot(x, tt_to_dense(y))
+        np.testing.assert_allclose(C.inner_dense_tt(x, y), want, rtol=2e-4, atol=2e-5)
+
+    def test_polymorphic_inner_consistency(self):
+        dims = (3, 4, 5)
+        kd, kc, kt = jax.random.split(_key(7), 3)
+        xd = jax.random.normal(kd, dims)
+        xc = cp_random_data(kc, dims, 3)
+        xt = tt_random_data(kt, dims, 2)
+        objs = {"dense": xd, "cp": xc, "tt": xt}
+        dense = {"dense": xd, "cp": cp_to_dense(xc), "tt": tt_to_dense(xt)}
+        for na, a in objs.items():
+            for nb, b in objs.items():
+                want = jnp.vdot(dense[na], dense[nb])
+                np.testing.assert_allclose(C.inner(a, b), want, rtol=3e-4, atol=3e-5,
+                                           err_msg=f"{na} x {nb}")
+
+    def test_norm_distance_cosine(self):
+        dims = (4, 4, 4)
+        k1, k2 = jax.random.split(_key(8))
+        x = cp_random_data(k1, dims, 3)
+        y = tt_random_data(k2, dims, 2)
+        xd, yd = cp_to_dense(x), tt_to_dense(y)
+        np.testing.assert_allclose(C.norm(x), jnp.linalg.norm(xd), rtol=1e-4)
+        np.testing.assert_allclose(C.distance(x, y), jnp.linalg.norm(xd - yd), rtol=1e-3)
+        cs = jnp.vdot(xd, yd) / (jnp.linalg.norm(xd) * jnp.linalg.norm(yd))
+        np.testing.assert_allclose(C.cosine_similarity(x, y), cs, rtol=1e-3)
+
+    def test_jit_compatible(self):
+        dims = (3, 4, 5)
+        x = cp_random_data(_key(0), dims, 2)
+        y = tt_random_data(_key(1), dims, 2)
+        f = jax.jit(C.inner)
+        np.testing.assert_allclose(f(x, y), C.inner(x, y), rtol=1e-5)

@@ -1,0 +1,237 @@
+"""Tests for projections + the four LSH families: statistics vs paper theory.
+
+Validates the paper's claims directly:
+ - E[<P,X>] = 0, Var(<P,X>) = ||X||_F^2    (Theorems 3, 5)
+ - collision prob of CP/TT-E2LSH matches p(r) (Theorems 4, 6 / Eq. 4.17)
+ - collision prob of CP/TT-SRP matches 1 - theta/pi (Theorems 8, 10)
+ - format-invariance: hashing the SAME tensor given densely / in CP / in TT
+   yields identical codes under one projection family
+ - space complexities of Tables 1-2
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (make_family, naive_storage_size, pack_bits, unpack_bits,
+                        project, sample_cp_projection, sample_tt_projection,
+                        sample_dense_projection, cp_random_data, tt_random_data,
+                        cp_to_dense, tt_to_dense, dense_to_tt, theory)
+from repro.core import contractions as C
+
+DIMS = (8, 8, 8)
+
+
+def _key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+class TestProjectionPaths:
+    """All projection paths must agree with densified oracles."""
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**16), rank=st.integers(1, 4),
+           k=st.integers(1, 6))
+    def test_cp_projection_all_input_formats(self, seed, rank, k):
+        kp, kx = jax.random.split(_key(seed))
+        dims = (4, 5, 6)
+        p = sample_cp_projection(kp, k, dims, rank)
+        x_cp = cp_random_data(kx, dims, 3)
+        x_dense = cp_to_dense(x_cp)
+        x_tt = dense_to_tt(x_dense, max_rank=20)  # exact
+        want = jnp.stack([jnp.vdot(cp_to_dense(p.single(i)), x_dense)
+                          for i in range(k)])
+        for x in (x_cp, x_dense, x_tt):
+            got = project(p, x)
+            np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**16), rank=st.integers(1, 3),
+           k=st.integers(1, 6))
+    def test_tt_projection_all_input_formats(self, seed, rank, k):
+        kp, kx = jax.random.split(_key(seed))
+        dims = (4, 5, 6)
+        p = sample_tt_projection(kp, k, dims, rank)
+        x_cp = cp_random_data(kx, dims, 3)
+        x_dense = cp_to_dense(x_cp)
+        x_tt = dense_to_tt(x_dense, max_rank=20)
+        want = jnp.stack([jnp.vdot(tt_to_dense(p.single(i)), x_dense)
+                          for i in range(k)])
+        for x in (x_cp, x_dense, x_tt):
+            got = project(p, x)
+            np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-4)
+
+    def test_dense_projection_is_matmul(self):
+        kp, kx = jax.random.split(_key(0))
+        p = sample_dense_projection(kp, 7, DIMS)
+        x = jax.random.normal(kx, DIMS)
+        np.testing.assert_allclose(project(p, x), p.matrix @ x.reshape(-1),
+                                   rtol=1e-5)
+
+    def test_projection_linearity(self):
+        kp, k1, k2 = jax.random.split(_key(1), 3)
+        p = sample_cp_projection(kp, 5, DIMS, 3)
+        a = jax.random.normal(k1, DIMS)
+        b = jax.random.normal(k2, DIMS)
+        lhs = project(p, 2.5 * a - 1.5 * b)
+        rhs = 2.5 * project(p, a) - 1.5 * project(p, b)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+class TestMomentTheorems:
+    """Theorems 3 & 5: <P,X> has mean 0 and variance ||X||_F^2."""
+
+    @pytest.mark.parametrize("kind", ["cp", "tt"])
+    def test_projection_moments(self, kind):
+        n_samples = 4000
+        kx, kp = jax.random.split(_key(42))
+        x = jax.random.normal(kx, DIMS)
+        sampler = sample_cp_projection if kind == "cp" else sample_tt_projection
+        p = sampler(kp, n_samples, DIMS, rank=2)
+        vals = np.asarray(project(p, x))
+        fro2 = float(jnp.vdot(x, x))
+        # mean: se = sigma/sqrt(n)
+        se = math.sqrt(fro2 / n_samples)
+        assert abs(vals.mean()) < 4 * se
+        # variance of the variance estimate ~ 2 sigma^4 / n for normal-ish
+        var = vals.var()
+        se_var = math.sqrt(2.0 / n_samples) * fro2
+        assert abs(var - fro2) < 6 * se_var
+
+    def test_gaussian_variant_moments(self):
+        kx, kp = jax.random.split(_key(43))
+        x = jax.random.normal(kx, DIMS)
+        p = sample_cp_projection(kp, 4000, DIMS, rank=2, dist="gaussian")
+        vals = np.asarray(project(p, x))
+        fro2 = float(jnp.vdot(x, x))
+        # CP-Gaussian has heavier tails (product of normals); loose bound
+        assert abs(vals.mean()) < 5 * math.sqrt(fro2 / 4000)
+        assert 0.5 * fro2 < vals.var() < 2.0 * fro2
+
+
+class TestCollisionProbabilities:
+    """Empirical collision rates vs the paper's closed forms."""
+
+    @pytest.mark.parametrize("kind", ["cp-e2lsh", "tt-e2lsh", "e2lsh"])
+    def test_e2lsh_collision_matches_theory(self, kind):
+        w, m = 4.0, 3000
+        kx, kn, kf = jax.random.split(_key(7), 3)
+        x = jax.random.normal(kx, DIMS)
+        for r_target in (1.0, 3.0, 6.0):
+            noise = jax.random.normal(kn, DIMS)
+            y = x + noise * (r_target / jnp.linalg.norm(noise))
+            fam = make_family(kf, kind, DIMS, num_codes=m, num_tables=1,
+                              rank=2, bucket_width=w)
+            cx = np.asarray(fam.hash(x)).ravel()
+            cy = np.asarray(fam.hash(y)).ravel()
+            emp = (cx == cy).mean()
+            want = float(theory.e2lsh_collision_prob(r_target, w))
+            se = math.sqrt(want * (1 - want) / m)
+            assert abs(emp - want) < 5 * se + 0.015, (kind, r_target, emp, want)
+
+    @pytest.mark.parametrize("kind", ["cp-srp", "tt-srp", "srp"])
+    def test_srp_collision_matches_theory(self, kind):
+        m = 3000
+        kx, kn, kf = jax.random.split(_key(9), 3)
+        x = jax.random.normal(kx, DIMS)
+        for mix in (0.1, 0.5, 1.5):
+            y = x + mix * jax.random.normal(kn, DIMS)
+            cos = float(jnp.vdot(x, y) / (jnp.linalg.norm(x) * jnp.linalg.norm(y)))
+            fam = make_family(kf, kind, DIMS, num_codes=m, num_tables=1, rank=2)
+            cx = np.asarray(fam.hash(x)).ravel()
+            cy = np.asarray(fam.hash(y)).ravel()
+            emp = (cx == cy).mean()
+            want = float(theory.srp_collision_prob(cos))
+            se = math.sqrt(max(want * (1 - want), 1e-4) / m)
+            assert abs(emp - want) < 5 * se + 0.015, (kind, mix, emp, want)
+
+    def test_e2lsh_collision_monotone_in_distance(self):
+        """Definition 1: closer pairs must collide more (LSH validity)."""
+        m = 2000
+        kx, kf = jax.random.split(_key(11))
+        x = jax.random.normal(kx, DIMS)
+        fam = make_family(kf, "cp-e2lsh", DIMS, num_codes=m, rank=2,
+                          bucket_width=4.0)
+        cx = np.asarray(fam.hash(x)).ravel()
+        rates = []
+        for r in (0.5, 2.0, 8.0):
+            noise = jax.random.normal(jax.random.PRNGKey(int(r * 10)), DIMS)
+            y = x + noise * (r / jnp.linalg.norm(noise))
+            cy = np.asarray(fam.hash(y)).ravel()
+            rates.append((cx == cy).mean())
+        assert rates[0] > rates[1] > rates[2]
+
+
+class TestHashingMechanics:
+    def test_format_invariance(self):
+        """Same tensor, three formats, one family -> identical codes."""
+        kf, kx = jax.random.split(_key(3))
+        dims = (4, 5, 6)
+        x_cp = cp_random_data(kx, dims, 3)
+        x_dense = cp_to_dense(x_cp)
+        x_tt = dense_to_tt(x_dense, max_rank=20)
+        for kind in ("cp-e2lsh", "tt-e2lsh", "cp-srp", "tt-srp"):
+            fam = make_family(kf, kind, dims, num_codes=16, num_tables=2, rank=3)
+            h_dense = np.asarray(fam.hash(x_dense))
+            h_cp = np.asarray(fam.hash(x_cp))
+            h_tt = np.asarray(fam.hash(x_tt))
+            assert (h_dense == h_cp).mean() > 0.95, kind  # float-assoc tolerance
+            assert (h_dense == h_tt).mean() > 0.95, kind
+
+    def test_hash_shapes_and_dtype(self):
+        fam = make_family(_key(0), "cp-e2lsh", DIMS, num_codes=8, num_tables=3,
+                          rank=2)
+        x = jax.random.normal(_key(1), DIMS)
+        h = fam.hash(x)
+        assert h.shape == (3, 8) and h.dtype == jnp.int32
+        xs = jax.random.normal(_key(2), (5,) + DIMS)
+        hb = fam.hash_batch(xs)
+        assert hb.shape == (5, 3, 8)
+
+    @settings(max_examples=30, deadline=None)
+    @given(k=st.integers(1, 100), seed=st.integers(0, 2**16))
+    def test_bit_pack_roundtrip(self, k, seed):
+        bits = np.asarray(
+            jax.random.bernoulli(_key(seed), 0.5, (3, k))).astype(np.int32)
+        packed = pack_bits(jnp.asarray(bits))
+        assert packed.shape == (3, (k + 31) // 32)
+        np.testing.assert_array_equal(unpack_bits(packed, k), bits)
+
+    def test_srp_packed_equals_unpacked(self):
+        fam = make_family(_key(5), "cp-srp", DIMS, num_codes=40, num_tables=2,
+                          rank=2)
+        x = jax.random.normal(_key(6), DIMS)
+        np.testing.assert_array_equal(
+            unpack_bits(fam.hash_packed(x), 40), np.asarray(fam.hash(x)))
+
+    def test_e2lsh_shift_property(self):
+        """floor((v+b)/w) must shift by exactly 1 when v shifts by w."""
+        fam = make_family(_key(12), "cp-e2lsh", DIMS, num_codes=32, rank=2,
+                          bucket_width=2.0)
+        x = jax.random.normal(_key(13), DIMS)
+        v = fam.raw_projections(x)
+        c1 = np.asarray(jnp.floor((v + fam.offsets) / fam.bucket_width))
+        c2 = np.asarray(jnp.floor((v + fam.bucket_width + fam.offsets)
+                                  / fam.bucket_width))
+        np.testing.assert_array_equal(c2, c1 + 1)
+
+
+class TestSpaceComplexity:
+    """Tables 1-2: storage of each family vs the naive method."""
+
+    def test_table_1_and_2_storage(self):
+        n, d, r, k = 4, 10, 3, 16
+        dims = (d,) * n
+        cp_e2 = make_family(_key(0), "cp-e2lsh", dims, num_codes=k, rank=r)
+        tt_e2 = make_family(_key(0), "tt-e2lsh", dims, num_codes=k, rank=r)
+        naive = make_family(_key(0), "e2lsh", dims, num_codes=k)
+        assert cp_e2.storage_size() == k * n * d * r                    # O(KNdR)
+        assert tt_e2.storage_size() == k * (2 * d * r + (n - 2) * d * r * r)  # O(KNdR^2)
+        assert naive.storage_size() == k * d ** n                       # O(Kd^N)
+        assert naive_storage_size(dims, k, 1) == k * d ** n
+        # exponential vs linear separation
+        assert cp_e2.storage_size() < tt_e2.storage_size() < naive.storage_size()

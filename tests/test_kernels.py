@@ -1,0 +1,155 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp ref.py oracles,
+swept over shapes and dtypes, plus agreement with the core-library paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (cp_random_data, tt_random_data, sample_cp_projection,
+                        sample_tt_projection, project)
+from repro.kernels import (cp_inner_products, tt_inner_products, srp_pack,
+                           e2lsh_quantize)
+from repro.kernels import ref
+from repro.kernels.cp_gram import cp_gram_pallas
+from repro.kernels.tt_inner import tt_inner_pallas
+from repro.kernels.srp_pack import srp_pack_pallas
+from repro.kernels.e2lsh_quant import e2lsh_quant_pallas
+from repro.core.lsh import pack_bits, e2lsh_discretize
+
+
+def _key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+SHAPE_SWEEP = [
+    # (n_modes, d, rx, rp, k)
+    (2, 8, 1, 1, 8),
+    (2, 16, 4, 8, 8),
+    (3, 8, 2, 4, 16),
+    (3, 24, 8, 8, 8),
+    (4, 8, 4, 2, 24),
+    (4, 16, 3, 5, 8),
+    (5, 8, 2, 2, 8),
+]
+
+
+class TestCPGramKernel:
+    @pytest.mark.parametrize("n,d,rx,rp,k", SHAPE_SWEEP)
+    def test_vs_ref_shape_sweep(self, n, d, rx, rp, k):
+        kx, kp = jax.random.split(_key(n * 1000 + d))
+        xf = jax.random.normal(kx, (n, d, rx))
+        pf = jax.random.normal(kp, (n, k, d, rp))
+        got = cp_gram_pallas(xf, pf, block_k=8, interpret=True)
+        want = ref.cp_inner_ref(xf, pf)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, dtype):
+        kx, kp = jax.random.split(_key(0))
+        xf = jax.random.normal(kx, (3, 8, 4)).astype(dtype)
+        pf = jax.random.normal(kp, (3, 8, 8, 4)).astype(dtype)
+        got = cp_gram_pallas(xf.astype(jnp.float32), pf.astype(jnp.float32),
+                             block_k=8, interpret=True)
+        want = ref.cp_inner_ref(xf.astype(jnp.float32), pf.astype(jnp.float32))
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_ops_wrapper_vs_core_projection(self, seed):
+        """ops.cp_inner_products == core project() on real CP formats."""
+        kx, kp = jax.random.split(_key(seed))
+        dims = (10, 10, 10)
+        x = cp_random_data(kx, dims, 3)
+        p = sample_cp_projection(kp, 12, dims, 4)
+        got = cp_inner_products(x, p, interpret=True)
+        want = project(p, x)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+class TestTTInnerKernel:
+    @pytest.mark.parametrize("n,d,rx,rp,k", SHAPE_SWEEP)
+    def test_vs_ref_shape_sweep(self, n, d, rx, rp, k):
+        kx, kp = jax.random.split(_key(n * 999 + d))
+        xc = jax.random.normal(kx, (n, rx, d, rx))
+        pc = jax.random.normal(kp, (n, k, rp, d, rp))
+        got = tt_inner_pallas(xc, pc, block_k=8, interpret=True)
+        want = ref.tt_inner_ref(xc, pc)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_ops_wrapper_vs_core_projection(self, seed):
+        kx, kp = jax.random.split(_key(seed))
+        dims = (9, 9, 9)
+        x = tt_random_data(kx, dims, 3)
+        p = sample_tt_projection(kp, 10, dims, 2)
+        got = tt_inner_products(x, p, interpret=True)
+        want = project(p, x)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_boundary_rank_padding_exact(self):
+        """Zero-padded boundary cores + e_00 start must be exact, not approx."""
+        kx, kp = jax.random.split(_key(7))
+        x = tt_random_data(kx, (6, 6), 4)  # N=2: both cores are boundary cores
+        p = sample_tt_projection(kp, 8, (6, 6), 3)
+        got = tt_inner_products(x, p, interpret=True)
+        want = project(p, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestSRPPackKernel:
+    @pytest.mark.parametrize("b,k", [(8, 32), (16, 64), (8, 128), (24, 96)])
+    def test_vs_ref(self, b, k):
+        v = jax.random.normal(_key(b * k), (b, k))
+        got = srp_pack_pallas(v, block_b=8, interpret=True)
+        np.testing.assert_array_equal(got, ref.srp_pack_ref(v))
+
+    @settings(max_examples=15, deadline=None)
+    @given(b=st.integers(1, 20), k=st.integers(1, 70), seed=st.integers(0, 999))
+    def test_ops_wrapper_ragged(self, b, k, seed):
+        v = jax.random.normal(_key(seed), (b, k))
+        got = srp_pack(v, interpret=True)
+        want = ref.srp_pack_ref(v)
+        np.testing.assert_array_equal(got, want)
+
+    def test_matches_core_pack_bits(self):
+        v = jax.random.normal(_key(3), (5, 40))
+        got = srp_pack(v, interpret=True)
+        want = pack_bits((v > 0).astype(jnp.int32))
+        np.testing.assert_array_equal(got, want)
+
+    def test_zero_is_bit_zero(self):
+        """sign(0) = 0 per Definition 2 (1 iff v > 0)."""
+        v = jnp.zeros((8, 32))
+        got = srp_pack_pallas(v, interpret=True)
+        np.testing.assert_array_equal(got, jnp.zeros((8, 1), jnp.uint32))
+
+
+class TestE2LSHQuantKernel:
+    @pytest.mark.parametrize("b,k,w", [(8, 16, 4.0), (16, 8, 1.0), (8, 64, 0.5)])
+    def test_vs_ref(self, b, k, w):
+        kv, kb = jax.random.split(_key(int(b * k * w)))
+        v = 10.0 * jax.random.normal(kv, (b, k))
+        offs = jax.random.uniform(kb, (k,), minval=0.0, maxval=w)
+        got = e2lsh_quant_pallas(v, offs, w, block_b=8, interpret=True)
+        np.testing.assert_array_equal(got, ref.e2lsh_quant_ref(v, offs, w))
+
+    @settings(max_examples=15, deadline=None)
+    @given(b=st.integers(1, 20), seed=st.integers(0, 999))
+    def test_ops_wrapper_ragged_vs_core(self, b, seed):
+        kv, kb = jax.random.split(_key(seed))
+        v = 5.0 * jax.random.normal(kv, (b, 12))
+        offs = jax.random.uniform(kb, (12,), minval=0.0, maxval=2.0)
+        got = e2lsh_quantize(v, offs, 2.0, interpret=True)
+        want = e2lsh_discretize(v, offs, 2.0)
+        np.testing.assert_array_equal(got, want)
+
+    def test_floor_boundary_values(self):
+        """Exact multiples of w land in the upper bucket (floor semantics)."""
+        v = jnp.array([[0.0, 2.0, -2.0, 3.999999, -0.000001]] * 8)
+        offs = jnp.zeros((5,))
+        got = e2lsh_quant_pallas(v, offs, 2.0, block_b=8, interpret=True)
+        np.testing.assert_array_equal(got[0], jnp.array([0, 1, -1, 1, -1]))

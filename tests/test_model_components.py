@@ -1,0 +1,168 @@
+"""Property tests for model components: SSD chunked==recurrent, chunked
+flash attention == naive softmax, MoE dispatch == dense reference, LSH
+attention retrieval quality."""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import params as params_lib
+from repro.models.attention import chunked_attention
+from repro.models.lsh_attention import lsh_attention_prefill, srp_bucket_codes
+from repro.models.moe import moe_block, moe_block_dense_reference
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+
+class TestSSD:
+    @pytest.mark.parametrize("chunk", [4, 8, 16, 64])
+    def test_chunked_equals_recurrent(self, chunk):
+        """The SSD chunked algorithm must equal the naive recurrence."""
+        key = jax.random.PRNGKey(0)
+        b, s, h, p, n = 2, 33, 3, 4, 5  # deliberately not chunk-aligned
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+        bm = jax.random.normal(ks[3], (b, s, h, n))
+        cm = jax.random.normal(ks[4], (b, s, h, n))
+
+        y_chunk, final = ssd_chunked(x, dt, a, bm, cm, chunk)
+
+        state = jnp.zeros((b, h, p, n))
+        ys = []
+        for t in range(s):
+            y_t, state = ssd_decode_step(state, x[:, t], dt[:, t], a,
+                                         bm[:, t], cm[:, t])
+            ys.append(y_t)
+        y_ref = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(y_chunk, y_ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(final, state, rtol=2e-4, atol=2e-4)
+
+
+class TestChunkedAttention:
+    def _naive(self, q, k, v, causal, window):
+        b, s, h, hd = q.shape
+        kvh = k.shape[2]
+        g = h // kvh
+        qg = q.reshape(b, s, kvh, g, hd)
+        sc = jnp.einsum("bskgh,btkh->bskgt", qg, k) / math.sqrt(hd)
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        mask = jnp.ones((s, s), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= (qpos - kpos) < window
+        sc = jnp.where(mask[None, :, None, None, :], sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("bskgt,btkh->bskgh", p, v).reshape(b, s, h, hd)
+
+    @pytest.mark.parametrize("causal,window,kv_chunk", [
+        (True, 0, 8), (True, 0, 16), (False, 0, 8), (True, 5, 8),
+        (True, 12, 32),
+    ])
+    def test_vs_naive(self, causal, window, kv_chunk):
+        key = jax.random.PRNGKey(2)
+        b, s, h, kvh, hd = 2, 29, 4, 2, 8  # ragged vs chunk, GQA group 2
+        kq, kk, kv_ = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (b, s, h, hd))
+        k = jax.random.normal(kk, (b, s, kvh, hd))
+        v = jax.random.normal(kv_, (b, s, kvh, hd))
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        got = chunked_attention(q, k, v, pos, pos, causal=causal,
+                                window=window, kv_chunk=kv_chunk)
+        want = self._naive(q, k, v, causal, window)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+class TestMoE:
+    def test_dispatch_equals_dense_reference(self):
+        """With ample capacity (no drops) slot dispatch == dense reference."""
+        cfg = dataclasses.replace(get_config("mixtral-8x22b", "smoke"),
+                                  capacity_factor=8.0)
+        key = jax.random.PRNGKey(3)
+        params = params_lib.init_params(cfg, key)
+        lp = jax.tree.map(lambda a: a[0], params["blocks"])
+        x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+        got, aux = moe_block(cfg, lp, x)
+        want = moe_block_dense_reference(cfg, lp, x)
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+        assert float(aux) > 0.0
+
+    def test_capacity_drops_are_bounded(self):
+        """With tight capacity the outputs differ only on dropped tokens."""
+        cfg = dataclasses.replace(get_config("mixtral-8x22b", "smoke"),
+                                  capacity_factor=1.0)
+        key = jax.random.PRNGKey(4)
+        params = params_lib.init_params(cfg, key)
+        lp = jax.tree.map(lambda a: a[0], params["blocks"])
+        x = jax.random.normal(key, (2, 32, cfg.d_model), jnp.float32)
+        got, _ = moe_block(cfg, lp, x)
+        want = moe_block_dense_reference(cfg, lp, x)
+        frac_equal = float(jnp.mean(
+            (jnp.abs(got - want) < 1e-4).all(axis=-1).astype(jnp.float32)))
+        assert frac_equal > 0.5  # most tokens still routed identically
+
+    def test_shared_expert_path(self):
+        cfg = get_config("llama4-maverick-400b-a17b", "smoke")
+        key = jax.random.PRNGKey(5)
+        params = params_lib.init_params(cfg, key)
+        lp = jax.tree.map(lambda a: a[0], params["blocks"])
+        x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+        got, _ = moe_block(cfg, lp, x)
+        assert got.shape == x.shape and bool(jnp.isfinite(got).all())
+
+
+class TestLSHAttention:
+    def test_bucket_codes_match_core_srp(self):
+        """srp_bucket_codes must be the paper's CP-SRP (Definition 12):
+        sign of the CP-Rademacher projection of the matricized vector."""
+        from repro.core import CPTensor, project, CPProjection
+        key = jax.random.PRNGKey(6)
+        k1, k2, kx = jax.random.split(key, 3)
+        K, m1, m2, r = 5, 4, 8, 3
+        f1 = jax.random.normal(k1, (K, m1, r))
+        f2 = jax.random.normal(k2, (K, m2, r))
+        x = jax.random.normal(kx, (m1 * m2,))
+        codes = srp_bucket_codes(x, f1, f2)
+        proj = CPProjection(factors=(jnp.sign(f1), jnp.sign(f2)),
+                            scale=1.0 / math.sqrt(r))
+        vals = project(proj, x.reshape(m1, m2))
+        bits = (np.asarray(vals) > 0).astype(np.int32)
+        want = int((bits * (1 << np.arange(K))).sum())
+        assert int(codes) == want
+
+    def test_same_vector_same_bucket(self):
+        key = jax.random.PRNGKey(7)
+        f1 = jax.random.normal(key, (8, 4, 2))
+        f2 = jax.random.normal(jax.random.PRNGKey(8), (8, 8, 2))
+        x = jax.random.normal(jax.random.PRNGKey(9), (10, 32))
+        c1 = srp_bucket_codes(x, f1, f2)
+        c2 = srp_bucket_codes(x * 3.7, f1, f2)  # scale-invariant (sign)
+        np.testing.assert_array_equal(c1, c2)
+
+    def test_prefill_recovers_strong_matches(self):
+        """Planted high-similarity q/k pairs must dominate LSH attention
+        output: compare to exact attention on those rows."""
+        cfg = get_config("phi3-mini-3.8b", "smoke")
+        key = jax.random.PRNGKey(10)
+        b, s, h, hd = 1, 64, cfg.n_heads, cfg.hd
+        kq, kk, kv_, kp1, kp2 = jax.random.split(key, 5)
+        k = jax.random.normal(kk, (b, s, h, hd))
+        v = jax.random.normal(kv_, (b, s, h, hd))
+        # queries strongly aligned with the key 8 positions earlier
+        q = jnp.roll(k, 8, axis=1) * 4.0 + 0.1 * jax.random.normal(kq, (b, s, h, hd))
+        proj = {"f1": jax.random.normal(kp1, (cfg.lsh_num_hashes, 4, cfg.lsh_rank)),
+                "f2": jax.random.normal(kp2, (cfg.lsh_num_hashes, 4, cfg.lsh_rank))}
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        out = lsh_attention_prefill(cfg, proj, q, k, v, pos)
+        exact = chunked_attention(q, k, v, pos, pos, causal=True)
+        # rows late enough to have their planted match in-context
+        err = jnp.abs(out[:, 16:] - exact[:, 16:]).mean()
+        base = jnp.abs(exact[:, 16:]).mean()
+        assert float(err) < 0.35 * float(base), (float(err), float(base))
