@@ -1,0 +1,16 @@
+# Tier-1 verification and benchmarks. Kernels run with interpret=True on
+# CPU (the Pallas TPU lowering is exercised on real hardware only).
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench bench-index
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+bench-index:
+	$(PYTHON) -m benchmarks.index_qps

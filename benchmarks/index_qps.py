@@ -1,0 +1,92 @@
+"""Device-resident vs host-dict LSH index A/B: build time, QPS at batch
+sizes {1, 64, 1024}, and recall@10 parity (same family => same buckets).
+
+CSV rows (name,us_per_call,derived):
+
+  index/build_{host,device}        us = build wall time, derived = corpus n
+  index/qps_device_b{1,64,1024}    us = per-query latency, derived = QPS
+  index/qps_host_b1024             us = per-query latency, derived = QPS
+  index/speedup_b1024              derived = device QPS / host QPS
+  index/recall10_{host,device}     derived = recall@10 | mean candidates
+
+The device index is built with the default exact bucket cap, so both
+indexes probe identical candidate sets and recall@10 must match exactly.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import (DeviceLSHIndex, HostLSHIndex, make_family,
+                        recall_at_k)
+
+DIMS = (8, 8, 8)
+N_CLUSTERS, PER_CLUSTER = 512, 8           # clustered corpus: real neighbors
+N_CORPUS = N_CLUSTERS * PER_CLUSTER
+NOISE = 0.15
+N_RECALL_QUERIES = 128
+BATCH_SIZES = (1, 64, 1024)
+
+
+def _timed_build(cls, fam, corpus):
+    t0 = time.perf_counter()
+    idx = cls(fam, metric="euclidean").build(corpus)
+    return idx, (time.perf_counter() - t0) * 1e6
+
+
+def run() -> list[str]:
+    rows = []
+    kc, kn, kq, kf = jax.random.split(jax.random.PRNGKey(11), 4)
+    centers = jax.random.normal(kc, (N_CLUSTERS,) + DIMS)
+    corpus = (jnp.repeat(centers, PER_CLUSTER, axis=0)
+              + NOISE * jax.random.normal(kn, (N_CORPUS,) + DIMS))
+    queries = (jnp.tile(centers, (max(BATCH_SIZES) // N_CLUSTERS + 1,)
+                        + (1,) * len(DIMS))[:max(BATCH_SIZES)]
+               + NOISE * jax.random.normal(kq, (max(BATCH_SIZES),) + DIMS))
+    fam = make_family(kf, "cp-e2lsh", DIMS, num_codes=4, num_tables=8,
+                      rank=2, bucket_width=16.0)
+
+    host, host_build_us = _timed_build(HostLSHIndex, fam, corpus)
+    device, dev_build_us = _timed_build(DeviceLSHIndex, fam, corpus)
+    rows.append(emit("index/build_host", host_build_us, N_CORPUS))
+    rows.append(emit("index/build_device", dev_build_us, N_CORPUS))
+
+    # device QPS across batch sizes (jit warmup excluded, median timing)
+    for b in BATCH_SIZES:
+        us = time_fn(lambda qb: device.query_batch(qb, topk=10),
+                     queries[:b], warmup=1, iters=5)
+        dt = us / 1e6
+        rows.append(emit(f"index/qps_device_b{b}", dt / b * 1e6,
+                         f"{b / dt:.0f}"))
+        if b == max(BATCH_SIZES):
+            device_qps = b / dt
+
+    # host QPS at the largest batch (one pass; the per-query loop is slow)
+    b = max(BATCH_SIZES)
+    host.query(queries[0], topk=10)  # warm the jitted hash
+    t0 = time.perf_counter()
+    for i in range(b):
+        host.query(queries[i], topk=10)
+    dt = time.perf_counter() - t0
+    host_qps = b / dt
+    rows.append(emit(f"index/qps_host_b{b}", dt / b * 1e6, f"{host_qps:.0f}"))
+    rows.append(emit(f"index/speedup_b{b}", 0.0,
+                     f"{device_qps / host_qps:.1f}x"))
+
+    # recall@10 parity on the same seeds
+    rq = queries[:N_RECALL_QUERIES]
+    for name, idx in (("host", host), ("device", device)):
+        t0 = time.perf_counter()
+        stats = recall_at_k(idx, rq, topk=10)
+        us = (time.perf_counter() - t0) / N_RECALL_QUERIES * 1e6
+        rows.append(emit(f"index/recall10_{name}", us,
+                         f"{stats['recall']:.3f}|{stats['mean_candidates']:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

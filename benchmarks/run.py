@@ -7,13 +7,15 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import collision, kernels, recall, table1_e2lsh, table2_srp
+    from benchmarks import (collision, index_qps, kernels, recall,
+                            table1_e2lsh, table2_srp)
     print("name,us_per_call,derived")
     rows = []
     rows += table1_e2lsh.run()
     rows += table2_srp.run()
     rows += collision.run()
     rows += recall.run()
+    rows += index_qps.run()
     rows += kernels.run()
     print(f"# {len(rows)} benchmark rows", file=sys.stderr)
 

@@ -2,15 +2,15 @@
 over a corpus of tensors held in CP decomposition format — the paper's
 efficient regime ("provided the input tensor is given in CP/TT format").
 
-Builds the service with CP-E2LSH, serves query batches, and reports
-recall@1 vs brute force, latency, candidate pruning, and the space the
-naive method would have needed.
+Builds the service with CP-E2LSH on the device-resident batched index,
+serves the whole query batch as one jit-compiled call, and reports
+recall@1 vs brute force, batched latency/QPS, candidate pruning, the
+host-index A/B latency, and the space the naive method would have needed.
 
     PYTHONPATH=src python examples/ann_search.py [--corpus 5000]
 """
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--corpus", type=int, default=5000)
     ap.add_argument("--queries", type=int, default=50)
+    ap.add_argument("--host-ab", action="store_true",
+                    help="also run the host-dict index for A/B timing")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -49,29 +51,42 @@ def main():
                       for f in queries.factors),
         scale=1.0)
 
-    t0 = time.perf_counter()
     svc = build_service(kf, "cp-e2lsh", DIMS, corpus, num_codes=8,
                         num_tables=10, rank=3, bucket_width=2.0)
-    build_s = time.perf_counter() - t0
-    print(f"built index over {args.corpus} CP tensors in {build_s:.2f}s")
+    print(f"built device index over {args.corpus} CP tensors "
+          f"in {svc.stats.build_s:.2f}s (bucket cap {svc.index.cap})")
     print(f"projection storage: {svc.index.family.storage_size()} scalars "
           f"(naive method: {naive_storage_size(DIMS, 6, 10)})")
 
+    svc.query_batch(queries, topk=1)  # warm up the jit cache
+    svc.stats.reset()
     results = svc.query_batch(queries, topk=1)
     hits = sum(int(r["ids"].size and r["ids"][0] == i)
                for i, r in enumerate(results))
     print(f"recall@1 (planted NN): {hits}/{args.queries}")
     print(f"mean candidates: {svc.stats.mean_candidates:.1f} "
           f"({svc.stats.mean_candidates / args.corpus:.2%} of corpus)")
-    print(f"mean latency: {svc.stats.mean_latency_ms:.2f} ms/query")
+    print(f"batched latency: {svc.stats.mean_latency_ms:.3f} ms/query "
+          f"({svc.stats.qps:.0f} QPS, one jit call per batch)")
+
+    if args.host_ab:
+        hsvc = build_service(kf, "cp-e2lsh", DIMS, corpus, num_codes=8,
+                             num_tables=10, rank=3, bucket_width=2.0,
+                             device=False)
+        hsvc.index.query(jax.tree.map(lambda a: a[0], queries), topk=1)  # warm jit
+        hsvc.query_batch(queries, topk=1)
+        dt = hsvc.stats.mean_latency_ms
+        print(f"host-dict A/B: {dt:.3f} ms/query "
+              f"({dt / max(svc.stats.mean_latency_ms, 1e-9):.1f}x slower)")
 
     # brute-force cross-check on a few queries
+    n_check = min(5, args.queries)
     ok = 0
-    for i in range(5):
+    for i in range(n_check):
         q = jax.tree.map(lambda a: a[i], queries)
         truth, _ = brute_force("euclidean", q, corpus, topk=1)
         ok += int(truth[0] == i)
-    print(f"brute-force sanity: planted NN is true NN for {ok}/5 queries")
+    print(f"brute-force sanity: planted NN is true NN for {ok}/{n_check} queries")
 
 
 if __name__ == "__main__":

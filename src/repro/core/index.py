@@ -1,44 +1,120 @@
-"""Multi-table LSH index for approximate nearest-neighbour search.
+"""Multi-table LSH indexes for approximate nearest-neighbour search.
 
 The classic (K, L) construction on top of the paper's hash families:
-L tables, each keyed by the concatenation of K hashcodes. Hashing runs
-batched in JAX (the paper's contribution); bucket storage is a host-side
-table (as in FAISS-style deployments). Candidates are re-ranked with exact
-in-format distances/similarities from `contractions`.
+L tables, each keyed by the combination of K hashcodes. Two deployments:
+
+``DeviceLSHIndex`` (the default, exported as ``LSHIndex``) keeps the whole
+index device-resident: build-time sorts the (L, n) uint32 bucket keys into
+per-table sorted key arrays + permutation indices (all ``jax.Array``s), and
+query-time is one jit-compiled program over a (B, ...) query batch —
+vmapped ``searchsorted`` bucket lookup, bounded candidate gathering with
+masking, and exact in-format re-rank via ``contractions``.
+
+``HostLSHIndex`` is the FAISS-style host path (Python dict buckets, one
+query at a time), kept for A/B comparison and as the semantics reference.
+
+Layout of the device index (see ROADMAP.md "Device index layout"):
+
+  sorted_keys : (L, n) uint32 — bucket keys of corpus items, sorted per table
+  perm        : (L, n) int32  — corpus ids in the same sorted order
+  cap         : static int    — max bucket members gathered per probe; the
+                default is the largest bucket observed at build time, which
+                makes device queries return exactly the host candidate set.
+                A smaller explicit ``bucket_cap`` trades recall for speed by
+                truncating oversized buckets (deterministically, in corpus
+                order — the stable sort preserves insertion order).
+
+Bucket keys are a universal multiply-add hash of the K integer hashcodes in
+uint32 arithmetic (natural mod-2^32 wraparound) so the numpy host path and
+the jnp device path produce bit-identical keys without requiring x64 mode.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+import functools
+import warnings
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import contractions
-from repro.core.lsh import LSHFamily, E2LSH_KINDS
-
-_PRIME = (1 << 61) - 1
+from repro.core.lsh import LSHFamily
 
 
-def _combine_codes(codes: np.ndarray, mults: np.ndarray) -> np.ndarray:
-    """(..., L, K) int codes -> (..., L) uint64 bucket keys (universal hash)."""
-    acc = (codes.astype(np.uint64) * mults.astype(np.uint64)).sum(axis=-1)
-    return acc % np.uint64(_PRIME)
+def _make_mults(seed: int, num_codes: int) -> np.ndarray:
+    """Per-position odd uint32 multipliers for the universal bucket hash."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << 32, size=(num_codes,), dtype=np.uint32) | 1
+
+
+def _combine_codes(codes, mults):
+    """(..., L, K) int codes -> (..., L) uint32 bucket keys.
+
+    sum_k codes[k] * mults[k] in uint32 arithmetic. Distinct per-position
+    multipliers make the key permutation-sensitive; the mod-2^32 wraparound
+    is identical between numpy (host tables) and jnp (device tables), and
+    int32 codes of any magnitude cast to uint32 without overflow errors.
+    """
+    xp = jnp if isinstance(codes, jax.Array) else np
+    prods = codes.astype(xp.uint32) * xp.asarray(mults).astype(xp.uint32)
+    return prods.sum(axis=-1, dtype=xp.uint32)
 
 
 def _tree_index(tree, idx):
     return jax.tree.map(lambda a: a[idx], tree)
 
 
+def _check_metric(metric: str) -> None:
+    if metric not in ("euclidean", "cosine"):
+        raise ValueError(metric)
+
+
+@jax.jit
+def _hash_batch(family, xs):
+    return family.hash_batch(xs)
+
+
+def _bucket_keys(family, mults, corpus, batch_size: int) -> jax.Array:
+    """(n, L) uint32 bucket keys of the whole corpus, hashed in batches.
+
+    The single source of build-time keys for both indexes — host tables are
+    filled from np.asarray of this, keeping host/device keys bit-identical.
+    """
+    n = jax.tree.leaves(corpus)[0].shape[0]
+    mults = jnp.asarray(mults)
+    keys = []
+    for start in range(0, n, batch_size):
+        chunk = _tree_index(corpus, slice(start, min(start + batch_size, n)))
+        keys.append(_combine_codes(_hash_batch(family, chunk), mults))
+    return jnp.concatenate(keys, axis=0)
+
+
+def _score_fn(metric: str):
+    return (contractions.distance if metric == "euclidean"
+            else contractions.cosine_similarity)
+
+
+# ---------------------------------------------------------------------------
+# Host index (reference semantics, kept for A/B)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _hash_one(family, x):
+    return family.hash(x)
+
+
 @dataclasses.dataclass
-class LSHIndex:
-    """Build once over a (stacked-pytree) corpus, then query.
+class HostLSHIndex:
+    """Dict-of-buckets index: build once over a (stacked-pytree) corpus.
 
     corpus: any pytree whose leaves share a leading axis of size n —
     e.g. stacked CPTensor factors (n, d, R), stacked TT cores, or a dense
-    (n, d_1, ..., d_N) array.
+    (n, d_1, ..., d_N) array. Hashing runs batched on-device; bucket storage
+    and probing are host-side Python dicts, one query at a time.
     """
 
     family: LSHFamily
@@ -51,25 +127,17 @@ class LSHIndex:
     _mults: np.ndarray | None = None
 
     def __post_init__(self):
-        if self.metric not in ("euclidean", "cosine"):
-            raise ValueError(self.metric)
-        rng = np.random.default_rng(self.seed)
-        self._mults = rng.integers(
-            1, _PRIME, size=(self.family.num_codes,), dtype=np.int64) | 1
+        _check_metric(self.metric)
+        self._mults = _make_mults(self.seed, self.family.num_codes)
 
     # -- build --------------------------------------------------------------
 
-    def build(self, corpus, batch_size: int = 1024) -> "LSHIndex":
+    def build(self, corpus, batch_size: int = 1024) -> "HostLSHIndex":
         self.corpus = corpus
         n = jax.tree.leaves(corpus)[0].shape[0]
         self.size = n
-        hash_fn = jax.jit(self.family.hash_batch)
-        keys = []
-        for start in range(0, n, batch_size):
-            chunk = _tree_index(corpus, slice(start, min(start + batch_size, n)))
-            codes = np.asarray(hash_fn(chunk))  # (b, L, K)
-            keys.append(_combine_codes(codes, self._mults))
-        all_keys = np.concatenate(keys, axis=0)  # (n, L)
+        all_keys = np.asarray(
+            _bucket_keys(self.family, self._mults, corpus, batch_size))
         self._tables = [dict() for _ in range(self.family.num_tables)]
         for i in range(n):
             for t in range(self.family.num_tables):
@@ -80,7 +148,7 @@ class LSHIndex:
 
     def candidates(self, x) -> np.ndarray:
         """Union of bucket members over the L tables."""
-        codes = np.asarray(self.family.hash(x))[None]  # (1, L, K)
+        codes = np.asarray(_hash_one(self.family, x))[None]  # (1, L, K)
         keys = _combine_codes(codes, self._mults)[0]  # (L,)
         cand: set[int] = set()
         for t in range(self.family.num_tables):
@@ -103,10 +171,174 @@ class LSHIndex:
         return cand[order], scores[order], int(cand.size)
 
 
+# ---------------------------------------------------------------------------
+# Device index (sorted keys + permutation, fully batched queries)
+# ---------------------------------------------------------------------------
+
+
+def _max_run_length(sorted_keys: jax.Array) -> jax.Array:
+    """Longest run of equal values along axis 1 of (L, n) sorted keys."""
+    n = sorted_keys.shape[1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    new_run = jnp.concatenate(
+        [jnp.ones(sorted_keys.shape[:1] + (1,), bool),
+         sorted_keys[:, 1:] != sorted_keys[:, :-1]], axis=1)
+    run_start = jax.lax.cummax(jnp.where(new_run, idx, 0), axis=1)
+    return jnp.max(idx - run_start + 1)
+
+
+def _gather_candidates(family, sorted_keys, perm, mults, queries, cap):
+    """-> (cand (B, L*cap) int32 with -1 for invalid, valid (B, L*cap) bool).
+
+    For each query and table: searchsorted into the sorted key array, gather
+    the next `cap` positions, keep those still inside the bucket (same key),
+    then sort + mask duplicates so each corpus id appears at most once.
+    """
+    n = sorted_keys.shape[1]
+    codes = family.hash_batch(queries)                    # (B, L, K)
+    keys = _combine_codes(codes, mults).T                 # (L, B)
+    starts = jax.vmap(
+        lambda sk, q: jnp.searchsorted(sk, q, side="left"))(sorted_keys, keys)
+    pos = starts[:, :, None] + jnp.arange(cap, dtype=starts.dtype)  # (L, B, cap)
+    in_range = pos < n
+    posc = jnp.minimum(pos, n - 1)
+    key_at = jax.vmap(lambda sk, p: sk[p])(sorted_keys, posc)
+    hit = in_range & (key_at == keys[:, :, None])
+    ids = jax.vmap(lambda pm, p: pm[p])(perm, posc)       # (L, B, cap)
+    b = keys.shape[1]
+    cand = jnp.where(hit, ids, n).transpose(1, 0, 2).reshape(b, -1)
+    cand = jnp.sort(cand, axis=1)                         # invalid (=n) last
+    dup = jnp.concatenate(
+        [jnp.zeros((b, 1), bool), cand[:, 1:] == cand[:, :-1]], axis=1)
+    valid = (cand < n) & ~dup
+    return jnp.where(valid, cand, -1).astype(jnp.int32), valid
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _device_candidates(family, sorted_keys, perm, mults, queries, *, cap):
+    return _gather_candidates(family, sorted_keys, perm, mults, queries, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "topk", "cap"))
+def _device_query(family, corpus, sorted_keys, perm, mults, queries, *,
+                  metric, topk, cap):
+    """One program from query batch to top-k: hash -> probe -> gather -> rank."""
+    cand, valid = _gather_candidates(family, sorted_keys, perm, mults,
+                                     queries, cap)
+    n_cand = valid.sum(axis=1, dtype=jnp.int32)
+    safe = jnp.where(valid, cand, 0)
+    sub = _tree_index(corpus, safe)                       # leaves (B, C, ...)
+    score = _score_fn(metric)
+    scores = jax.vmap(
+        lambda q, ys: jax.vmap(lambda y: score(q, y))(ys))(queries, sub)
+    bad = jnp.inf if metric == "euclidean" else -jnp.inf
+    scores = jnp.where(valid, scores, bad)
+    k = min(topk, cand.shape[1])
+    _, sel = jax.lax.top_k(-scores if metric == "euclidean" else scores, k)
+    ids = jnp.where(jnp.take_along_axis(valid, sel, axis=1),
+                    jnp.take_along_axis(cand, sel, axis=1), -1)
+    out_scores = jnp.take_along_axis(scores, sel, axis=1)
+    if k < topk:
+        ids = jnp.pad(ids, ((0, 0), (0, topk - k)), constant_values=-1)
+        out_scores = jnp.pad(out_scores, ((0, 0), (0, topk - k)),
+                             constant_values=bad)
+    return ids, out_scores, n_cand
+
+
+@dataclasses.dataclass
+class DeviceLSHIndex:
+    """Device-resident (K, L) index: sorted bucket keys + permutation per
+    table, fully batched jit-compiled queries.
+
+    corpus: any pytree whose leaves share a leading axis of size n. Query
+    batches are pytrees with a leading batch axis B; `query_batch` returns
+    (ids (B, topk) int32 with -1 fill, scores (B, topk), n_candidates (B,)).
+    """
+
+    family: LSHFamily
+    metric: str = "euclidean"  # or "cosine"
+    seed: int = 0
+    bucket_cap: int | None = None  # None -> exact (largest build-time bucket)
+
+    corpus: Any = None
+    size: int = 0
+    sorted_keys: jax.Array | None = None  # (L, n) uint32
+    perm: jax.Array | None = None         # (L, n) int32
+    cap: int = 0
+    _mults: np.ndarray | None = None
+
+    def __post_init__(self):
+        _check_metric(self.metric)
+        self._mults = _make_mults(self.seed, self.family.num_codes)
+
+    # -- build --------------------------------------------------------------
+
+    def build(self, corpus, batch_size: int = 1024) -> "DeviceLSHIndex":
+        self.corpus = corpus
+        n = jax.tree.leaves(corpus)[0].shape[0]
+        self.size = n
+        all_keys = _bucket_keys(self.family, self._mults, corpus,
+                                batch_size).T             # (L, n)
+        self.perm = jnp.argsort(all_keys, axis=1, stable=True).astype(jnp.int32)
+        self.sorted_keys = jnp.take_along_axis(all_keys, self.perm, axis=1)
+        if self.bucket_cap is None:
+            self.cap = int(_max_run_length(self.sorted_keys))
+            if self.cap * self.family.num_tables > n:
+                warnings.warn(
+                    f"DeviceLSHIndex: largest bucket has {self.cap} of {n} "
+                    f"items, so the exact default cap gathers up to "
+                    f"L*cap={self.cap * self.family.num_tables} candidates "
+                    "per query (more than the corpus). The family is too "
+                    "coarse for this data; raise num_codes / shrink "
+                    "bucket_width, or pass an explicit bucket_cap to bound "
+                    "per-query work at some recall cost.")
+        else:
+            self.cap = min(int(self.bucket_cap), n)
+        return self
+
+    # -- query --------------------------------------------------------------
+
+    def candidates_batch(self, queries) -> tuple[jax.Array, jax.Array]:
+        """-> (cand (B, L*cap) int32 with -1 fill, valid (B, L*cap) bool)."""
+        return _device_candidates(self.family, self.sorted_keys, self.perm,
+                                  jnp.asarray(self._mults), queries,
+                                  cap=self.cap)
+
+    def candidates(self, x) -> np.ndarray:
+        """Union of bucket members over the L tables (single query)."""
+        cand, valid = self.candidates_batch(_tree_index(x, None))
+        cand = np.asarray(cand[0])
+        return cand[np.asarray(valid[0])].astype(np.int64)
+
+    def query_batch(self, queries, topk: int = 10):
+        """-> (ids (B, topk), scores (B, topk), n_candidates (B,)) jax arrays.
+
+        Rows with fewer than topk candidates are filled with id -1 and
+        +inf distance / -inf similarity. One jit-compiled program end-to-end.
+        """
+        return _device_query(self.family, self.corpus, self.sorted_keys,
+                             self.perm, jnp.asarray(self._mults), queries,
+                             metric=self.metric, topk=topk, cap=self.cap)
+
+    def query(self, x, topk: int = 10) -> tuple[np.ndarray, np.ndarray, int]:
+        """Single-query convenience wrapper; same contract as HostLSHIndex."""
+        ids, scores, n_cand = self.query_batch(_tree_index(x, None), topk)
+        ids = np.asarray(ids[0])
+        mask = ids >= 0
+        return (ids[mask].astype(np.int64), np.asarray(scores[0])[mask],
+                int(n_cand[0]))
+
+
+LSHIndex = DeviceLSHIndex  # default deployment
+
+
+# ---------------------------------------------------------------------------
+# References / evaluation
+# ---------------------------------------------------------------------------
+
+
 def _score_batch(metric: str, x, ys):
-    fn = (contractions.distance if metric == "euclidean"
-          else contractions.cosine_similarity)
-    return jax.vmap(lambda y: fn(x, y))(ys)
+    return jax.vmap(lambda y: _score_fn(metric)(x, y))(ys)
 
 
 def brute_force(metric: str, x, corpus, topk: int = 10):
@@ -116,8 +348,12 @@ def brute_force(metric: str, x, corpus, topk: int = 10):
     return order, scores[order]
 
 
-def recall_at_k(index: LSHIndex, queries, topk: int = 10) -> dict[str, float]:
-    """Mean recall@k of index.query vs. brute force over a query batch."""
+def recall_at_k(index, queries, topk: int = 10) -> dict[str, float]:
+    """Mean recall@k of index.query vs. brute force over a query batch.
+
+    Works for both HostLSHIndex and DeviceLSHIndex (any object with the
+    single-query `query` contract plus `metric`/`corpus`/`size`).
+    """
     n_q = jax.tree.leaves(queries)[0].shape[0]
     hits, total, cand_total = 0, 0, 0
     for i in range(n_q):

@@ -167,6 +167,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         compile_s = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         colls = collective_stats(hlo)
         fallbacks = sorted({(f[0], f[1], "/".join(f[2])) for f in ctx.fallbacks})

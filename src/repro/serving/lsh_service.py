@@ -2,9 +2,14 @@
 deployable serving component.
 
 A corpus of tensors (dense / CP / TT format) is hashed once at build time
-with one of the paper's families; queries arrive in batches, are hashed on
-the accelerator (batched CP/TT Gram einsums -> the Pallas kernels on TPU),
-bucketed on the host, and re-ranked with exact in-format distances.
+with one of the paper's families; queries arrive in batches and run through
+the device-resident ``DeviceLSHIndex`` as one jit-compiled program — batched
+hashing (batched CP/TT Gram einsums -> the Pallas kernels on TPU), vmapped
+``searchsorted`` bucket probes over the sorted key tables, and exact
+in-format re-rank — never leaving the accelerator until the final top-k.
+
+``LSHService(..., device=False)`` falls back to the host-dict
+``HostLSHIndex`` path (per-query Python bucketing) for A/B comparison.
 """
 
 from __future__ import annotations
@@ -16,15 +21,17 @@ from typing import Any, Sequence
 import jax
 import numpy as np
 
-from repro.core.index import LSHIndex, _tree_index
+from repro.core.index import DeviceLSHIndex, HostLSHIndex, _tree_index
 from repro.core.lsh import LSHFamily, make_family
 
 
 @dataclasses.dataclass
 class ServiceStats:
     queries: int = 0
+    batches: int = 0
     total_ms: float = 0.0
     total_candidates: int = 0
+    build_s: float = 0.0
 
     @property
     def mean_latency_ms(self):
@@ -34,42 +41,87 @@ class ServiceStats:
     def mean_candidates(self):
         return self.total_candidates / max(self.queries, 1)
 
+    @property
+    def qps(self):
+        return self.queries / max(self.total_ms / 1e3, 1e-9)
+
+    def reset(self):
+        """Zero the query counters (e.g. after jit warmup); keeps build_s."""
+        self.queries = self.batches = 0
+        self.total_ms = 0.0
+        self.total_candidates = 0
+
 
 class LSHService:
     """build() once, then serve query batches."""
 
-    def __init__(self, family: LSHFamily, metric: str = "euclidean"):
-        self.index = LSHIndex(family, metric=metric)
+    def __init__(self, family: LSHFamily, metric: str = "euclidean",
+                 device: bool = True, bucket_cap: int | None = None):
+        if device:
+            self.index = DeviceLSHIndex(family, metric=metric,
+                                        bucket_cap=bucket_cap)
+        else:
+            if bucket_cap is not None:
+                raise ValueError(
+                    "bucket_cap applies to the device index only; the host "
+                    "index always probes full buckets (pass device=True)")
+            self.index = HostLSHIndex(family, metric=metric)
         self.stats = ServiceStats()
 
     def build(self, corpus, batch_size: int = 2048) -> "LSHService":
+        t0 = time.perf_counter()
         self.index.build(corpus, batch_size=batch_size)
+        self.stats.build_s = time.perf_counter() - t0
         return self
 
-    def query_batch(self, queries, topk: int = 10) -> list[dict[str, Any]]:
+    def query_arrays(self, queries, topk: int = 10):
+        """Batched raw results: (ids (B, topk), scores (B, topk), n_cand (B,)).
+
+        ids are -1-filled where a row has fewer than topk candidates.
+        Device path: one jit-compiled call; host path: per-query loop.
+        """
         n = jax.tree.leaves(queries)[0].shape[0]
         t0 = time.perf_counter()
-        # hash the whole query batch on-device in one shot
-        codes = np.asarray(self.index.family.hash_batch(queries))
-        out = []
-        for i in range(n):
-            q = _tree_index(queries, i)
-            ids, scores, n_cand = self.index.query(q, topk=topk)
-            out.append({"ids": ids, "scores": scores,
-                        "candidates": n_cand})
-            self.stats.total_candidates += n_cand
+        if isinstance(self.index, DeviceLSHIndex):
+            ids, scores, n_cand = jax.block_until_ready(
+                self.index.query_batch(queries, topk=topk))
+            ids, scores, n_cand = (np.asarray(ids), np.asarray(scores),
+                                   np.asarray(n_cand))
+        else:
+            bad = np.inf if self.index.metric == "euclidean" else -np.inf
+            ids = np.full((n, topk), -1, np.int64)
+            scores = np.full((n, topk), bad, np.float32)
+            n_cand = np.zeros((n,), np.int64)
+            for i in range(n):
+                got, sc, nc = self.index.query(_tree_index(queries, i), topk)
+                ids[i, :got.size], scores[i, :sc.size] = got, sc
+                n_cand[i] = nc
         dt = (time.perf_counter() - t0) * 1e3
         self.stats.queries += n
+        self.stats.batches += 1
         self.stats.total_ms += dt
+        self.stats.total_candidates += int(n_cand.sum())
+        return ids, scores, n_cand
+
+    def query_batch(self, queries, topk: int = 10) -> list[dict[str, Any]]:
+        """Per-query result dicts (ids/scores trimmed of -1 fill)."""
+        ids, scores, n_cand = self.query_arrays(queries, topk=topk)
+        out = []
+        for row_ids, row_scores, nc in zip(ids, scores, n_cand):
+            mask = row_ids >= 0
+            out.append({"ids": row_ids[mask], "scores": row_scores[mask],
+                        "candidates": int(nc)})
         return out
 
 
 def build_service(key, kind: str, dims: Sequence[int], corpus, *,
                   metric: str | None = None, num_codes: int = 8,
                   num_tables: int = 8, rank: int = 4,
-                  bucket_width: float = 4.0) -> LSHService:
+                  bucket_width: float = 4.0, device: bool = True,
+                  bucket_cap: int | None = None) -> LSHService:
     metric = metric or ("cosine" if kind.endswith("srp") else "euclidean")
     fam = make_family(key, kind, dims, num_codes=num_codes,
                       num_tables=num_tables, rank=rank,
                       bucket_width=bucket_width)
-    return LSHService(fam, metric=metric).build(corpus)
+    return LSHService(fam, metric=metric, device=device,
+                      bucket_cap=bucket_cap).build(corpus)

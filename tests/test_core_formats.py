@@ -1,10 +1,11 @@
-"""Unit + property tests: tensor formats and in-format contractions vs dense oracles."""
+"""Unit + property tests: tensor formats and in-format contractions vs dense
+oracles. Property-style coverage uses seeded np.random draws of shapes/ranks
+(plain parametrized pytest, no extra testing dependencies)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (CPTensor, TTTensor, cp_rademacher, tt_rademacher,
                         cp_random_data, tt_random_data, cp_to_dense,
@@ -13,7 +14,15 @@ from repro.core import contractions as C
 
 jax.config.update("jax_enable_x64", False)
 
-dims_strategy = st.lists(st.integers(2, 6), min_size=2, max_size=4)
+PROPERTY_SEEDS = list(range(12))
+
+
+def _draw_dims_ranks(seed, max_rank=4):
+    """Seeded random (dims, rx, ry) draw: 2-4 modes, each dim in [2, 6]."""
+    rng = np.random.default_rng(seed)
+    dims = [int(d) for d in rng.integers(2, 7, size=rng.integers(2, 5))]
+    rx, ry = (int(r) for r in rng.integers(1, max_rank + 1, size=2))
+    return dims, rx, ry
 
 
 def _key(seed):
@@ -87,48 +96,45 @@ class TestFormats:
 class TestContractionsVsDense:
     """Every in-format inner product must equal the dense oracle."""
 
-    @settings(max_examples=25, deadline=None)
-    @given(dims=dims_strategy, rx=st.integers(1, 4), ry=st.integers(1, 4),
-           seed=st.integers(0, 2**16))
-    def test_cp_cp(self, dims, rx, ry, seed):
+    @pytest.mark.parametrize("seed", PROPERTY_SEEDS)
+    def test_cp_cp(self, seed):
+        dims, rx, ry = _draw_dims_ranks(seed)
         k1, k2 = jax.random.split(_key(seed))
         x = cp_random_data(k1, dims, rx)
         y = cp_random_data(k2, dims, ry)
         want = jnp.vdot(cp_to_dense(x), cp_to_dense(y))
         np.testing.assert_allclose(C.inner_cp_cp(x, y), want, rtol=2e-4, atol=2e-5)
 
-    @settings(max_examples=25, deadline=None)
-    @given(dims=dims_strategy, rx=st.integers(1, 4), ry=st.integers(1, 4),
-           seed=st.integers(0, 2**16))
-    def test_tt_tt(self, dims, rx, ry, seed):
+    @pytest.mark.parametrize("seed", PROPERTY_SEEDS)
+    def test_tt_tt(self, seed):
+        dims, rx, ry = _draw_dims_ranks(seed)
         k1, k2 = jax.random.split(_key(seed))
         x = tt_random_data(k1, dims, rx)
         y = tt_random_data(k2, dims, ry)
         want = jnp.vdot(tt_to_dense(x), tt_to_dense(y))
         np.testing.assert_allclose(C.inner_tt_tt(x, y), want, rtol=2e-4, atol=2e-5)
 
-    @settings(max_examples=25, deadline=None)
-    @given(dims=dims_strategy, rx=st.integers(1, 4), ry=st.integers(1, 4),
-           seed=st.integers(0, 2**16))
-    def test_cp_tt(self, dims, rx, ry, seed):
+    @pytest.mark.parametrize("seed", PROPERTY_SEEDS)
+    def test_cp_tt(self, seed):
+        dims, rx, ry = _draw_dims_ranks(seed)
         k1, k2 = jax.random.split(_key(seed))
         x = cp_random_data(k1, dims, rx)
         y = tt_random_data(k2, dims, ry)
         want = jnp.vdot(cp_to_dense(x), tt_to_dense(y))
         np.testing.assert_allclose(C.inner_cp_tt(x, y), want, rtol=2e-4, atol=2e-5)
 
-    @settings(max_examples=25, deadline=None)
-    @given(dims=dims_strategy, r=st.integers(1, 4), seed=st.integers(0, 2**16))
-    def test_dense_cp(self, dims, r, seed):
+    @pytest.mark.parametrize("seed", PROPERTY_SEEDS)
+    def test_dense_cp(self, seed):
+        dims, r, _ = _draw_dims_ranks(seed)
         k1, k2 = jax.random.split(_key(seed))
         x = jax.random.normal(k1, tuple(dims))
         y = cp_random_data(k2, dims, r)
         want = jnp.vdot(x, cp_to_dense(y))
         np.testing.assert_allclose(C.inner_dense_cp(x, y), want, rtol=2e-4, atol=2e-5)
 
-    @settings(max_examples=25, deadline=None)
-    @given(dims=dims_strategy, r=st.integers(1, 4), seed=st.integers(0, 2**16))
-    def test_dense_tt(self, dims, r, seed):
+    @pytest.mark.parametrize("seed", PROPERTY_SEEDS)
+    def test_dense_tt(self, seed):
+        dims, r, _ = _draw_dims_ranks(seed)
         k1, k2 = jax.random.split(_key(seed))
         x = jax.random.normal(k1, tuple(dims))
         y = tt_random_data(k2, dims, r)

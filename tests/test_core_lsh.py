@@ -15,15 +15,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (make_family, naive_storage_size, pack_bits, unpack_bits,
                         project, sample_cp_projection, sample_tt_projection,
                         sample_dense_projection, cp_random_data, tt_random_data,
                         cp_to_dense, tt_to_dense, dense_to_tt, theory)
 from repro.core import contractions as C
+from repro.core.index import _combine_codes, _make_mults
 
 DIMS = (8, 8, 8)
+PROJECTION_SEEDS = list(range(10))
 
 
 def _key(seed):
@@ -33,10 +34,10 @@ def _key(seed):
 class TestProjectionPaths:
     """All projection paths must agree with densified oracles."""
 
-    @settings(max_examples=20, deadline=None)
-    @given(seed=st.integers(0, 2**16), rank=st.integers(1, 4),
-           k=st.integers(1, 6))
-    def test_cp_projection_all_input_formats(self, seed, rank, k):
+    @pytest.mark.parametrize("seed", PROJECTION_SEEDS)
+    def test_cp_projection_all_input_formats(self, seed):
+        rng = np.random.default_rng(seed)
+        rank, k = int(rng.integers(1, 5)), int(rng.integers(1, 7))
         kp, kx = jax.random.split(_key(seed))
         dims = (4, 5, 6)
         p = sample_cp_projection(kp, k, dims, rank)
@@ -49,10 +50,10 @@ class TestProjectionPaths:
             got = project(p, x)
             np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-4)
 
-    @settings(max_examples=20, deadline=None)
-    @given(seed=st.integers(0, 2**16), rank=st.integers(1, 3),
-           k=st.integers(1, 6))
-    def test_tt_projection_all_input_formats(self, seed, rank, k):
+    @pytest.mark.parametrize("seed", PROJECTION_SEEDS)
+    def test_tt_projection_all_input_formats(self, seed):
+        rng = np.random.default_rng(seed)
+        rank, k = int(rng.integers(1, 4)), int(rng.integers(1, 7))
         kp, kx = jax.random.split(_key(seed))
         dims = (4, 5, 6)
         p = sample_tt_projection(kp, k, dims, rank)
@@ -192,14 +193,27 @@ class TestHashingMechanics:
         hb = fam.hash_batch(xs)
         assert hb.shape == (5, 3, 8)
 
-    @settings(max_examples=30, deadline=None)
-    @given(k=st.integers(1, 100), seed=st.integers(0, 2**16))
+    @pytest.mark.parametrize("k", [1, 7, 31, 32, 33, 40, 63, 64, 65, 96, 100])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
     def test_bit_pack_roundtrip(self, k, seed):
-        bits = np.asarray(
-            jax.random.bernoulli(_key(seed), 0.5, (3, k))).astype(np.int32)
+        """Roundtrip exactness, including K not a multiple of 32."""
+        bits = np.random.default_rng(seed * 1000 + k).integers(
+            0, 2, size=(3, k)).astype(np.int32)
         packed = pack_bits(jnp.asarray(bits))
         assert packed.shape == (3, (k + 31) // 32)
+        assert packed.dtype == jnp.uint32
         np.testing.assert_array_equal(unpack_bits(packed, k), bits)
+
+    @pytest.mark.parametrize("k", [5, 33, 70])
+    def test_bit_pack_padding_is_zero(self, k):
+        """Bits beyond K never leak into the packed words: all-ones input
+        packs to exactly (2^K - 1) split across words."""
+        bits = jnp.ones((1, k), jnp.int32)
+        packed = np.asarray(pack_bits(bits))[0].astype(np.uint64)
+        total = 0
+        for w_i, word in enumerate(packed):
+            total += int(word) << (32 * w_i)
+        assert total == (1 << k) - 1
 
     def test_srp_packed_equals_unpacked(self):
         fam = make_family(_key(5), "cp-srp", DIMS, num_codes=40, num_tables=2,
@@ -218,6 +232,64 @@ class TestHashingMechanics:
         c2 = np.asarray(jnp.floor((v + fam.bucket_width + fam.offsets)
                                   / fam.bucket_width))
         np.testing.assert_array_equal(c2, c1 + 1)
+
+
+class TestCombineCodes:
+    """The universal bucket-key hash behind both LSH indexes."""
+
+    def test_permutation_sensitivity(self):
+        """Distinct per-position multipliers: permuting the K codes within a
+        table must (generically) change the bucket key."""
+        mults = _make_mults(0, 8)
+        rng = np.random.default_rng(1)
+        codes = rng.integers(-50, 50, size=(4, 8)).astype(np.int32)
+        base = _combine_codes(codes, mults)
+        changed = 0
+        for _ in range(20):
+            p = rng.permutation(8)
+            if np.array_equal(p, np.arange(8)):
+                continue
+            perm_keys = _combine_codes(codes[:, p], mults)
+            changed += int(not np.array_equal(perm_keys, base))
+        assert changed >= 18  # collisions are possible but must be rare
+
+    def test_order_matters_two_codes(self):
+        mults = _make_mults(3, 2)
+        a = _combine_codes(np.array([[1, 2]], np.int32), mults)
+        b = _combine_codes(np.array([[2, 1]], np.int32), mults)
+        assert a[0] != b[0]
+
+    @pytest.mark.parametrize("codes", [
+        np.array([[2**31 - 1, -2**31, 2**31 - 1]], np.int32),
+        np.array([[-1, -2, -3]], np.int32),
+        np.array([[0, 2**30, -2**30]], np.int32),
+    ])
+    def test_int32_overflow_stability(self, codes):
+        """Overflow-prone int32 codes wrap mod 2^32 deterministically —
+        no errors, uint32 output, and repeated evaluation agrees."""
+        mults = _make_mults(7, codes.shape[-1])
+        k1 = _combine_codes(codes, mults)
+        k2 = _combine_codes(codes.copy(), mults)
+        assert k1.dtype == np.uint32
+        np.testing.assert_array_equal(k1, k2)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_host_device_keys_identical(self, seed):
+        """numpy (host tables) and jnp (device tables) produce bit-identical
+        bucket keys, including for negative / extreme codes."""
+        rng = np.random.default_rng(seed)
+        mults = _make_mults(seed, 6)
+        codes = rng.integers(-2**31, 2**31, size=(5, 3, 6)).astype(np.int32)
+        host = _combine_codes(codes, mults)
+        device = np.asarray(_combine_codes(jnp.asarray(codes), mults))
+        assert host.dtype == np.uint32 and device.dtype == np.uint32
+        np.testing.assert_array_equal(host, device)
+
+    def test_mults_are_odd_and_seeded(self):
+        m1, m2 = _make_mults(5, 16), _make_mults(5, 16)
+        np.testing.assert_array_equal(m1, m2)
+        assert (m1 % 2 == 1).all()
+        assert not np.array_equal(m1, _make_mults(6, 16))
 
 
 class TestSpaceComplexity:

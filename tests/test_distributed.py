@@ -54,8 +54,8 @@ class TestShardingRules:
         import jax
         from jax.sharding import PartitionSpec as P
         from repro.distributed.sharding import axis_rules, resolve_spec
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(2, 4)
         with axis_rules(mesh):
             # both "mlp" and "heads" map to "model": second one must drop
             spec = resolve_spec(("mlp", "heads"), (8, 8))
@@ -92,8 +92,8 @@ class TestDistributedTrainStep:
         state0, _ = init_state(cfg, tc, jax.random.PRNGKey(0))
         ref_state, ref_metrics = make_train_step(cfg, tc)(state0, batch)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(2, 4)
         with axis_rules(mesh):
             state1, _ = init_state(cfg, tc, jax.random.PRNGKey(0))
             sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape,
@@ -121,10 +121,9 @@ class TestDistributedTrainStep:
         import repro.launch.dryrun as dr
         import repro.launch.mesh as mesh_lib
         # shrink the production mesh for the in-test run
-        mesh_lib.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+        mesh_lib.make_production_mesh = lambda multi_pod=False: mesh_lib._mesh(
             (2, 2, 2) if multi_pod else (2, 4),
-            ("pod", "data", "model") if multi_pod else ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * (3 if multi_pod else 2))
+            ("pod", "data", "model") if multi_pod else ("data", "model"))
         dr.make_production_mesh = mesh_lib.make_production_mesh
         from repro.configs import get_config
         import dataclasses
@@ -150,10 +149,9 @@ class TestElastic:
         cfg = get_config("stablelm-3b", "smoke")
         params = P.init_params(cfg, jax.random.PRNGKey(0))
         axes = P.param_axes(cfg)
-        m1 = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2)
-        m2 = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_local_mesh
+        m1 = make_local_mesh(2, 4)
+        m2 = make_local_mesh(4, 2)
         p1 = reshard(params, axes, m1)
         p2 = reshard(p1, axes, m2)   # elastic move 2x4 -> 4x2
         jax.tree.map(lambda a, b: np.testing.assert_array_equal(

@@ -1,0 +1,117 @@
+"""Device-resident index vs the host-dict reference: bucket membership and
+top-k results must agree for every hash family kind and both metrics.
+
+The device index is built with the default exact bucket cap (largest bucket
+observed at build time), so candidate sets are identical by construction —
+these tests pin that contract.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DeviceLSHIndex, HostLSHIndex, make_family
+from repro.core.lsh import ALL_KINDS
+
+DIMS = (4, 4, 4)
+N_CORPUS, N_QUERIES, TOPK = 64, 4, 5
+
+
+def _data(seed=0):
+    kc, kq = jax.random.split(jax.random.PRNGKey(seed))
+    corpus = jax.random.normal(kc, (N_CORPUS,) + DIMS)
+    queries = corpus[:N_QUERIES] + 0.1 * jax.random.normal(
+        kq, (N_QUERIES,) + DIMS)
+    return corpus, queries
+
+
+def _build_pair(kind, metric, corpus):
+    k, w = (3, 6.0) if "e2lsh" in kind else (6, 0.0)
+    fam = make_family(jax.random.PRNGKey(42), kind, DIMS, num_codes=k,
+                      num_tables=4, rank=2, bucket_width=max(w, 1.0))
+    host = HostLSHIndex(fam, metric=metric).build(corpus)
+    device = DeviceLSHIndex(fam, metric=metric).build(corpus)
+    return host, device
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+@pytest.mark.parametrize("kind", ALL_KINDS)
+class TestDeviceMatchesHost:
+    def test_bucket_membership(self, kind, metric):
+        corpus, queries = _data()
+        host, device = _build_pair(kind, metric, corpus)
+        for i in range(N_QUERIES):
+            want = set(host.candidates(queries[i]).tolist())
+            got = set(device.candidates(queries[i]).tolist())
+            assert got == want, (kind, metric, i)
+
+    def test_topk_single_query(self, kind, metric):
+        """Batch size 1 through the batched path == host per-query path."""
+        corpus, queries = _data()
+        host, device = _build_pair(kind, metric, corpus)
+        for i in range(N_QUERIES):
+            h_ids, h_scores, h_n = host.query(queries[i], topk=TOPK)
+            d_ids, d_scores, d_n = device.query(queries[i], topk=TOPK)
+            assert h_n == d_n, (kind, metric, i)
+            assert len(h_ids) == len(d_ids)
+            assert set(h_ids.tolist()) == set(d_ids.tolist()), (kind, metric)
+            np.testing.assert_allclose(np.sort(h_scores), np.sort(d_scores),
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_topk_batched(self, kind, metric):
+        """Batch size > 1: each row of query_batch == the single-query path."""
+        corpus, queries = _data()
+        host, device = _build_pair(kind, metric, corpus)
+        ids, scores, n_cand = device.query_batch(queries, topk=TOPK)
+        assert ids.shape == (N_QUERIES, TOPK)
+        assert scores.shape == (N_QUERIES, TOPK)
+        for i in range(N_QUERIES):
+            h_ids, h_scores, h_n = host.query(queries[i], topk=TOPK)
+            row = np.asarray(ids[i])
+            mask = row >= 0
+            assert int(n_cand[i]) == h_n
+            assert set(row[mask].tolist()) == set(h_ids.tolist())
+            np.testing.assert_allclose(np.sort(np.asarray(scores[i])[mask]),
+                                       np.sort(h_scores), rtol=1e-4, atol=1e-5)
+
+
+class TestDeviceIndexContract:
+    def test_topk_fill_when_few_candidates(self):
+        """Rows with < topk candidates are -1/inf-filled, never padded with
+        arbitrary corpus ids."""
+        corpus, queries = _data(1)
+        _, device = _build_pair("cp-e2lsh", "euclidean", corpus)
+        ids, scores, n_cand = device.query_batch(queries, topk=N_CORPUS)
+        ids, scores = np.asarray(ids), np.asarray(scores)
+        for i in range(N_QUERIES):
+            nc = int(n_cand[i])
+            assert (ids[i, :nc] >= 0).all()
+            assert (ids[i, nc:] == -1).all()
+            assert np.isinf(scores[i, nc:]).all()
+
+    def test_no_duplicate_ids_in_topk(self):
+        """A corpus id found in several tables appears once in the top-k."""
+        corpus, queries = _data(2)
+        _, device = _build_pair("cp-srp", "cosine", corpus)
+        ids, _, _ = device.query_batch(queries, topk=N_CORPUS)
+        for row in np.asarray(ids):
+            live = row[row >= 0]
+            assert len(live) == len(set(live.tolist()))
+
+    def test_explicit_bucket_cap_bounds_candidates(self):
+        """A small bucket_cap truncates probes to <= L * cap candidates."""
+        corpus, queries = _data(3)
+        fam = make_family(jax.random.PRNGKey(7), "srp", DIMS, num_codes=2,
+                          num_tables=3, rank=2)
+        device = DeviceLSHIndex(fam, metric="cosine", bucket_cap=2).build(corpus)
+        assert device.cap == 2
+        _, _, n_cand = device.query_batch(queries, topk=TOPK)
+        assert (np.asarray(n_cand) <= 3 * 2).all()
+
+    def test_exact_member_query_finds_itself(self):
+        corpus, _ = _data(4)
+        _, device = _build_pair("tt-e2lsh", "euclidean", corpus)
+        ids, scores, _ = device.query(corpus[11], topk=1)
+        assert ids.size == 1 and ids[0] == 11
+        assert scores[0] < 1e-3

@@ -1,11 +1,11 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp ref.py oracles,
-swept over shapes and dtypes, plus agreement with the core-library paths."""
+swept over shapes and dtypes (including non-aligned shapes that exercise the
+ops.py padding paths), plus agreement with the core-library paths."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (cp_random_data, tt_random_data, sample_cp_projection,
                         sample_tt_projection, project)
@@ -56,15 +56,31 @@ class TestCPGramKernel:
         tol = 1e-4 if dtype == jnp.float32 else 5e-2
         np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
 
-    @settings(max_examples=10, deadline=None)
-    @given(seed=st.integers(0, 2**16))
+    @pytest.mark.parametrize("seed", range(6))
     def test_ops_wrapper_vs_core_projection(self, seed):
-        """ops.cp_inner_products == core project() on real CP formats."""
+        """ops.cp_inner_products == core project() on real CP formats.
+
+        dims=10 (not a multiple of 8) and K=12 (not a multiple of block_k=8)
+        exercise the mode-dim and K-block zero-padding paths in ops.py.
+        """
         kx, kp = jax.random.split(_key(seed))
         dims = (10, 10, 10)
         x = cp_random_data(kx, dims, 3)
         p = sample_cp_projection(kp, 12, dims, 4)
         got = cp_inner_products(x, p, interpret=True)
+        want = project(p, x)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("d,k", [(9, 13), (7, 1), (11, 8), (8, 17)])
+    def test_padded_nonaligned_shapes_vs_ref(self, d, k):
+        """Mode-dim padding (d % 8 != 0) and K-block padding (k % 8 != 0)
+        must not change any of the K outputs vs the unpadded oracle."""
+        kx, kp = jax.random.split(_key(d * 100 + k))
+        dims = (d, d, d)
+        x = cp_random_data(kx, dims, 2)
+        p = sample_cp_projection(kp, k, dims, 3)
+        got = cp_inner_products(x, p, interpret=True)
+        assert got.shape == (k,)
         want = project(p, x)
         np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
@@ -79,14 +95,27 @@ class TestTTInnerKernel:
         want = ref.tt_inner_ref(xc, pc)
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
-    @settings(max_examples=10, deadline=None)
-    @given(seed=st.integers(0, 2**16))
+    @pytest.mark.parametrize("seed", range(6))
     def test_ops_wrapper_vs_core_projection(self, seed):
+        """dims=9 and K=10 exercise mode-dim + K-block padding for TT."""
         kx, kp = jax.random.split(_key(seed))
         dims = (9, 9, 9)
         x = tt_random_data(kx, dims, 3)
         p = sample_tt_projection(kp, 10, dims, 2)
         got = tt_inner_products(x, p, interpret=True)
+        want = project(p, x)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("d,k", [(10, 13), (7, 1), (13, 9)])
+    def test_padded_nonaligned_shapes_vs_ref(self, d, k):
+        """Non-aligned mode dims and K vs the core projection oracle, with
+        boundary-rank zero-padding in the same run."""
+        kx, kp = jax.random.split(_key(d * 37 + k))
+        dims = (d, d, d)
+        x = tt_random_data(kx, dims, 2)
+        p = sample_tt_projection(kp, k, dims, 3)
+        got = tt_inner_products(x, p, interpret=True)
+        assert got.shape == (k,)
         want = project(p, x)
         np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
@@ -107,10 +136,12 @@ class TestSRPPackKernel:
         got = srp_pack_pallas(v, block_b=8, interpret=True)
         np.testing.assert_array_equal(got, ref.srp_pack_ref(v))
 
-    @settings(max_examples=15, deadline=None)
-    @given(b=st.integers(1, 20), k=st.integers(1, 70), seed=st.integers(0, 999))
-    def test_ops_wrapper_ragged(self, b, k, seed):
-        v = jax.random.normal(_key(seed), (b, k))
+    @pytest.mark.parametrize("b,k", [(1, 1), (3, 31), (5, 33), (7, 40),
+                                     (8, 70), (13, 64), (20, 5), (9, 96)])
+    def test_ops_wrapper_ragged(self, b, k):
+        """K -> multiple-of-32 padding with -1 fill (sign bit 0) and batch
+        padding must reproduce the unpadded reference exactly."""
+        v = jax.random.normal(_key(b * 1000 + k), (b, k))
         got = srp_pack(v, interpret=True)
         want = ref.srp_pack_ref(v)
         np.testing.assert_array_equal(got, want)
@@ -137,10 +168,10 @@ class TestE2LSHQuantKernel:
         got = e2lsh_quant_pallas(v, offs, w, block_b=8, interpret=True)
         np.testing.assert_array_equal(got, ref.e2lsh_quant_ref(v, offs, w))
 
-    @settings(max_examples=15, deadline=None)
-    @given(b=st.integers(1, 20), seed=st.integers(0, 999))
-    def test_ops_wrapper_ragged_vs_core(self, b, seed):
-        kv, kb = jax.random.split(_key(seed))
+    @pytest.mark.parametrize("b", [1, 2, 5, 8, 9, 13, 20])
+    def test_ops_wrapper_ragged_vs_core(self, b):
+        """Batch padding to block_b must leave the B live rows unchanged."""
+        kv, kb = jax.random.split(_key(b))
         v = 5.0 * jax.random.normal(kv, (b, 12))
         offs = jax.random.uniform(kb, (12,), minval=0.0, maxval=2.0)
         got = e2lsh_quantize(v, offs, 2.0, interpret=True)
