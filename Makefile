@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-index
+.PHONY: test bench bench-index bench-index-sharded
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -14,3 +14,6 @@ bench:
 
 bench-index:
 	$(PYTHON) -m benchmarks.index_qps
+
+bench-index-sharded:
+	$(PYTHON) -m benchmarks.index_sharded

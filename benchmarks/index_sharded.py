@@ -1,0 +1,124 @@
+"""Sharded vs single-device LSH index: build time, QPS at batch sizes
+{1, 64, 1024}, and recall@10 parity at S in {1, 2, 4} simulated shards.
+
+Run standalone (``python -m benchmarks.index_sharded``) the module forces a
+4-device host platform (``--xla_force_host_platform_device_count``) so the
+shard_map path is exercised; imported from ``benchmarks.run`` it uses
+whatever devices exist (the vmapped fallback on one device — same math).
+
+CSV rows (name,us_per_call,derived):
+
+  index_sharded/build_s{S}          us = build wall time, derived = corpus n
+  index_sharded/qps_s{S}_b{B}       us = per-query latency, derived = QPS
+  index_sharded/recall10_s{S}       derived = recall@10 | mean candidates
+  index_sharded/qps_ratio_s{S}      derived = sharded/single-device QPS
+                                    at the largest batch (>= 0.5 target)
+
+``run()`` also appends a trajectory entry to BENCH_index.json at the repo
+root (build time, QPS, recall@10 per shard count) so later PRs can compare
+against this baseline.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+# standalone entrypoint only: force shards-many host devices (must happen
+# before jax first initialises; a plain import never sets the flag)
+if __name__ == "__main__" and "jax" not in sys.modules:
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import (DeviceLSHIndex, ShardedLSHIndex, make_family,
+                        recall_at_k)
+
+DIMS = (8, 8, 8)
+N_CLUSTERS, PER_CLUSTER = 512, 8           # clustered corpus: real neighbors
+N_CORPUS = N_CLUSTERS * PER_CLUSTER
+NOISE = 0.15
+N_RECALL_QUERIES = 64
+BATCH_SIZES = (1, 64, 1024)
+SHARD_COUNTS = (1, 2, 4)
+
+_TRAJECTORY = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_index.json")
+
+
+def _data():
+    kc, kn, kq, kf = jax.random.split(jax.random.PRNGKey(11), 4)
+    centers = jax.random.normal(kc, (N_CLUSTERS,) + DIMS)
+    corpus = (jnp.repeat(centers, PER_CLUSTER, axis=0)
+              + NOISE * jax.random.normal(kn, (N_CORPUS,) + DIMS))
+    queries = (jnp.tile(centers, (max(BATCH_SIZES) // N_CLUSTERS + 1,)
+                        + (1,) * len(DIMS))[:max(BATCH_SIZES)]
+               + NOISE * jax.random.normal(kq, (max(BATCH_SIZES),) + DIMS))
+    fam = make_family(kf, "cp-e2lsh", DIMS, num_codes=4, num_tables=8,
+                      rank=2, bucket_width=16.0)
+    return corpus, queries, fam
+
+
+def _append_trajectory(entry: dict) -> None:
+    history = []
+    if os.path.exists(_TRAJECTORY):
+        try:
+            with open(_TRAJECTORY) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(entry)
+    with open(_TRAJECTORY, "w") as f:
+        json.dump(history, f, indent=1)
+
+
+def run() -> list[str]:
+    rows = []
+    corpus, queries, fam = _data()
+
+    # single-device reference
+    single = DeviceLSHIndex(fam, metric="euclidean").build(corpus)
+    jax.block_until_ready(single.sorted_keys)
+    b_max = max(BATCH_SIZES)
+    us = time_fn(lambda qb: single.query_batch(qb, topk=10),
+                 queries[:b_max], warmup=1, iters=5)
+    single_qps = b_max / (us / 1e6)
+
+    entry = {"n_devices": len(jax.devices()), "corpus_n": N_CORPUS,
+             "single_device_qps_b1024": round(single_qps),
+             "shards": {}}
+    for s in SHARD_COUNTS:
+        t0 = time.perf_counter()
+        idx = ShardedLSHIndex(fam, metric="euclidean", shards=s).build(corpus)
+        jax.block_until_ready(idx.sorted_keys)
+        build_us = (time.perf_counter() - t0) * 1e6
+        rows.append(emit(f"index_sharded/build_s{s}", build_us, N_CORPUS))
+        cell = {"build_s": build_us / 1e6,
+                "shard_map": idx.mesh is not None, "qps": {}}
+        for b in BATCH_SIZES:
+            us = time_fn(lambda qb: idx.query_batch(qb, topk=10),
+                         queries[:b], warmup=1, iters=5)
+            qps = b / (us / 1e6)
+            rows.append(emit(f"index_sharded/qps_s{s}_b{b}", us / b,
+                             f"{qps:.0f}"))
+            cell["qps"][f"b{b}"] = round(qps)
+        rows.append(emit(f"index_sharded/qps_ratio_s{s}", 0.0,
+                         f"{cell['qps'][f'b{b_max}'] / single_qps:.2f}"))
+        stats = recall_at_k(idx, queries[:N_RECALL_QUERIES], topk=10)
+        rows.append(emit(
+            f"index_sharded/recall10_s{s}", 0.0,
+            f"{stats['recall']:.3f}|{stats['mean_candidates']:.0f}"))
+        cell["recall10"] = round(stats["recall"], 4)
+        entry["shards"][f"s{s}"] = cell
+
+    _append_trajectory(entry)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -5,8 +5,8 @@
 - projections:    CP/TT/dense random projection families (Defs 8-9)
 - lsh:            CP-E2LSH, TT-E2LSH, CP-SRP, TT-SRP + naive baselines (Defs 10-13)
 - index:          multi-table (K, L) ANN indexes with exact in-format re-rank
-                  (device-resident batched DeviceLSHIndex + host-dict
-                  HostLSHIndex reference)
+                  (device-resident batched DeviceLSHIndex, mesh-sharded
+                  ShardedLSHIndex + host-dict HostLSHIndex reference)
 - theory:         closed-form collision probabilities, rank conditions
 """
 
@@ -27,5 +27,5 @@ from repro.core.lsh import (LSHFamily, make_family, e2lsh_discretize,
                             srp_discretize, pack_bits, unpack_bits,
                             naive_storage_size)
 from repro.core.index import (LSHIndex, DeviceLSHIndex, HostLSHIndex,
-                              brute_force, recall_at_k)
+                              ShardedLSHIndex, brute_force, recall_at_k)
 from repro.core import theory

@@ -10,6 +10,11 @@ query-time is one jit-compiled program over a (B, ...) query batch —
 vmapped ``searchsorted`` bucket lookup, bounded candidate gathering with
 masking, and exact in-format re-rank via ``contractions``.
 
+``ShardedLSHIndex`` partitions the corpus into S contiguous shards, each
+with its own (L, n/S) sorted tables, and merges per-shard top-k results
+globally — same results as ``DeviceLSHIndex``, laid out for a mesh (the
+shard_map placement lives in ``repro.distributed.index_sharding``).
+
 ``HostLSHIndex`` is the FAISS-style host path (Python dict buckets, one
 query at a time), kept for A/B comparison and as the semantics reference.
 
@@ -187,16 +192,16 @@ def _max_run_length(sorted_keys: jax.Array) -> jax.Array:
     return jnp.max(idx - run_start + 1)
 
 
-def _gather_candidates(family, sorted_keys, perm, mults, queries, cap):
+def _probe_tables(sorted_keys, perm, keys, cap):
     """-> (cand (B, L*cap) int32 with -1 for invalid, valid (B, L*cap) bool).
 
-    For each query and table: searchsorted into the sorted key array, gather
+    keys: (L, B) uint32 query bucket keys (already hashed + combined). For
+    each query and table: searchsorted into the sorted key array, gather
     the next `cap` positions, keep those still inside the bucket (same key),
     then sort + mask duplicates so each corpus id appears at most once.
+    `perm` entries >= n (the sharded pad sentinel) are masked like misses.
     """
     n = sorted_keys.shape[1]
-    codes = family.hash_batch(queries)                    # (B, L, K)
-    keys = _combine_codes(codes, mults).T                 # (L, B)
     starts = jax.vmap(
         lambda sk, q: jnp.searchsorted(sk, q, side="left"))(sorted_keys, keys)
     pos = starts[:, :, None] + jnp.arange(cap, dtype=starts.dtype)  # (L, B, cap)
@@ -207,16 +212,71 @@ def _gather_candidates(family, sorted_keys, perm, mults, queries, cap):
     ids = jax.vmap(lambda pm, p: pm[p])(perm, posc)       # (L, B, cap)
     b = keys.shape[1]
     cand = jnp.where(hit, ids, n).transpose(1, 0, 2).reshape(b, -1)
-    cand = jnp.sort(cand, axis=1)                         # invalid (=n) last
+    cand = jnp.sort(cand, axis=1)                         # invalid (>=n) last
     dup = jnp.concatenate(
         [jnp.zeros((b, 1), bool), cand[:, 1:] == cand[:, :-1]], axis=1)
     valid = (cand < n) & ~dup
     return jnp.where(valid, cand, -1).astype(jnp.int32), valid
 
 
+def _gather_candidates(family, sorted_keys, perm, mults, queries, cap):
+    """Hash a query batch and probe the tables (see _probe_tables)."""
+    codes = family.hash_batch(queries)                    # (B, L, K)
+    keys = _combine_codes(codes, mults).T                 # (L, B)
+    return _probe_tables(sorted_keys, perm, keys, cap)
+
+
 @functools.partial(jax.jit, static_argnames=("cap",))
 def _device_candidates(family, sorted_keys, perm, mults, queries, *, cap):
     return _gather_candidates(family, sorted_keys, perm, mults, queries, cap)
+
+
+def _bad_score(metric: str) -> float:
+    return jnp.inf if metric == "euclidean" else -jnp.inf
+
+
+def _select_topk(metric, topk, cand, scores, valid):
+    """Stable two-key sort -> (ids (B, topk) with -1 fill, scores (B, topk)).
+
+    Primary key: validity (invalid slots strictly last, independent of their
+    score values); secondary key: the score in rank order (ascending distance
+    / descending similarity, NaN after every finite score — XLA's total
+    order, matching np.argsort in the host path). The stable sort breaks
+    score ties by candidate position, i.e. ascending corpus id, which is
+    what makes sharded and single-device selections bit-identical.
+    """
+    order_key = scores if metric == "euclidean" else -scores
+    _, _, s_cand, s_scores, s_valid = jax.lax.sort(
+        (~valid, order_key, cand, scores, valid),
+        dimension=1, is_stable=True, num_keys=2)
+    k = min(topk, cand.shape[1])
+    bad = _bad_score(metric)
+    ids = jnp.where(s_valid[:, :k], s_cand[:, :k], -1)
+    out_scores = jnp.where(s_valid[:, :k], s_scores[:, :k], bad)
+    if k < topk:
+        ids = jnp.pad(ids, ((0, 0), (0, topk - k)), constant_values=-1)
+        out_scores = jnp.pad(out_scores, ((0, 0), (0, topk - k)),
+                             constant_values=bad)
+    return ids, out_scores
+
+
+def _rank_candidates(metric, topk, queries, corpus, cand, valid):
+    """(cand, valid) (B, W) -> (ids (B, topk), scores (B, topk), n_cand (B,)).
+
+    Exact in-format re-rank of every valid candidate followed by the
+    validity-aware top-k selection. Rows with no valid candidate come out
+    all -1 / bad-fill even when scores are NaN or +/-inf (e.g. a zero-norm
+    query under cosine) — selection never trusts score sentinels alone.
+    """
+    n_cand = valid.sum(axis=1, dtype=jnp.int32)
+    safe = jnp.where(valid, cand, 0)
+    sub = _tree_index(corpus, safe)                       # leaves (B, C, ...)
+    score = _score_fn(metric)
+    scores = jax.vmap(
+        lambda q, ys: jax.vmap(lambda y: score(q, y))(ys))(queries, sub)
+    scores = jnp.where(valid, scores, _bad_score(metric))
+    ids, out_scores = _select_topk(metric, topk, cand, scores, valid)
+    return ids, out_scores, n_cand
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "topk", "cap"))
@@ -225,24 +285,7 @@ def _device_query(family, corpus, sorted_keys, perm, mults, queries, *,
     """One program from query batch to top-k: hash -> probe -> gather -> rank."""
     cand, valid = _gather_candidates(family, sorted_keys, perm, mults,
                                      queries, cap)
-    n_cand = valid.sum(axis=1, dtype=jnp.int32)
-    safe = jnp.where(valid, cand, 0)
-    sub = _tree_index(corpus, safe)                       # leaves (B, C, ...)
-    score = _score_fn(metric)
-    scores = jax.vmap(
-        lambda q, ys: jax.vmap(lambda y: score(q, y))(ys))(queries, sub)
-    bad = jnp.inf if metric == "euclidean" else -jnp.inf
-    scores = jnp.where(valid, scores, bad)
-    k = min(topk, cand.shape[1])
-    _, sel = jax.lax.top_k(-scores if metric == "euclidean" else scores, k)
-    ids = jnp.where(jnp.take_along_axis(valid, sel, axis=1),
-                    jnp.take_along_axis(cand, sel, axis=1), -1)
-    out_scores = jnp.take_along_axis(scores, sel, axis=1)
-    if k < topk:
-        ids = jnp.pad(ids, ((0, 0), (0, topk - k)), constant_values=-1)
-        out_scores = jnp.pad(out_scores, ((0, 0), (0, topk - k)),
-                             constant_values=bad)
-    return ids, out_scores, n_cand
+    return _rank_candidates(metric, topk, queries, corpus, cand, valid)
 
 
 @dataclasses.dataclass
@@ -330,6 +373,211 @@ class DeviceLSHIndex:
 
 
 LSHIndex = DeviceLSHIndex  # default deployment
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded index (per-shard sorted tables + global top-k merge)
+# ---------------------------------------------------------------------------
+
+
+_PAD_KEY = np.uint32(0xFFFFFFFF)  # bucket key of shard-padding slots
+
+
+def _shard_topk(metric, topk, cap, queries, corpus_s, sorted_keys_s, perm_s,
+                keys, offset):
+    """One shard's probe + re-rank -> ((B, topk) global ids, scores, n_cand).
+
+    Operates on the shard-local (L, n_s) tables and (n_s, ...) corpus slice;
+    ids come back already offset into the global corpus numbering (-1 fill).
+    """
+    cand, valid = _probe_tables(sorted_keys_s, perm_s, keys, cap)
+    ids, scores, n_cand = _rank_candidates(metric, topk, queries, corpus_s,
+                                           cand, valid)
+    return jnp.where(ids >= 0, ids + offset, -1), scores, n_cand
+
+
+def _merge_topk(metric, topk, ids, scores, n_cand):
+    """(S, B, k) per-shard top-k -> global (ids, scores, n_cand).
+
+    Shard-major concatenation + the same stable validity-aware selection as
+    the single-device path: score ties fall back to concat position, which
+    is (shard, within-shard rank) = ascending global id — so the merged
+    top-k is bit-identical to ranking all candidates in one table.
+    """
+    s, b, k = ids.shape
+    flat_ids = ids.transpose(1, 0, 2).reshape(b, s * k)
+    flat_scores = scores.transpose(1, 0, 2).reshape(b, s * k)
+    out_ids, out_scores = _select_topk(metric, topk, flat_ids, flat_scores,
+                                       flat_ids >= 0)
+    return out_ids, out_scores, n_cand.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "topk", "cap"))
+def _sharded_query_vmap(family, corpus_sh, sorted_keys, perm, mults, offsets,
+                        queries, *, metric, topk, cap):
+    """Single-program sharded query without a mesh: vmap over the S axis.
+
+    Used when fewer devices than shards exist (e.g. the 1-device tier-1
+    run); identical math to the shard_map program in
+    repro.distributed.index_sharding.
+    """
+    codes = family.hash_batch(queries)                   # replicated hashing
+    keys = _combine_codes(codes, mults).T                # (L, B)
+    per_shard = jax.vmap(
+        lambda cs, sk, pm, off: _shard_topk(metric, topk, cap, queries, cs,
+                                            sk, pm, keys, off)
+    )(corpus_sh, sorted_keys, perm, offsets)
+    return _merge_topk(metric, topk, *per_shard)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _sharded_candidates(family, sorted_keys, perm, mults, offsets, queries, *,
+                        cap):
+    """-> (cand (B, S*L*cap) global ids with -1 fill, valid bool mask)."""
+    codes = family.hash_batch(queries)
+    keys = _combine_codes(codes, mults).T
+    def one(sk, pm, off):
+        cand, valid = _probe_tables(sk, pm, keys, cap)
+        return jnp.where(valid, cand + off, -1), valid
+    cand, valid = jax.vmap(one)(sorted_keys, perm, offsets)  # (S, B, W)
+    s, b, w = cand.shape
+    return (cand.transpose(1, 0, 2).reshape(b, s * w),
+            valid.transpose(1, 0, 2).reshape(b, s * w))
+
+
+@dataclasses.dataclass
+class ShardedLSHIndex:
+    """Corpus-sharded (K, L) index over a named mesh axis with a global
+    top-k merge — the multi-host layout of ``DeviceLSHIndex``.
+
+    The corpus is partitioned into ``shards`` contiguous slices; each shard
+    holds its own (L, n_s) sorted bucket keys + permutation (local ids, pad
+    slots marked with the n_s sentinel) and its (n_s, ...) corpus slice.
+    A query batch runs as one jit program: replicated hashing, per-shard
+    searchsorted/gather/re-rank (via ``shard_map`` when a mesh carries the
+    shard axis, ``vmap`` otherwise), then a global merge of the per-shard
+    (scores, global ids). With the default exact cap the merged top-k is
+    bit-identical to ``DeviceLSHIndex`` for any shard count.
+
+    An explicit ``bucket_cap`` truncates each *shard's* slice of a bucket,
+    so the union of candidates can exceed the single-device truncation (up
+    to S*L*cap) — recall can only improve, throughput bounds are per shard.
+    """
+
+    family: LSHFamily
+    metric: str = "euclidean"  # or "cosine"
+    seed: int = 0
+    shards: int = 1
+    bucket_cap: int | None = None  # None -> exact (largest per-shard bucket)
+    keep_corpus: bool = True   # False drops the unsharded copy after build
+                               # (recall_at_k / brute-force references need
+                               # it; at real multi-host scale it won't fit)
+
+    corpus: Any = None             # original pytree (reference APIs only)
+    corpus_sharded: Any = None     # leaves (S, n_s, ...), zero-padded
+    size: int = 0
+    shard_size: int = 0            # n_s = ceil(n / S)
+    sorted_keys: jax.Array | None = None  # (S, L, n_s) uint32
+    perm: jax.Array | None = None         # (S, L, n_s) int32, pad -> n_s
+    offsets: jax.Array | None = None      # (S,) int32 global-id offsets
+    cap: int = 0
+    mesh: Any = None               # jax Mesh carrying the shard axis, or None
+    mesh_axis: str | None = None
+    _mults: np.ndarray | None = None
+
+    def __post_init__(self):
+        _check_metric(self.metric)
+        if int(self.shards) < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        self._mults = _make_mults(self.seed, self.family.num_codes)
+
+    # -- build --------------------------------------------------------------
+
+    def build(self, corpus, batch_size: int = 1024) -> "ShardedLSHIndex":
+        from repro.distributed import index_sharding  # deferred: core<->dist
+
+        self.corpus = corpus if self.keep_corpus else None
+        n = jax.tree.leaves(corpus)[0].shape[0]
+        self.size = n
+        s = int(self.shards)
+        n_s = -(-n // s)
+        self.shard_size = n_s
+        pad = s * n_s - n
+        all_keys = _bucket_keys(self.family, self._mults, corpus,
+                                batch_size)                # (n, L)
+        keys_sh = jnp.pad(all_keys, ((0, pad), (0, 0)),
+                          constant_values=_PAD_KEY)
+        keys_sh = keys_sh.reshape(s, n_s, -1).transpose(0, 2, 1)  # (S, L, n_s)
+        perm_local = jnp.argsort(keys_sh, axis=2,
+                                 stable=True).astype(jnp.int32)
+        self.sorted_keys = jnp.take_along_axis(keys_sh, perm_local, axis=2)
+        self.offsets = jnp.arange(s, dtype=jnp.int32) * n_s
+        # pad slots (global id >= n) get the n_s sentinel: a probe that lands
+        # on one (even via a _PAD_KEY collision) is masked as a miss.
+        is_pad = (self.offsets[:, None, None] + perm_local) >= n
+        self.perm = jnp.where(is_pad, n_s, perm_local)
+        self.corpus_sharded = jax.tree.map(
+            lambda a: jnp.pad(
+                a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)
+            ).reshape((s, n_s) + a.shape[1:]), corpus)
+        if self.bucket_cap is None:
+            self.cap = int(_max_run_length(
+                self.sorted_keys.reshape(s * self.family.num_tables, n_s)))
+            if self.cap * self.family.num_tables > n_s:
+                warnings.warn(
+                    f"ShardedLSHIndex: largest per-shard bucket has "
+                    f"{self.cap} of {n_s} items, so the exact default cap "
+                    f"gathers up to S*L*cap="
+                    f"{s * self.family.num_tables * self.cap} candidates "
+                    "per query (more than a shard holds). The family is too "
+                    "coarse for this data; raise num_codes / shrink "
+                    "bucket_width, or pass an explicit bucket_cap to bound "
+                    "per-shard work at some recall cost.")
+        else:
+            self.cap = min(int(self.bucket_cap), n_s)
+        self.mesh, self.mesh_axis = index_sharding.resolve_mesh(s)
+        if self.mesh is not None:
+            put = lambda tree: index_sharding.place_sharded(
+                tree, self.mesh, self.mesh_axis)
+            self.sorted_keys = put(self.sorted_keys)
+            self.perm = put(self.perm)
+            self.offsets = put(self.offsets)
+            self.corpus_sharded = put(self.corpus_sharded)
+        return self
+
+    # -- query --------------------------------------------------------------
+
+    def candidates_batch(self, queries) -> tuple[jax.Array, jax.Array]:
+        """-> (cand (B, S*L*cap) global ids with -1 fill, valid bool)."""
+        return _sharded_candidates(self.family, self.sorted_keys, self.perm,
+                                   jnp.asarray(self._mults), self.offsets,
+                                   queries, cap=self.cap)
+
+    def candidates(self, x) -> np.ndarray:
+        """Union of bucket members over shards and tables (single query)."""
+        cand, valid = self.candidates_batch(_tree_index(x, None))
+        cand = np.asarray(cand[0])
+        return np.sort(cand[np.asarray(valid[0])]).astype(np.int64)
+
+    def query_batch(self, queries, topk: int = 10):
+        """Same contract as DeviceLSHIndex.query_batch; ids are global."""
+        args = (self.family, self.corpus_sharded, self.sorted_keys, self.perm,
+                jnp.asarray(self._mults), self.offsets, queries)
+        if self.mesh is not None:
+            from repro.distributed import index_sharding
+            return index_sharding.shard_map_query(
+                *args, metric=self.metric, topk=topk, cap=self.cap,
+                mesh=self.mesh, axis=self.mesh_axis)
+        return _sharded_query_vmap(*args, metric=self.metric, topk=topk,
+                                   cap=self.cap)
+
+    def query(self, x, topk: int = 10) -> tuple[np.ndarray, np.ndarray, int]:
+        """Single-query convenience wrapper; same contract as HostLSHIndex."""
+        ids, scores, n_cand = self.query_batch(_tree_index(x, None), topk)
+        ids = np.asarray(ids[0])
+        mask = ids >= 0
+        return (ids[mask].astype(np.int64), np.asarray(scores[0])[mask],
+                int(n_cand[0]))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,92 @@
+"""Mesh placement + shard_map query program for ``ShardedLSHIndex``.
+
+The index math (per-shard probe, re-rank, global top-k merge) lives in
+``repro.core.index``; this module decides *where* the per-shard tables run
+and provides the ``shard_map`` variant of the query program:
+
+- ``resolve_mesh``: map a shard count to (mesh, axis). An active
+  ``distributed.sharding.axis_rules`` context wins — the ``lsh_shard``
+  logical name resolves through the same rule machinery as every other
+  logical dim, so the index shards over ``data`` on the production meshes
+  and over the dedicated 1-D ``shard`` mesh in tests. Without a context, a
+  1-D mesh over the first S local devices is built; with fewer devices than
+  shards the caller falls back to the vmapped single-device program.
+- ``place_sharded``: NamedSharding placement of the (S, ...)-leading index
+  arrays (sorted keys, permutations, offsets, corpus slices).
+- ``shard_map_query``: one jit program — replicated hashing outside the
+  shard_map, per-shard searchsorted/gather/re-rank inside it (each device
+  sees its (1, ...) block), then the global top-k merge on the gathered
+  per-shard results.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding
+
+# Logical dim name of the corpus-shard axis (see sharding.DEFAULT_RULES) and
+# the mesh axis name used when this module builds its own 1-D mesh.
+SHARD_LOGICAL = "lsh_shard"
+SHARD_AXIS = "shard"
+
+
+def resolve_mesh(shards: int) -> tuple[Mesh, str] | tuple[None, None]:
+    """-> (mesh, axis name) to lay the S-sharded index over, or (None, None).
+
+    Inside an ``axis_rules`` context the ``lsh_shard`` rule must resolve to
+    a single mesh axis whose size equals ``shards`` (the index's leading
+    dim is exactly one slice per device along that axis); otherwise a
+    dedicated 1-D mesh over the first ``shards`` local devices is built.
+    """
+    ctx = sharding.current()
+    if ctx is not None:
+        axes = ctx.rules.get(SHARD_LOGICAL)
+        if axes and len(axes) == 1 and ctx.mesh.shape[axes[0]] == shards:
+            return ctx.mesh, axes[0]
+        return None, None  # context active but rule unusable -> vmap path
+    devices = jax.devices()
+    if shards <= len(devices):
+        return Mesh(np.asarray(devices[:shards]), (SHARD_AXIS,)), SHARD_AXIS
+    return None, None
+
+
+def place_sharded(tree, mesh: Mesh, axis: str):
+    """device_put every leaf with its leading dim sharded over ``axis``."""
+    sh = NamedSharding(mesh, P(axis))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "topk", "cap", "mesh", "axis"))
+def shard_map_query(family, corpus_sh, sorted_keys, perm, mults, offsets,
+                    queries, *, metric, topk, cap, mesh, axis):
+    """One jit program: hash (replicated) -> per-shard top-k (shard_map)
+    -> global merge. Bit-identical to core.index._sharded_query_vmap."""
+    from repro.core import index as index_lib
+
+    codes = family.hash_batch(queries)                   # replicated hashing
+    keys = index_lib._combine_codes(codes, mults).T      # (L, B)
+
+    def body(corpus_s, sk, pm, off, keys_r, queries_r):
+        # blocks carry a leading shard dim of 1 on the sharded operands
+        ids, scores, n_cand = index_lib._shard_topk(
+            metric, topk, cap, queries_r,
+            jax.tree.map(lambda a: a[0], corpus_s), sk[0], pm[0],
+            keys_r, off[0])
+        return ids[None], scores[None], n_cand[None]
+
+    sharded, rep = P(axis), P()
+    ids, scores, n_cand = shard_map(
+        body, mesh,
+        in_specs=(sharded, sharded, sharded, sharded, rep, rep),
+        out_specs=(sharded, sharded, sharded),
+        check_rep=False,
+    )(corpus_sh, sorted_keys, perm, offsets, keys, queries)
+    return index_lib._merge_topk(metric, topk, ids, scores, n_cand)

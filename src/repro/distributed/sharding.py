@@ -55,6 +55,10 @@ DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
     "layers": None,
     "lsh_hash": None,
     "lsh_rank": None,
+    # corpus-shard axis of the sharded LSH index: the dedicated 1-D "shard"
+    # mesh in tests, the data axis on the production meshes (one of the two
+    # survives the missing-axis cleaning in axis_rules)
+    "lsh_shard": ("shard", "data"),
 }
 
 

@@ -203,6 +203,101 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     }
 
 
+def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
+                         dims: tuple = (8, 8, 8), batch: int = 1024,
+                         topk: int = 10, num_codes: int = 4,
+                         num_tables: int = 8, bucket_cap: int = 64) -> dict:
+    """AOT-lower + compile the sharded LSH index query program.
+
+    One corpus shard per device along the mesh's data axis (the
+    ``lsh_shard`` rule), index arrays and corpus slices sharded with the
+    same NamedSharding machinery as the model cells, queries replicated —
+    records the memory / FLOP / collective profile of serving one query
+    batch so the roofline report can account the ANN workload next to the
+    model workloads.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.lsh import make_family
+    from repro.distributed import index_sharding
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with axis_rules(mesh) as ctx:
+        shards = ctx.axis_size(ctx.rules["lsh_shard"])
+        shard_mesh, shard_axis = index_sharding.resolve_mesh(shards)
+        assert shard_axis is not None, "lsh_shard rule must resolve here"
+        n_s = -(-corpus_n // shards)
+        l, k = num_tables, num_codes
+        fam_sds = jax.eval_shape(
+            lambda key: make_family(key, "cp-e2lsh", dims, num_codes=k,
+                                    num_tables=l, rank=4),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        sds = jax.ShapeDtypeStruct
+        corpus_sds = sds((shards, n_s) + tuple(dims), jnp.float32)
+        keys_sds = sds((shards, l, n_s), jnp.uint32)
+        perm_sds = sds((shards, l, n_s), jnp.int32)
+        mults_sds = sds((k,), jnp.uint32)
+        off_sds = sds((shards,), jnp.int32)
+        q_sds = sds((batch,) + tuple(dims), jnp.float32)
+
+        shard_of = lambda s: named_sharding(
+            ("lsh_shard",) + (None,) * (len(s.shape) - 1), s.shape)
+        rep = NamedSharding(mesh, P())
+        fam_sh = jax.tree.map(lambda _: rep, fam_sds)
+
+        def step(fam, corpus_sh, sorted_keys, perm, mults, offsets, queries):
+            return index_sharding.shard_map_query(
+                fam, corpus_sh, sorted_keys, perm, mults, offsets, queries,
+                metric="euclidean", topk=topk, cap=bucket_cap,
+                mesh=shard_mesh, axis=shard_axis)
+
+        jitted = jax.jit(step, in_shardings=(
+            fam_sh, shard_of(corpus_sds), shard_of(keys_sds),
+            shard_of(perm_sds), rep, shard_of(off_sds), rep))
+        lowered = jitted.lower(fam_sds, corpus_sds, keys_sds, perm_sds,
+                               mults_sds, off_sds, q_sds)
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+            cost = cost[0] if cost else {}
+        colls = collective_stats(compiled.as_text())
+        fallbacks = sorted({(f[0], f[1], "/".join(f[2]))
+                            for f in ctx.fallbacks})
+
+    return {
+        "status": "ok",
+        "arch": "lsh-index",
+        "shape": f"n{corpus_n}_b{batch}",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": "lsh_query",
+        "shards": shards,
+        "shard_axis": shard_axis,
+        "corpus_n": corpus_n,
+        "batch": batch,
+        "bucket_cap": bucket_cap,
+        "compile_seconds": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_bytes": (mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+        },
+        "cost": {
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+        },
+        "collectives": colls,
+        "sharding_fallbacks": fallbacks,
+    }
+
+
 # ---------------------------------------------------------------------------
 # Roofline-exact costs ("scan calculus")
 #
@@ -296,9 +391,33 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--no-aux", action="store_true",
                     help="skip the unrolled roofline-exact aux compiles")
+    ap.add_argument("--lsh-index", action="store_true",
+                    help="lower the sharded LSH index query cell instead of "
+                         "the model cells")
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
+    if args.lsh_index:
+        failures = 0
+        for mp in ((False, True) if args.both_meshes else (args.multi_pod,)):
+            mesh_tag = "2x16x16" if mp else "16x16"
+            path = os.path.join(args.out, f"lsh_index__{mesh_tag}.json")
+            print(f"[dryrun] compile lsh-index x {mesh_tag} ...", flush=True)
+            try:
+                rec = lower_lsh_index_cell(mp)
+                print(f"[dryrun] ok      lsh-index x {mesh_tag}: "
+                      f"{rec['shards']} shards over '{rec['shard_axis']}', "
+                      f"{rec['cost']['flops_per_device']:.3e} flops/dev")
+            except Exception as e:
+                failures += 1
+                rec = {"status": "failed", "arch": "lsh-index",
+                       "mesh": mesh_tag, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                print(f"[dryrun] FAILED  lsh-index x {mesh_tag}: {e}")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+        print(f"[dryrun] done, {failures} failures")
+        return 1 if failures else 0
     if args.all:
         jobs = [(a, s, mp) for a in ARCH_IDS for s in SHAPES
                 for mp in ((False, True) if args.both_meshes

@@ -8,6 +8,15 @@ hashing (batched CP/TT Gram einsums -> the Pallas kernels on TPU), vmapped
 ``searchsorted`` bucket probes over the sorted key tables, and exact
 in-format re-rank — never leaving the accelerator until the final top-k.
 
+``LSHService(..., shards=S)`` serves through the mesh-sharded
+``ShardedLSHIndex``: the corpus is partitioned into S per-shard sorted
+tables (placed over a mesh axis when one is available, see
+``repro.distributed.index_sharding``), queries fan out to every shard and
+the per-shard top-k results merge globally. Global-id bookkeeping is
+automatic — each shard ranks local ids and offsets them into the corpus
+numbering before the merge, so callers always see corpus-global ids
+regardless of the shard count.
+
 ``LSHService(..., device=False)`` falls back to the host-dict
 ``HostLSHIndex`` path (per-query Python bucketing) for A/B comparison.
 """
@@ -21,7 +30,8 @@ from typing import Any, Sequence
 import jax
 import numpy as np
 
-from repro.core.index import DeviceLSHIndex, HostLSHIndex, _tree_index
+from repro.core.index import (DeviceLSHIndex, HostLSHIndex, ShardedLSHIndex,
+                              _tree_index)
 from repro.core.lsh import LSHFamily, make_family
 
 
@@ -56,8 +66,16 @@ class LSHService:
     """build() once, then serve query batches."""
 
     def __init__(self, family: LSHFamily, metric: str = "euclidean",
-                 device: bool = True, bucket_cap: int | None = None):
-        if device:
+                 device: bool = True, bucket_cap: int | None = None,
+                 shards: int | None = None):
+        if shards is not None:
+            if not device:
+                raise ValueError(
+                    "shards requires the device index (pass device=True); "
+                    "the host-dict path has no sharded layout")
+            self.index = ShardedLSHIndex(family, metric=metric, shards=shards,
+                                         bucket_cap=bucket_cap)
+        elif device:
             self.index = DeviceLSHIndex(family, metric=metric,
                                         bucket_cap=bucket_cap)
         else:
@@ -82,7 +100,7 @@ class LSHService:
         """
         n = jax.tree.leaves(queries)[0].shape[0]
         t0 = time.perf_counter()
-        if isinstance(self.index, DeviceLSHIndex):
+        if isinstance(self.index, (DeviceLSHIndex, ShardedLSHIndex)):
             ids, scores, n_cand = jax.block_until_ready(
                 self.index.query_batch(queries, topk=topk))
             ids, scores, n_cand = (np.asarray(ids), np.asarray(scores),
@@ -118,10 +136,11 @@ def build_service(key, kind: str, dims: Sequence[int], corpus, *,
                   metric: str | None = None, num_codes: int = 8,
                   num_tables: int = 8, rank: int = 4,
                   bucket_width: float = 4.0, device: bool = True,
-                  bucket_cap: int | None = None) -> LSHService:
+                  bucket_cap: int | None = None,
+                  shards: int | None = None) -> LSHService:
     metric = metric or ("cosine" if kind.endswith("srp") else "euclidean")
     fam = make_family(key, kind, dims, num_codes=num_codes,
                       num_tables=num_tables, rank=rank,
                       bucket_width=bucket_width)
     return LSHService(fam, metric=metric, device=device,
-                      bucket_cap=bucket_cap).build(corpus)
+                      bucket_cap=bucket_cap, shards=shards).build(corpus)

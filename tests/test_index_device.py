@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import DeviceLSHIndex, HostLSHIndex, make_family
+from repro.core.index import _combine_codes, _hash_one, _max_run_length
 from repro.core.lsh import ALL_KINDS
 
 DIMS = (4, 4, 4)
@@ -115,3 +116,102 @@ class TestDeviceIndexContract:
         ids, scores, _ = device.query(corpus[11], topk=1)
         assert ids.size == 1 and ids[0] == 11
         assert scores[0] < 1e-3
+
+
+class TestEmptyAndDegenerateQueries:
+    """Regression: the -1 fill must hold by construction — not via score
+    sentinels — for empty candidate sets and NaN-scored candidates."""
+
+    @pytest.mark.parametrize("kind,metric", [("cp-e2lsh", "euclidean"),
+                                             ("tt-e2lsh", "cosine")])
+    def test_empty_candidate_set_fills_minus_one(self, kind, metric):
+        corpus, _ = _data(1)
+        fam = make_family(jax.random.PRNGKey(42), kind, DIMS, num_codes=3,
+                          num_tables=4, rank=2, bucket_width=1.0)
+        host = HostLSHIndex(fam, metric=metric).build(corpus)
+        device = DeviceLSHIndex(fam, metric=metric).build(corpus)
+        far = 1e3 * jnp.ones(DIMS)      # lands in a bucket nothing occupies
+        assert host.candidates(far).size == 0, "fixture must yield empty set"
+        ids, scores, n_cand = device.query_batch(far[None], topk=TOPK)
+        assert int(n_cand[0]) == 0
+        assert (np.asarray(ids[0]) == -1).all()
+        assert np.isinf(np.asarray(scores[0])).all()
+        got, got_scores, n = device.query(far, topk=TOPK)
+        assert got.size == 0 and got_scores.size == 0 and n == 0
+
+    def test_mixed_batch_keeps_empty_row_masked(self):
+        corpus, _ = _data(1)
+        fam = make_family(jax.random.PRNGKey(42), "cp-e2lsh", DIMS,
+                          num_codes=3, num_tables=4, rank=2, bucket_width=1.0)
+        device = DeviceLSHIndex(fam, metric="euclidean").build(corpus)
+        batch = jnp.stack([1e3 * jnp.ones(DIMS), corpus[5]])
+        ids, _, n_cand = device.query_batch(batch, topk=3)
+        ids = np.asarray(ids)
+        assert int(n_cand[0]) == 0 and (ids[0] == -1).all()
+        assert ids[1, 0] == 5
+
+    def test_zero_norm_cosine_query_matches_host(self):
+        """NaN similarities must not drop candidates: device returns the
+        same ids as the host path (scores NaN), not a spurious -1 fill."""
+        corpus, _ = _data(2)
+        fam = make_family(jax.random.PRNGKey(42), "cp-srp", DIMS,
+                          num_codes=6, num_tables=4, rank=2)
+        host = HostLSHIndex(fam, metric="cosine").build(corpus)
+        device = DeviceLSHIndex(fam, metric="cosine").build(corpus)
+        zero = jnp.zeros(DIMS)
+        h_ids, h_scores, h_n = host.query(zero, topk=N_CORPUS)
+        d_ids, d_scores, d_n = device.query(zero, topk=N_CORPUS)
+        assert h_n == d_n
+        assert set(h_ids.tolist()) == set(d_ids.tolist())
+        if d_n:
+            assert np.isnan(d_scores).all() and np.isnan(h_scores).all()
+
+
+class TestBuildTimeEdgeCases:
+    """_max_run_length and the explicit bucket_cap truncation path."""
+
+    def test_max_run_length_cases(self):
+        cases = [
+            ([[1, 1, 2, 2, 2, 3]], 3),
+            ([[5, 5, 5, 5]], 4),
+            ([[7]], 1),
+            ([[1, 2, 3, 4]], 1),
+            ([[1, 2, 3, 3]], 2),                 # run at the end
+            ([[1, 1, 2, 3], [2, 2, 2, 3]], 3),   # max across tables
+        ]
+        for rows, want in cases:
+            got = int(_max_run_length(jnp.asarray(rows, jnp.uint32)))
+            assert got == want, (rows, got, want)
+
+    def test_default_cap_is_largest_build_bucket(self):
+        corpus, _ = _data(6)
+        fam = make_family(jax.random.PRNGKey(5), "srp", DIMS, num_codes=2,
+                          num_tables=3, rank=2)
+        host = HostLSHIndex(fam, metric="cosine").build(corpus)
+        device = DeviceLSHIndex(fam, metric="cosine").build(corpus)
+        largest = max(len(b) for t in host._tables for b in t.values())
+        assert device.cap == largest
+
+    def test_bucket_cap_truncates_in_corpus_order(self):
+        """cap < largest bucket: each probe keeps exactly the first `cap`
+        members of the bucket in corpus order (the build sort is stable),
+        never an arbitrary subset."""
+        corpus, queries = _data(5)
+        cap = 3
+        fam = make_family(jax.random.PRNGKey(11), "srp", DIMS, num_codes=1,
+                          num_tables=2, rank=2)   # 1-bit keys: huge buckets
+        host = HostLSHIndex(fam, metric="cosine").build(corpus)
+        assert max(len(b) for t in host._tables
+                   for b in t.values()) > cap, "fixture must overflow cap"
+        device = DeviceLSHIndex(fam, metric="cosine",
+                                bucket_cap=cap).build(corpus)
+        assert device.cap == cap
+        for i in range(N_QUERIES):
+            codes = np.asarray(_hash_one(fam, queries[i]))[None]
+            keys = _combine_codes(codes, host._mults)[0]
+            expected = set()
+            for t in range(fam.num_tables):
+                # host bucket lists are built in ascending corpus order
+                expected.update(host._tables[t].get(int(keys[t]), [])[:cap])
+            got = set(device.candidates(queries[i]).tolist())
+            assert got == expected, i
