@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-index bench-index-sharded
+.PHONY: test bench bench-index bench-index-sharded bench-index-mut
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -17,3 +17,6 @@ bench-index:
 
 bench-index-sharded:
 	$(PYTHON) -m benchmarks.index_sharded
+
+bench-index-mut:
+	$(PYTHON) -m benchmarks.index_mutation

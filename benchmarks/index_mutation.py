@@ -1,0 +1,180 @@
+"""Streaming-mutation benchmark: insert throughput vs full rebuild, delete
+cost, post-insert serving (QPS at batch 1024 + recall@10 against the
+effective corpus), and compaction, on an n=100k corpus (CPU-friendly).
+
+The acceptance bar for the segment store is that absorbing a batch of
+inserts costs >= 10x less than the O(n log n) full rebuild it replaces
+(`index_mut/insert_speedup`): an insert hashes + sorts only the batch into
+a delta segment, while a rebuild re-hashes and re-sorts the whole corpus.
+
+CSV rows (name,us_per_call,derived):
+
+  index_mut/build                us = full build wall time, derived = n
+  index_mut/rebuild              us = warm full rebuild (the cost an insert
+                                 avoids), derived = n
+  index_mut/insert_b{B}          us = per insert batch (median), derived =
+                                 items/s
+  index_mut/insert_speedup       derived = rebuild_us / insert_us (>= 10)
+  index_mut/delete_b{B}          us = per tombstone batch
+  index_mut/qps_post_insert_b1024   us = per-query latency, derived = QPS
+                                 with outstanding delta segments
+  index_mut/recall10_post_insert derived = recall@10 | mean candidates vs
+                                 the mutated (effective) corpus
+  index_mut/compact              us = compaction wall time, derived = n_live
+  index_mut/qps_post_compact_b1024  us = per-query latency, derived = QPS
+
+``run()`` appends a trajectory entry to BENCH_index.json at the repo root
+(tagged ``"bench": "index_mutation"``) so later PRs can compare. Set
+BENCH_MUT_N to shrink the corpus for smoke runs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import DeviceLSHIndex, make_family, recall_at_k
+
+DIMS = (8, 8, 8)
+N_CORPUS = int(os.environ.get("BENCH_MUT_N", 100_000))
+PER_CLUSTER = 8               # clustered corpus: real neighbors (see
+NOISE = 0.15                  # benchmarks/index_qps.py)
+INSERT_BATCH = 1024
+N_INSERTS = 6                 # timed insert batches (after 1 warmup)
+DELETE_BATCH = 1024
+QUERY_BATCH = 1024
+N_RECALL_QUERIES = 64
+BUCKET_CAP = 64               # bound probe width at this corpus scale
+
+_TRAJECTORY = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_index.json")
+
+
+def _data():
+    kc, kn, kq, ki, kf = jax.random.split(jax.random.PRNGKey(23), 5)
+    n_clusters = max(N_CORPUS // PER_CLUSTER, 1)
+    centers = jax.random.normal(kc, (n_clusters,) + DIMS)
+    corpus = (jnp.repeat(centers, PER_CLUSTER, axis=0)[:N_CORPUS]
+              + NOISE * jax.random.normal(kn, (N_CORPUS,) + DIMS))
+    queries = (jnp.tile(centers, (QUERY_BATCH // n_clusters + 1,)
+                        + (1,) * len(DIMS))[:QUERY_BATCH]
+               + NOISE * jax.random.normal(kq, (QUERY_BATCH,) + DIMS))
+    # inserts join existing clusters (streamed corpus churn, not outliers)
+    n_ins = (N_INSERTS + 1) * INSERT_BATCH
+    inserts = (jnp.tile(centers, (n_ins // n_clusters + 1,)
+                        + (1,) * len(DIMS))[:n_ins]
+               + NOISE * jax.random.normal(ki, (n_ins,) + DIMS))
+    fam = make_family(kf, "cp-e2lsh", DIMS, num_codes=4, num_tables=8,
+                      rank=2, bucket_width=16.0)
+    return corpus, queries, inserts, fam
+
+
+def _append_trajectory(entry: dict) -> None:
+    history = []
+    if os.path.exists(_TRAJECTORY):
+        try:
+            with open(_TRAJECTORY) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(entry)
+    with open(_TRAJECTORY, "w") as f:
+        json.dump(history, f, indent=1)
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run() -> list[str]:
+    rows = []
+    corpus, queries, inserts, fam = _data()
+    make_index = lambda: DeviceLSHIndex(
+        fam, metric="euclidean", bucket_cap=BUCKET_CAP,
+        max_deltas=N_INSERTS + 2)   # no auto-compact inside the timed loop
+
+    idx = make_index()
+    build_us = _timed(lambda: jax.block_until_ready(
+        idx.build(corpus).sorted_keys))
+    rows.append(emit("index_mut/build", build_us, N_CORPUS))
+    # warm rebuild: every jit program is compiled now, so this is the pure
+    # hash + sort cost a streaming insert competes against
+    rebuild_us = _timed(lambda: jax.block_until_ready(
+        make_index().build(corpus).sorted_keys))
+    rows.append(emit("index_mut/rebuild", rebuild_us, N_CORPUS))
+
+    # streaming inserts: one warmup batch compiles the delta-build programs,
+    # then each timed batch appends one more delta segment
+    batches = [jax.lax.dynamic_slice_in_dim(inserts, i * INSERT_BATCH,
+                                            INSERT_BATCH)
+               for i in range(N_INSERTS + 1)]
+    jax.block_until_ready(
+        idx.insert(batches[0]).store.deltas[-1].sorted_keys)
+    insert_times = []
+    for b in batches[1:]:
+        insert_times.append(_timed(lambda b=b: jax.block_until_ready(
+            idx.insert(b).store.deltas[-1].sorted_keys)))
+    insert_us = sorted(insert_times)[len(insert_times) // 2]
+    rows.append(emit(f"index_mut/insert_b{INSERT_BATCH}", insert_us,
+                     f"{INSERT_BATCH / (insert_us / 1e6):.0f}"))
+    rows.append(emit("index_mut/insert_speedup", 0.0,
+                     f"{rebuild_us / insert_us:.1f}x"))
+
+    # streaming deletes: tombstone a spread of effective ids (mask flip +
+    # effective-id recompute, no device rebuild)
+    rng = np.random.default_rng(7)
+    dead = rng.choice(idx.size, size=DELETE_BATCH, replace=False)
+    delete_us = _timed(lambda: idx.delete(dead))
+    rows.append(emit(f"index_mut/delete_b{DELETE_BATCH}", delete_us,
+                     DELETE_BATCH))
+
+    # serving with outstanding deltas + tombstones
+    us = time_fn(lambda qb: idx.query_batch(qb, topk=10),
+                 queries[:QUERY_BATCH], warmup=1, iters=5)
+    rows.append(emit(f"index_mut/qps_post_insert_b{QUERY_BATCH}",
+                     us / QUERY_BATCH,
+                     f"{QUERY_BATCH / (us / 1e6):.0f}"))
+    post_insert_qps = QUERY_BATCH / (us / 1e6)
+    stats = recall_at_k(idx, queries[:N_RECALL_QUERIES], topk=10)
+    rows.append(emit(
+        "index_mut/recall10_post_insert", 0.0,
+        f"{stats['recall']:.3f}|{stats['mean_candidates']:.0f}"))
+
+    # compaction folds everything back into one base segment
+    compact_us = _timed(lambda: jax.block_until_ready(
+        idx.compact().sorted_keys))
+    rows.append(emit("index_mut/compact", compact_us, idx.size))
+    us = time_fn(lambda qb: idx.query_batch(qb, topk=10),
+                 queries[:QUERY_BATCH], warmup=1, iters=5)
+    rows.append(emit(f"index_mut/qps_post_compact_b{QUERY_BATCH}",
+                     us / QUERY_BATCH,
+                     f"{QUERY_BATCH / (us / 1e6):.0f}"))
+
+    _append_trajectory({
+        "bench": "index_mutation",
+        "n_devices": len(jax.devices()),
+        "corpus_n": N_CORPUS,
+        "insert_batch": INSERT_BATCH,
+        "build_s": build_us / 1e6,
+        "rebuild_s": rebuild_us / 1e6,
+        "insert_batch_s": insert_us / 1e6,
+        "insert_speedup_vs_rebuild": round(rebuild_us / insert_us, 1),
+        "insert_items_per_s": round(INSERT_BATCH / (insert_us / 1e6)),
+        "qps_post_insert_b1024": round(post_insert_qps),
+        "recall10_post_insert": round(stats["recall"], 4),
+        "compact_s": compact_us / 1e6,
+        "qps_post_compact_b1024": round(QUERY_BATCH / (us / 1e6)),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,5 +1,5 @@
-"""Device-resident vs host-dict LSH index A/B: build time, QPS at batch
-sizes {1, 64, 1024}, and recall@10 parity (same family => same buckets).
+"""Device-resident vs host-index LSH A/B: build time, QPS at batch sizes
+{1, 64, 1024}, and recall@10 parity (same family => same buckets).
 
 CSV rows (name,us_per_call,derived):
 
@@ -11,6 +11,11 @@ CSV rows (name,us_per_call,derived):
 
 The device index is built with the default exact bucket cap, so both
 indexes probe identical candidate sets and recall@10 must match exactly.
+Since the segment refactor HostLSHIndex serves queries through the same
+shared planner (its dict tables remain the membership reference and
+dominate its build row), so the host QPS rows measure the one-query-at-a-
+time serving loop and speedup_b1024 is the batch-amortization win of the
+single jit-compiled batched program.
 """
 
 from __future__ import annotations

@@ -14,7 +14,7 @@ import time
 import jax
 
 from benchmarks.common import emit
-from repro.core import (DeviceLSHIndex, HostLSHIndex, brute_force,
+from repro.core import (DeviceLSHIndex, HostLSHIndex, brute_force_batch,
                         make_family)
 
 DIMS = (8, 8, 8)
@@ -34,8 +34,8 @@ def run() -> list[str]:
         k, l = (6, 8) if "e2lsh" in kind else (10, 8)
         fam = make_family(kf, kind, DIMS, num_codes=k, num_tables=l, rank=2,
                           bucket_width=6.0)
-        truth = [brute_force(metric, queries[i], corpus, topk=1)[0]
-                 for i in range(N_QUERIES)]  # shared, untimed ground truth
+        truth = brute_force_batch(metric, queries, corpus, topk=1)[0]
+        # shared, untimed ground truth: one batched score matrix
         for label, cls in (("device", DeviceLSHIndex), ("host", HostLSHIndex)):
             idx = cls(fam, metric=metric).build(corpus)
             idx.query(queries[0], topk=1)  # warm the jit cache before timing

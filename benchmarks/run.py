@@ -7,8 +7,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (collision, index_qps, index_sharded, kernels,
-                            recall, table1_e2lsh, table2_srp)
+    from benchmarks import (collision, index_mutation, index_qps,
+                            index_sharded, kernels, recall, table1_e2lsh,
+                            table2_srp)
     print("name,us_per_call,derived")
     rows = []
     rows += table1_e2lsh.run()
@@ -17,6 +18,7 @@ def main() -> None:
     rows += recall.run()
     rows += index_qps.run()
     rows += index_sharded.run()
+    rows += index_mutation.run()
     rows += kernels.run()
     print(f"# {len(rows)} benchmark rows", file=sys.stderr)
 

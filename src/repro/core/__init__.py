@@ -27,5 +27,7 @@ from repro.core.lsh import (LSHFamily, make_family, e2lsh_discretize,
                             srp_discretize, pack_bits, unpack_bits,
                             naive_storage_size)
 from repro.core.index import (LSHIndex, DeviceLSHIndex, HostLSHIndex,
-                              ShardedLSHIndex, brute_force, recall_at_k)
+                              ShardedLSHIndex, brute_force,
+                              brute_force_batch, recall_at_k)
+from repro.core.segments import SegmentStore, ShardedSegment, TableSegment
 from repro.core import theory

@@ -1,33 +1,45 @@
 """Multi-table LSH indexes for approximate nearest-neighbour search.
 
-The classic (K, L) construction on top of the paper's hash families:
-L tables, each keyed by the combination of K hashcodes. Two deployments:
+The classic (K, L) construction on top of the paper's hash families, built
+on the segment core in ``repro.core.segments``: every index is a
+``SegmentStore`` — one immutable base segment (per-table sorted uint32
+bucket keys + permutation + corpus slice) plus bounded delta segments
+(streaming inserts) and a tombstone mask (streaming deletes) — queried by a
+single shared planner: hash the batch once, probe every segment with the
+vmapped ``searchsorted``/gather path, filter tombstones inside the probe,
+re-rank exactly in format, and merge the per-segment top-k with the stable
+validity-aware two-key sort (the PR 2 shard merge, reused verbatim for
+segments). Three deployments share that planner:
 
-``DeviceLSHIndex`` (the default, exported as ``LSHIndex``) keeps the whole
-index device-resident: build-time sorts the (L, n) uint32 bucket keys into
-per-table sorted key arrays + permutation indices (all ``jax.Array``s), and
-query-time is one jit-compiled program over a (B, ...) query batch —
-vmapped ``searchsorted`` bucket lookup, bounded candidate gathering with
-masking, and exact in-format re-rank via ``contractions``.
+``DeviceLSHIndex`` (the default, exported as ``LSHIndex``) keeps the store
+on one device and runs one jit program per query batch.
 
-``ShardedLSHIndex`` partitions the corpus into S contiguous shards, each
-with its own (L, n/S) sorted tables, and merges per-shard top-k results
-globally — same results as ``DeviceLSHIndex``, laid out for a mesh (the
-shard_map placement lives in ``repro.distributed.index_sharding``).
+``ShardedLSHIndex`` lays the *base* segment over a mesh axis in S
+contiguous shards (the shard_map placement lives in
+``repro.distributed.index_sharding``); delta segments stay replicated until
+``compact()`` folds them into the sharded base. Results are identical to
+``DeviceLSHIndex`` for any shard count.
 
-``HostLSHIndex`` is the FAISS-style host path (Python dict buckets, one
-query at a time), kept for A/B comparison and as the semantics reference.
+``HostLSHIndex`` keeps the FAISS-style dict-of-buckets build as the
+bucket-membership semantics reference (``candidates()`` probes the dicts),
+but serves ``query``/``query_batch`` through the same shared planner over a
+single-segment store.
 
-Layout of the device index (see ROADMAP.md "Device index layout"):
-
-  sorted_keys : (L, n) uint32 — bucket keys of corpus items, sorted per table
-  perm        : (L, n) int32  — corpus ids in the same sorted order
-  cap         : static int    — max bucket members gathered per probe; the
-                default is the largest bucket observed at build time, which
-                makes device queries return exactly the host candidate set.
-                A smaller explicit ``bucket_cap`` trades recall for speed by
-                truncating oversized buckets (deterministically, in corpus
-                order — the stable sort preserves insertion order).
+Mutation API (device + sharded): ``insert(batch)`` hashes the batch and
+appends a small sorted delta segment (one jit sort program; queries start
+probing it immediately), ``delete(ids)`` tombstones items by their current
+effective ids (no recompilation — only mask bits flip), and ``compact()``
+merges the surviving keys + corpus rows back into one base segment without
+re-hashing. With the default exact bucket cap, query results match a fresh
+build over the effective corpus bit-identically (ids and candidate counts
+always; scores to float-reassociation ulps while deltas are outstanding,
+exactly after ``compact()``). An explicit ``bucket_cap`` truncates each
+probe window in slot order, and tombstoned slots keep consuming window
+space until ``compact()`` reclaims them — a mutated capped index can
+gather fewer live candidates per bucket than a fresh capped build (and
+delta segments carry their own caps), so the parity guarantee applies to
+the default cap only. Inserts past ``max_deltas`` outstanding deltas
+trigger an automatic compaction.
 
 Bucket keys are a universal multiply-add hash of the K integer hashcodes in
 uint32 arithmetic (natural mod-2^32 wraparound) so the numpy host path and
@@ -38,38 +50,23 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import contractions
+from repro.core import segments
 from repro.core.lsh import LSHFamily
+from repro.core.segments import (SegmentStore, bucket_keys, build_segment,
+                                 build_sharded_segment, make_mults,
+                                 tree_index)
 
-
-def _make_mults(seed: int, num_codes: int) -> np.ndarray:
-    """Per-position odd uint32 multipliers for the universal bucket hash."""
-    rng = np.random.default_rng(seed)
-    return rng.integers(0, 1 << 32, size=(num_codes,), dtype=np.uint32) | 1
-
-
-def _combine_codes(codes, mults):
-    """(..., L, K) int codes -> (..., L) uint32 bucket keys.
-
-    sum_k codes[k] * mults[k] in uint32 arithmetic. Distinct per-position
-    multipliers make the key permutation-sensitive; the mod-2^32 wraparound
-    is identical between numpy (host tables) and jnp (device tables), and
-    int32 codes of any magnitude cast to uint32 without overflow errors.
-    """
-    xp = jnp if isinstance(codes, jax.Array) else np
-    prods = codes.astype(xp.uint32) * xp.asarray(mults).astype(xp.uint32)
-    return prods.sum(axis=-1, dtype=xp.uint32)
-
-
-def _tree_index(tree, idx):
-    return jax.tree.map(lambda a: a[idx], tree)
+# Back-compat aliases: the pre-segment module exposed these underscored
+# helpers; the tier-1 tests import them from here.
+_combine_codes = segments._combine_codes
+_make_mults = make_mults
+_max_run_length = segments._max_run_length
 
 
 def _check_metric(metric: str) -> None:
@@ -77,34 +74,8 @@ def _check_metric(metric: str) -> None:
         raise ValueError(metric)
 
 
-@jax.jit
-def _hash_batch(family, xs):
-    return family.hash_batch(xs)
-
-
-def _bucket_keys(family, mults, corpus, batch_size: int) -> jax.Array:
-    """(n, L) uint32 bucket keys of the whole corpus, hashed in batches.
-
-    The single source of build-time keys for both indexes — host tables are
-    filled from np.asarray of this, keeping host/device keys bit-identical.
-    """
-    n = jax.tree.leaves(corpus)[0].shape[0]
-    mults = jnp.asarray(mults)
-    keys = []
-    for start in range(0, n, batch_size):
-        chunk = _tree_index(corpus, slice(start, min(start + batch_size, n)))
-        keys.append(_combine_codes(_hash_batch(family, chunk), mults))
-    return jnp.concatenate(keys, axis=0)
-
-
 def _score_fn(metric: str):
-    return (contractions.distance if metric == "euclidean"
-            else contractions.cosine_similarity)
-
-
-# ---------------------------------------------------------------------------
-# Host index (reference semantics, kept for A/B)
-# ---------------------------------------------------------------------------
+    return segments._score_fn(metric)
 
 
 @jax.jit
@@ -112,186 +83,126 @@ def _hash_one(family, x):
     return family.hash(x)
 
 
-@dataclasses.dataclass
-class HostLSHIndex:
-    """Dict-of-buckets index: build once over a (stacked-pytree) corpus.
+# ---------------------------------------------------------------------------
+# Shared single-query wrappers (one mixin, not three copies)
+# ---------------------------------------------------------------------------
 
-    corpus: any pytree whose leaves share a leading axis of size n —
-    e.g. stacked CPTensor factors (n, d, R), stacked TT cores, or a dense
-    (n, d_1, ..., d_N) array. Hashing runs batched on-device; bucket storage
-    and probing are host-side Python dicts, one query at a time.
+
+class _LSHIndexBase:
+    """Query API shared by every index deployment.
+
+    Subclasses provide ``query_batch`` / ``candidates_batch`` (and the
+    ``family`` / ``metric`` / ``corpus`` attributes); the single-query
+    wrappers below are the one shared implementation of the
+    ``(ids, scores, n_candidates)`` numpy contract.
     """
 
-    family: LSHFamily
-    metric: str = "euclidean"  # or "cosine"
-    seed: int = 0
-
-    corpus: Any = None
-    size: int = 0
-    _tables: list[dict[int, list[int]]] | None = None
-    _mults: np.ndarray | None = None
-
-    def __post_init__(self):
-        _check_metric(self.metric)
-        self._mults = _make_mults(self.seed, self.family.num_codes)
-
-    # -- build --------------------------------------------------------------
-
-    def build(self, corpus, batch_size: int = 1024) -> "HostLSHIndex":
-        self.corpus = corpus
-        n = jax.tree.leaves(corpus)[0].shape[0]
-        self.size = n
-        all_keys = np.asarray(
-            _bucket_keys(self.family, self._mults, corpus, batch_size))
-        self._tables = [dict() for _ in range(self.family.num_tables)]
-        for i in range(n):
-            for t in range(self.family.num_tables):
-                self._tables[t].setdefault(int(all_keys[i, t]), []).append(i)
-        return self
-
-    # -- query --------------------------------------------------------------
-
     def candidates(self, x) -> np.ndarray:
-        """Union of bucket members over the L tables."""
-        codes = np.asarray(_hash_one(self.family, x))[None]  # (1, L, K)
-        keys = _combine_codes(codes, self._mults)[0]  # (L,)
-        cand: set[int] = set()
-        for t in range(self.family.num_tables):
-            cand.update(self._tables[t].get(int(keys[t]), ()))
-        return np.fromiter(cand, dtype=np.int64, count=len(cand))
+        """Union of live bucket members over all tables/segments (sorted)."""
+        cand, valid = self.candidates_batch(tree_index(x, None))
+        cand = np.asarray(cand[0])
+        return np.sort(cand[np.asarray(valid[0])]).astype(np.int64)
 
     def query(self, x, topk: int = 10) -> tuple[np.ndarray, np.ndarray, int]:
         """-> (ids, scores, n_candidates). Exact re-rank of the candidates.
 
         scores are distances (ascending) for 'euclidean', similarities
-        (descending) for 'cosine'.
+        (descending) for 'cosine'; rows with fewer than ``topk`` candidates
+        are trimmed of the -1 fill.
         """
-        cand = self.candidates(x)
-        if cand.size == 0:
-            return cand, np.empty(0, np.float32), 0
-        sub = _tree_index(self.corpus, jnp.asarray(cand))
-        scores = np.asarray(_score_batch(self.metric, x, sub))
-        order = np.argsort(scores if self.metric == "euclidean" else -scores)
-        order = order[:topk]
-        return cand[order], scores[order], int(cand.size)
+        ids, scores, n_cand = self.query_batch(tree_index(x, None), topk)
+        ids = np.asarray(ids[0])
+        mask = ids >= 0
+        return (ids[mask].astype(np.int64), np.asarray(scores[0])[mask],
+                int(n_cand[0]))
+
+    def effective_corpus(self):
+        """The corpus the returned ids index into (rebuild-only paths)."""
+        return self.corpus
+
+
+class _SegmentedIndex(_LSHIndexBase):
+    """Store-backed mutation + introspection API shared by the device and
+    sharded deployments. Subclasses implement ``_new_store``."""
+
+    store: SegmentStore | None
+
+    @property
+    def size(self) -> int:
+        """Number of live (queryable) items."""
+        return self.store.n_live if self.store is not None else 0
+
+    @property
+    def sorted_keys(self):
+        return self.store.base.sorted_keys
+
+    @property
+    def perm(self):
+        return self.store.base.perm
+
+    @property
+    def cap(self) -> int:
+        return self.store.base.cap
+
+    def effective_corpus(self):
+        return self.store.effective_corpus()
+
+    # -- mutations ----------------------------------------------------------
+
+    def insert(self, batch, batch_size: int = 1024):
+        """Append a batch of items as one small sorted delta segment.
+
+        The batch is hashed once and sorted in one jit program; queries
+        probe the new segment immediately. New items take the next
+        effective ids (after every currently-live item). More than
+        ``max_deltas`` outstanding deltas trigger an automatic
+        ``compact()``.
+        """
+        if jax.tree.leaves(batch)[0].shape[0] == 0:
+            return self
+        keys = bucket_keys(self.family, self._mults, batch, batch_size)
+        self.store.append_delta(
+            build_segment(keys, batch, bucket_cap=self.bucket_cap))
+        if len(self.store.deltas) > self.max_deltas:
+            self.compact()
+        return self
+
+    def delete(self, ids) -> int:
+        """Tombstone items by their current effective ids (the numbering
+        ``query``/``query_batch`` return). Later items shift down, exactly
+        as in a fresh rebuild without them. Returns the number deleted."""
+        return self.store.delete_effective(np.asarray(ids))
+
+    def compact(self):
+        """Merge base + deltas minus tombstones into one fresh base segment.
+
+        Gathers the stored corpus-order keys of every surviving item (no
+        re-hashing) and rebuilds the sorted tables; afterwards effective and
+        physical ids coincide and query programs return to the single-base
+        shape. With the default exact cap results are unchanged by
+        construction; with an explicit ``bucket_cap`` compaction reclaims
+        the probe-window slots tombstones were consuming, so truncated
+        buckets can regain candidates.
+        """
+        if not self.store.mutated:
+            return self
+        keys, corpus = self.store.effective_arrays()
+        if keys.shape[0] == 0:
+            raise ValueError("cannot compact an index with no live items")
+        self.store = self._new_store(keys, corpus)
+        self.compactions += 1
+        return self
 
 
 # ---------------------------------------------------------------------------
-# Device index (sorted keys + permutation, fully batched queries)
+# Device index (single-device segment store)
 # ---------------------------------------------------------------------------
-
-
-def _max_run_length(sorted_keys: jax.Array) -> jax.Array:
-    """Longest run of equal values along axis 1 of (L, n) sorted keys."""
-    n = sorted_keys.shape[1]
-    idx = jnp.arange(n, dtype=jnp.int32)
-    new_run = jnp.concatenate(
-        [jnp.ones(sorted_keys.shape[:1] + (1,), bool),
-         sorted_keys[:, 1:] != sorted_keys[:, :-1]], axis=1)
-    run_start = jax.lax.cummax(jnp.where(new_run, idx, 0), axis=1)
-    return jnp.max(idx - run_start + 1)
-
-
-def _probe_tables(sorted_keys, perm, keys, cap):
-    """-> (cand (B, L*cap) int32 with -1 for invalid, valid (B, L*cap) bool).
-
-    keys: (L, B) uint32 query bucket keys (already hashed + combined). For
-    each query and table: searchsorted into the sorted key array, gather
-    the next `cap` positions, keep those still inside the bucket (same key),
-    then sort + mask duplicates so each corpus id appears at most once.
-    `perm` entries >= n (the sharded pad sentinel) are masked like misses.
-    """
-    n = sorted_keys.shape[1]
-    starts = jax.vmap(
-        lambda sk, q: jnp.searchsorted(sk, q, side="left"))(sorted_keys, keys)
-    pos = starts[:, :, None] + jnp.arange(cap, dtype=starts.dtype)  # (L, B, cap)
-    in_range = pos < n
-    posc = jnp.minimum(pos, n - 1)
-    key_at = jax.vmap(lambda sk, p: sk[p])(sorted_keys, posc)
-    hit = in_range & (key_at == keys[:, :, None])
-    ids = jax.vmap(lambda pm, p: pm[p])(perm, posc)       # (L, B, cap)
-    b = keys.shape[1]
-    cand = jnp.where(hit, ids, n).transpose(1, 0, 2).reshape(b, -1)
-    cand = jnp.sort(cand, axis=1)                         # invalid (>=n) last
-    dup = jnp.concatenate(
-        [jnp.zeros((b, 1), bool), cand[:, 1:] == cand[:, :-1]], axis=1)
-    valid = (cand < n) & ~dup
-    return jnp.where(valid, cand, -1).astype(jnp.int32), valid
-
-
-def _gather_candidates(family, sorted_keys, perm, mults, queries, cap):
-    """Hash a query batch and probe the tables (see _probe_tables)."""
-    codes = family.hash_batch(queries)                    # (B, L, K)
-    keys = _combine_codes(codes, mults).T                 # (L, B)
-    return _probe_tables(sorted_keys, perm, keys, cap)
-
-
-@functools.partial(jax.jit, static_argnames=("cap",))
-def _device_candidates(family, sorted_keys, perm, mults, queries, *, cap):
-    return _gather_candidates(family, sorted_keys, perm, mults, queries, cap)
-
-
-def _bad_score(metric: str) -> float:
-    return jnp.inf if metric == "euclidean" else -jnp.inf
-
-
-def _select_topk(metric, topk, cand, scores, valid):
-    """Stable two-key sort -> (ids (B, topk) with -1 fill, scores (B, topk)).
-
-    Primary key: validity (invalid slots strictly last, independent of their
-    score values); secondary key: the score in rank order (ascending distance
-    / descending similarity, NaN after every finite score — XLA's total
-    order, matching np.argsort in the host path). The stable sort breaks
-    score ties by candidate position, i.e. ascending corpus id, which is
-    what makes sharded and single-device selections bit-identical.
-    """
-    order_key = scores if metric == "euclidean" else -scores
-    _, _, s_cand, s_scores, s_valid = jax.lax.sort(
-        (~valid, order_key, cand, scores, valid),
-        dimension=1, is_stable=True, num_keys=2)
-    k = min(topk, cand.shape[1])
-    bad = _bad_score(metric)
-    ids = jnp.where(s_valid[:, :k], s_cand[:, :k], -1)
-    out_scores = jnp.where(s_valid[:, :k], s_scores[:, :k], bad)
-    if k < topk:
-        ids = jnp.pad(ids, ((0, 0), (0, topk - k)), constant_values=-1)
-        out_scores = jnp.pad(out_scores, ((0, 0), (0, topk - k)),
-                             constant_values=bad)
-    return ids, out_scores
-
-
-def _rank_candidates(metric, topk, queries, corpus, cand, valid):
-    """(cand, valid) (B, W) -> (ids (B, topk), scores (B, topk), n_cand (B,)).
-
-    Exact in-format re-rank of every valid candidate followed by the
-    validity-aware top-k selection. Rows with no valid candidate come out
-    all -1 / bad-fill even when scores are NaN or +/-inf (e.g. a zero-norm
-    query under cosine) — selection never trusts score sentinels alone.
-    """
-    n_cand = valid.sum(axis=1, dtype=jnp.int32)
-    safe = jnp.where(valid, cand, 0)
-    sub = _tree_index(corpus, safe)                       # leaves (B, C, ...)
-    score = _score_fn(metric)
-    scores = jax.vmap(
-        lambda q, ys: jax.vmap(lambda y: score(q, y))(ys))(queries, sub)
-    scores = jnp.where(valid, scores, _bad_score(metric))
-    ids, out_scores = _select_topk(metric, topk, cand, scores, valid)
-    return ids, out_scores, n_cand
-
-
-@functools.partial(jax.jit, static_argnames=("metric", "topk", "cap"))
-def _device_query(family, corpus, sorted_keys, perm, mults, queries, *,
-                  metric, topk, cap):
-    """One program from query batch to top-k: hash -> probe -> gather -> rank."""
-    cand, valid = _gather_candidates(family, sorted_keys, perm, mults,
-                                     queries, cap)
-    return _rank_candidates(metric, topk, queries, corpus, cand, valid)
 
 
 @dataclasses.dataclass
-class DeviceLSHIndex:
-    """Device-resident (K, L) index: sorted bucket keys + permutation per
-    table, fully batched jit-compiled queries.
+class DeviceLSHIndex(_SegmentedIndex):
+    """Device-resident (K, L) index: a segment store of sorted bucket keys +
+    permutations, fully batched jit-compiled queries, streaming mutations.
 
     corpus: any pytree whose leaves share a leading axis of size n. Query
     batches are pytrees with a leading batch axis B; `query_batch` returns
@@ -302,162 +213,78 @@ class DeviceLSHIndex:
     metric: str = "euclidean"  # or "cosine"
     seed: int = 0
     bucket_cap: int | None = None  # None -> exact (largest build-time bucket)
+    max_deltas: int = 8            # outstanding deltas before auto-compact
 
-    corpus: Any = None
-    size: int = 0
-    sorted_keys: jax.Array | None = None  # (L, n) uint32
-    perm: jax.Array | None = None         # (L, n) int32
-    cap: int = 0
+    store: SegmentStore | None = None
+    compactions: int = 0
     _mults: np.ndarray | None = None
 
     def __post_init__(self):
         _check_metric(self.metric)
-        self._mults = _make_mults(self.seed, self.family.num_codes)
+        self._mults = make_mults(self.seed, self.family.num_codes)
+
+    @property
+    def corpus(self):
+        """The effective (live) corpus the returned ids index into."""
+        return self.store.effective_corpus() if self.store else None
 
     # -- build --------------------------------------------------------------
 
     def build(self, corpus, batch_size: int = 1024) -> "DeviceLSHIndex":
-        self.corpus = corpus
-        n = jax.tree.leaves(corpus)[0].shape[0]
-        self.size = n
-        all_keys = _bucket_keys(self.family, self._mults, corpus,
-                                batch_size).T             # (L, n)
-        self.perm = jnp.argsort(all_keys, axis=1, stable=True).astype(jnp.int32)
-        self.sorted_keys = jnp.take_along_axis(all_keys, self.perm, axis=1)
-        if self.bucket_cap is None:
-            self.cap = int(_max_run_length(self.sorted_keys))
-            if self.cap * self.family.num_tables > n:
-                warnings.warn(
-                    f"DeviceLSHIndex: largest bucket has {self.cap} of {n} "
-                    f"items, so the exact default cap gathers up to "
-                    f"L*cap={self.cap * self.family.num_tables} candidates "
-                    "per query (more than the corpus). The family is too "
-                    "coarse for this data; raise num_codes / shrink "
-                    "bucket_width, or pass an explicit bucket_cap to bound "
-                    "per-query work at some recall cost.")
-        else:
-            self.cap = min(int(self.bucket_cap), n)
+        keys = bucket_keys(self.family, self._mults, corpus, batch_size)
+        self.store = self._new_store(keys, corpus)
         return self
+
+    def _new_store(self, keys, corpus) -> SegmentStore:
+        return SegmentStore(build_segment(
+            keys, corpus, bucket_cap=self.bucket_cap,
+            warn_layout=type(self).__name__))
 
     # -- query --------------------------------------------------------------
 
     def candidates_batch(self, queries) -> tuple[jax.Array, jax.Array]:
-        """-> (cand (B, L*cap) int32 with -1 fill, valid (B, L*cap) bool)."""
-        return _device_candidates(self.family, self.sorted_keys, self.perm,
-                                  jnp.asarray(self._mults), queries,
-                                  cap=self.cap)
-
-    def candidates(self, x) -> np.ndarray:
-        """Union of bucket members over the L tables (single query)."""
-        cand, valid = self.candidates_batch(_tree_index(x, None))
-        cand = np.asarray(cand[0])
-        return cand[np.asarray(valid[0])].astype(np.int64)
+        """-> (cand (B, W) effective ids with -1 fill, valid (B, W) bool)."""
+        return segments.segmented_candidates(
+            self.family, self.store.all_arrays, jnp.asarray(self._mults),
+            queries, caps=self.store.all_caps)
 
     def query_batch(self, queries, topk: int = 10):
         """-> (ids (B, topk), scores (B, topk), n_candidates (B,)) jax arrays.
 
         Rows with fewer than topk candidates are filled with id -1 and
-        +inf distance / -inf similarity. One jit-compiled program end-to-end.
+        +inf distance / -inf similarity. One jit-compiled program end-to-end
+        over every segment (base + outstanding deltas, tombstones filtered).
         """
-        return _device_query(self.family, self.corpus, self.sorted_keys,
-                             self.perm, jnp.asarray(self._mults), queries,
-                             metric=self.metric, topk=topk, cap=self.cap)
-
-    def query(self, x, topk: int = 10) -> tuple[np.ndarray, np.ndarray, int]:
-        """Single-query convenience wrapper; same contract as HostLSHIndex."""
-        ids, scores, n_cand = self.query_batch(_tree_index(x, None), topk)
-        ids = np.asarray(ids[0])
-        mask = ids >= 0
-        return (ids[mask].astype(np.int64), np.asarray(scores[0])[mask],
-                int(n_cand[0]))
+        return segments.segmented_query(
+            self.family, self.store.all_arrays, jnp.asarray(self._mults),
+            queries, metric=self.metric, topk=topk, caps=self.store.all_caps)
 
 
 LSHIndex = DeviceLSHIndex  # default deployment
 
 
 # ---------------------------------------------------------------------------
-# Mesh-sharded index (per-shard sorted tables + global top-k merge)
+# Mesh-sharded index (sharded base segment + replicated deltas)
 # ---------------------------------------------------------------------------
 
 
-_PAD_KEY = np.uint32(0xFFFFFFFF)  # bucket key of shard-padding slots
-
-
-def _shard_topk(metric, topk, cap, queries, corpus_s, sorted_keys_s, perm_s,
-                keys, offset):
-    """One shard's probe + re-rank -> ((B, topk) global ids, scores, n_cand).
-
-    Operates on the shard-local (L, n_s) tables and (n_s, ...) corpus slice;
-    ids come back already offset into the global corpus numbering (-1 fill).
-    """
-    cand, valid = _probe_tables(sorted_keys_s, perm_s, keys, cap)
-    ids, scores, n_cand = _rank_candidates(metric, topk, queries, corpus_s,
-                                           cand, valid)
-    return jnp.where(ids >= 0, ids + offset, -1), scores, n_cand
-
-
-def _merge_topk(metric, topk, ids, scores, n_cand):
-    """(S, B, k) per-shard top-k -> global (ids, scores, n_cand).
-
-    Shard-major concatenation + the same stable validity-aware selection as
-    the single-device path: score ties fall back to concat position, which
-    is (shard, within-shard rank) = ascending global id — so the merged
-    top-k is bit-identical to ranking all candidates in one table.
-    """
-    s, b, k = ids.shape
-    flat_ids = ids.transpose(1, 0, 2).reshape(b, s * k)
-    flat_scores = scores.transpose(1, 0, 2).reshape(b, s * k)
-    out_ids, out_scores = _select_topk(metric, topk, flat_ids, flat_scores,
-                                       flat_ids >= 0)
-    return out_ids, out_scores, n_cand.sum(axis=0)
-
-
-@functools.partial(jax.jit, static_argnames=("metric", "topk", "cap"))
-def _sharded_query_vmap(family, corpus_sh, sorted_keys, perm, mults, offsets,
-                        queries, *, metric, topk, cap):
-    """Single-program sharded query without a mesh: vmap over the S axis.
-
-    Used when fewer devices than shards exist (e.g. the 1-device tier-1
-    run); identical math to the shard_map program in
-    repro.distributed.index_sharding.
-    """
-    codes = family.hash_batch(queries)                   # replicated hashing
-    keys = _combine_codes(codes, mults).T                # (L, B)
-    per_shard = jax.vmap(
-        lambda cs, sk, pm, off: _shard_topk(metric, topk, cap, queries, cs,
-                                            sk, pm, keys, off)
-    )(corpus_sh, sorted_keys, perm, offsets)
-    return _merge_topk(metric, topk, *per_shard)
-
-
-@functools.partial(jax.jit, static_argnames=("cap",))
-def _sharded_candidates(family, sorted_keys, perm, mults, offsets, queries, *,
-                        cap):
-    """-> (cand (B, S*L*cap) global ids with -1 fill, valid bool mask)."""
-    codes = family.hash_batch(queries)
-    keys = _combine_codes(codes, mults).T
-    def one(sk, pm, off):
-        cand, valid = _probe_tables(sk, pm, keys, cap)
-        return jnp.where(valid, cand + off, -1), valid
-    cand, valid = jax.vmap(one)(sorted_keys, perm, offsets)  # (S, B, W)
-    s, b, w = cand.shape
-    return (cand.transpose(1, 0, 2).reshape(b, s * w),
-            valid.transpose(1, 0, 2).reshape(b, s * w))
-
-
 @dataclasses.dataclass
-class ShardedLSHIndex:
+class ShardedLSHIndex(_SegmentedIndex):
     """Corpus-sharded (K, L) index over a named mesh axis with a global
     top-k merge — the multi-host layout of ``DeviceLSHIndex``.
 
-    The corpus is partitioned into ``shards`` contiguous slices; each shard
-    holds its own (L, n_s) sorted bucket keys + permutation (local ids, pad
-    slots marked with the n_s sentinel) and its (n_s, ...) corpus slice.
-    A query batch runs as one jit program: replicated hashing, per-shard
-    searchsorted/gather/re-rank (via ``shard_map`` when a mesh carries the
-    shard axis, ``vmap`` otherwise), then a global merge of the per-shard
-    (scores, global ids). With the default exact cap the merged top-k is
-    bit-identical to ``DeviceLSHIndex`` for any shard count.
+    The *base* segment is partitioned into ``shards`` contiguous slices;
+    each shard holds its own (L, n_s) sorted bucket keys + permutation
+    (local ids, pad slots marked with the n_s sentinel) and its (n_s, ...)
+    corpus slice, placed with ``NamedSharding``. A query batch runs as one
+    jit program: replicated hashing, per-shard searchsorted/gather/re-rank
+    (via ``shard_map`` when a mesh carries the shard axis, ``vmap``
+    otherwise), plus the replicated delta segments, then a global merge of
+    the per-shard/per-segment (scores, effective ids). With the default
+    exact cap the merged top-k is bit-identical to ``DeviceLSHIndex`` for
+    any shard count. ``insert`` appends replicated delta segments;
+    ``compact()`` folds them (minus tombstones) back into a freshly
+    re-partitioned sharded base.
 
     An explicit ``bucket_cap`` truncates each *shard's* slice of a bucket,
     so the union of candidates can exceed the single-device truncation (up
@@ -469,18 +296,14 @@ class ShardedLSHIndex:
     seed: int = 0
     shards: int = 1
     bucket_cap: int | None = None  # None -> exact (largest per-shard bucket)
-    keep_corpus: bool = True   # False drops the unsharded copy after build
-                               # (recall_at_k / brute-force references need
-                               # it; at real multi-host scale it won't fit)
+    max_deltas: int = 8
+    keep_corpus: bool = True   # False drops the unsharded build-time copy
+                               # (at real multi-host scale it won't fit;
+                               # effective_corpus() regathers from shards)
 
-    corpus: Any = None             # original pytree (reference APIs only)
-    corpus_sharded: Any = None     # leaves (S, n_s, ...), zero-padded
-    size: int = 0
-    shard_size: int = 0            # n_s = ceil(n / S)
-    sorted_keys: jax.Array | None = None  # (S, L, n_s) uint32
-    perm: jax.Array | None = None         # (S, L, n_s) int32, pad -> n_s
-    offsets: jax.Array | None = None      # (S,) int32 global-id offsets
-    cap: int = 0
+    _corpus: Any = None            # build-time pytree (keep_corpus=True)
+    store: SegmentStore | None = None
+    compactions: int = 0
     mesh: Any = None               # jax Mesh carrying the shard axis, or None
     mesh_axis: str | None = None
     _mults: np.ndarray | None = None
@@ -489,130 +312,195 @@ class ShardedLSHIndex:
         _check_metric(self.metric)
         if int(self.shards) < 1:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
-        self._mults = _make_mults(self.seed, self.family.num_codes)
+        self._mults = make_mults(self.seed, self.family.num_codes)
+
+    @property
+    def corpus(self):
+        """The effective (live) corpus the returned ids index into — the
+        build-time pytree while pristine (None under ``keep_corpus=False``),
+        regathered from the segments once mutated, matching
+        ``DeviceLSHIndex.corpus``."""
+        if self.store is not None and self.store.mutated:
+            return self.store.effective_corpus()
+        return self._corpus
+
+    @property
+    def corpus_sharded(self):
+        return self.store.base.corpus if self.store else None
+
+    @property
+    def shard_size(self) -> int:
+        return self.store.base.shard_size
 
     # -- build --------------------------------------------------------------
 
     def build(self, corpus, batch_size: int = 1024) -> "ShardedLSHIndex":
         from repro.distributed import index_sharding  # deferred: core<->dist
 
-        self.corpus = corpus if self.keep_corpus else None
-        n = jax.tree.leaves(corpus)[0].shape[0]
-        self.size = n
-        s = int(self.shards)
-        n_s = -(-n // s)
-        self.shard_size = n_s
-        pad = s * n_s - n
-        all_keys = _bucket_keys(self.family, self._mults, corpus,
-                                batch_size)                # (n, L)
-        keys_sh = jnp.pad(all_keys, ((0, pad), (0, 0)),
-                          constant_values=_PAD_KEY)
-        keys_sh = keys_sh.reshape(s, n_s, -1).transpose(0, 2, 1)  # (S, L, n_s)
-        perm_local = jnp.argsort(keys_sh, axis=2,
-                                 stable=True).astype(jnp.int32)
-        self.sorted_keys = jnp.take_along_axis(keys_sh, perm_local, axis=2)
-        self.offsets = jnp.arange(s, dtype=jnp.int32) * n_s
-        # pad slots (global id >= n) get the n_s sentinel: a probe that lands
-        # on one (even via a _PAD_KEY collision) is masked as a miss.
-        is_pad = (self.offsets[:, None, None] + perm_local) >= n
-        self.perm = jnp.where(is_pad, n_s, perm_local)
-        self.corpus_sharded = jax.tree.map(
-            lambda a: jnp.pad(
-                a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)
-            ).reshape((s, n_s) + a.shape[1:]), corpus)
-        if self.bucket_cap is None:
-            self.cap = int(_max_run_length(
-                self.sorted_keys.reshape(s * self.family.num_tables, n_s)))
-            if self.cap * self.family.num_tables > n_s:
-                warnings.warn(
-                    f"ShardedLSHIndex: largest per-shard bucket has "
-                    f"{self.cap} of {n_s} items, so the exact default cap "
-                    f"gathers up to S*L*cap="
-                    f"{s * self.family.num_tables * self.cap} candidates "
-                    "per query (more than a shard holds). The family is too "
-                    "coarse for this data; raise num_codes / shrink "
-                    "bucket_width, or pass an explicit bucket_cap to bound "
-                    "per-shard work at some recall cost.")
-        else:
-            self.cap = min(int(self.bucket_cap), n_s)
-        self.mesh, self.mesh_axis = index_sharding.resolve_mesh(s)
-        if self.mesh is not None:
-            put = lambda tree: index_sharding.place_sharded(
-                tree, self.mesh, self.mesh_axis)
-            self.sorted_keys = put(self.sorted_keys)
-            self.perm = put(self.perm)
-            self.offsets = put(self.offsets)
-            self.corpus_sharded = put(self.corpus_sharded)
+        keys = bucket_keys(self.family, self._mults, corpus, batch_size)
+        self.mesh, self.mesh_axis = index_sharding.resolve_mesh(
+            int(self.shards))
+        self.store = self._new_store(keys, corpus)
         return self
+
+    def _new_store(self, keys, corpus) -> SegmentStore:
+        # compact() re-bases onto the effective corpus; keep the pristine
+        # fallback of the ``corpus`` property in sync with it
+        self._corpus = corpus if self.keep_corpus else None
+        seg = build_sharded_segment(
+            keys, corpus, int(self.shards), bucket_cap=self.bucket_cap,
+            warn_layout=type(self).__name__)
+        if self.mesh is None:
+            return SegmentStore(seg)
+        from repro.distributed import index_sharding
+        place = functools.partial(index_sharding.place_sharded,
+                                  mesh=self.mesh, axis=self.mesh_axis)
+        seg = dataclasses.replace(
+            seg, keys=place(seg.keys), sorted_keys=place(seg.sorted_keys),
+            perm=place(seg.perm), corpus=place(seg.corpus))
+        return SegmentStore(seg, place_base=place)
 
     # -- query --------------------------------------------------------------
 
     def candidates_batch(self, queries) -> tuple[jax.Array, jax.Array]:
-        """-> (cand (B, S*L*cap) global ids with -1 fill, valid bool)."""
-        return _sharded_candidates(self.family, self.sorted_keys, self.perm,
-                                   jnp.asarray(self._mults), self.offsets,
-                                   queries, cap=self.cap)
-
-    def candidates(self, x) -> np.ndarray:
-        """Union of bucket members over shards and tables (single query)."""
-        cand, valid = self.candidates_batch(_tree_index(x, None))
-        cand = np.asarray(cand[0])
-        return np.sort(cand[np.asarray(valid[0])]).astype(np.int64)
+        """-> (cand (B, W) effective ids with -1 fill, valid bool)."""
+        return segments.sharded_candidates(
+            self.family, self.store.seg_arrays(0), self.store.delta_arrays,
+            jnp.asarray(self._mults), queries, cap=self.store.base.cap,
+            delta_caps=self.store.delta_caps)
 
     def query_batch(self, queries, topk: int = 10):
-        """Same contract as DeviceLSHIndex.query_batch; ids are global."""
-        args = (self.family, self.corpus_sharded, self.sorted_keys, self.perm,
-                jnp.asarray(self._mults), self.offsets, queries)
+        """Same contract as DeviceLSHIndex.query_batch (effective ids)."""
+        args = (self.family, self.store.seg_arrays(0),
+                self.store.delta_arrays, jnp.asarray(self._mults), queries)
+        kwargs = dict(metric=self.metric, topk=topk, cap=self.store.base.cap,
+                      delta_caps=self.store.delta_caps)
         if self.mesh is not None:
             from repro.distributed import index_sharding
             return index_sharding.shard_map_query(
-                *args, metric=self.metric, topk=topk, cap=self.cap,
-                mesh=self.mesh, axis=self.mesh_axis)
-        return _sharded_query_vmap(*args, metric=self.metric, topk=topk,
-                                   cap=self.cap)
-
-    def query(self, x, topk: int = 10) -> tuple[np.ndarray, np.ndarray, int]:
-        """Single-query convenience wrapper; same contract as HostLSHIndex."""
-        ids, scores, n_cand = self.query_batch(_tree_index(x, None), topk)
-        ids = np.asarray(ids[0])
-        mask = ids >= 0
-        return (ids[mask].astype(np.int64), np.asarray(scores[0])[mask],
-                int(n_cand[0]))
+                *args, mesh=self.mesh, axis=self.mesh_axis, **kwargs)
+        return segments.sharded_query_vmap(*args, **kwargs)
 
 
 # ---------------------------------------------------------------------------
-# References / evaluation
+# Host index (dict-of-buckets build kept as the membership reference)
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HostLSHIndex(_LSHIndexBase):
+    """Dict-of-buckets build: the bucket-membership semantics reference.
+
+    corpus: any pytree whose leaves share a leading axis of size n —
+    e.g. stacked CPTensor factors (n, d, R), stacked TT cores, or a dense
+    (n, d_1, ..., d_N) array. ``candidates()`` probes the host-side Python
+    dicts one query at a time (the independent reference the device tests
+    pin against); ``query``/``query_batch`` serve through the same shared
+    segment planner as every other deployment. Rebuild-only: streaming
+    mutations live on the device/sharded indexes.
+    """
+
+    family: LSHFamily
+    metric: str = "euclidean"  # or "cosine"
+    seed: int = 0
+
+    corpus: Any = None
+    size: int = 0
+    store: SegmentStore | None = None
+    _tables: list[dict[int, list[int]]] | None = None
+    _mults: np.ndarray | None = None
+
+    def __post_init__(self):
+        _check_metric(self.metric)
+        self._mults = make_mults(self.seed, self.family.num_codes)
+
+    # -- build --------------------------------------------------------------
+
+    def build(self, corpus, batch_size: int = 1024) -> "HostLSHIndex":
+        self.corpus = corpus
+        n = jax.tree.leaves(corpus)[0].shape[0]
+        self.size = n
+        keys = bucket_keys(self.family, self._mults, corpus, batch_size)
+        all_keys = np.asarray(keys)
+        self._tables = [dict() for _ in range(self.family.num_tables)]
+        for i in range(n):
+            for t in range(self.family.num_tables):
+                self._tables[t].setdefault(int(all_keys[i, t]), []).append(i)
+        self.store = SegmentStore(build_segment(
+            keys, corpus, warn_layout=type(self).__name__))
+        return self
+
+    # -- query --------------------------------------------------------------
+
+    def candidates(self, x) -> np.ndarray:
+        """Union of bucket members over the L tables, via the host dicts."""
+        codes = np.asarray(_hash_one(self.family, x))[None]  # (1, L, K)
+        keys = _combine_codes(codes, self._mults)[0]  # (L,)
+        cand: set[int] = set()
+        for t in range(self.family.num_tables):
+            cand.update(self._tables[t].get(int(keys[t]), ()))
+        return np.fromiter(cand, dtype=np.int64, count=len(cand))
+
+    def query_batch(self, queries, topk: int = 10):
+        """Same contract as DeviceLSHIndex.query_batch."""
+        return segments.segmented_query(
+            self.family, self.store.all_arrays, jnp.asarray(self._mults),
+            queries, metric=self.metric, topk=topk, caps=self.store.all_caps)
+
+
+# ---------------------------------------------------------------------------
+# References / evaluation (vectorized: one batched score matrix, one
+# query_batch call — no per-query Python loop)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _score_matrix(metric, queries, corpus):
+    """(B, ...) queries x (n, ...) corpus -> (B, n) exact scores."""
+    score = _score_fn(metric)
+    return jax.vmap(
+        lambda q: jax.vmap(lambda y: score(q, y))(corpus))(queries)
 
 
 def _score_batch(metric: str, x, ys):
-    return jax.vmap(lambda y: _score_fn(metric)(x, y))(ys)
+    return _score_matrix(metric, tree_index(x, None), ys)[0]
+
+
+def brute_force_batch(metric: str, queries, corpus, topk: int = 10):
+    """Exact top-k over the whole corpus for a query batch.
+
+    -> (ids (B, topk) int64, scores (B, topk)); one batched score matrix
+    instead of a per-query loop.
+    """
+    scores = np.asarray(_score_matrix(metric, queries, corpus))
+    order = np.argsort(scores if metric == "euclidean" else -scores,
+                       axis=1)[:, :topk]
+    return order, np.take_along_axis(scores, order, axis=1)
 
 
 def brute_force(metric: str, x, corpus, topk: int = 10):
-    """Exact top-k over the whole corpus (recall reference)."""
-    scores = np.asarray(_score_batch(metric, x, corpus))
-    order = np.argsort(scores if metric == "euclidean" else -scores)[:topk]
-    return order, scores[order]
+    """Exact top-k over the whole corpus (single-query recall reference)."""
+    ids, scores = brute_force_batch(metric, tree_index(x, None), corpus, topk)
+    return ids[0], scores[0]
 
 
 def recall_at_k(index, queries, topk: int = 10) -> dict[str, float]:
-    """Mean recall@k of index.query vs. brute force over a query batch.
+    """Mean recall@k of index.query_batch vs. brute force over a query batch.
 
-    Works for both HostLSHIndex and DeviceLSHIndex (any object with the
-    single-query `query` contract plus `metric`/`corpus`/`size`).
+    Works for every index deployment (anything with the batched
+    ``query_batch`` contract plus ``metric`` / ``effective_corpus`` /
+    ``size``); the ground truth is one batched score matrix over the
+    effective (live) corpus.
     """
-    n_q = jax.tree.leaves(queries)[0].shape[0]
-    hits, total, cand_total = 0, 0, 0
-    for i in range(n_q):
-        q = _tree_index(queries, i)
-        truth, _ = brute_force(index.metric, q, index.corpus, topk)
-        got, _, n_cand = index.query(q, topk)
-        hits += len(set(truth.tolist()) & set(got.tolist()))
-        total += topk
-        cand_total += n_cand
+    corpus = index.effective_corpus()
+    truth, _ = brute_force_batch(index.metric, queries, corpus, topk)
+    ids, _, n_cand = index.query_batch(queries, topk=topk)
+    ids = np.asarray(ids)
+    n_q = truth.shape[0]
+    hits = sum(len(set(t) & set(row[row >= 0].tolist()))
+               for t, row in zip(truth.tolist(), ids))
     return {
-        "recall": hits / max(total, 1),
-        "mean_candidates": cand_total / max(n_q, 1),
+        "recall": hits / max(n_q * topk, 1),
+        "mean_candidates": float(np.asarray(n_cand).sum()) / max(n_q, 1),
         "corpus_size": index.size,
     }

@@ -1,0 +1,620 @@
+"""Immutable sorted segments + LSM-style segment store for the LSH indexes.
+
+This is the storage/query core every index class in ``repro.core.index``
+builds on. The unit of storage is an immutable segment — per hash table the
+bucket keys of its items sorted ascending, the matching permutation of local
+item ids, and the corpus slice the ids point into (exactly the PR 1 device
+layout, per segment instead of per index):
+
+  ``TableSegment``   keys (m, L) uint32 in corpus order, sorted_keys (L, m),
+                     perm (L, m) int32, corpus pytree with leading dim m.
+  ``ShardedSegment`` the same arrays with a leading shard dim S and per-shard
+                     local ids (pad slots carry the n_s sentinel), laid out
+                     for a mesh axis — the PR 2 sharded base.
+
+Mutability is layered on top, LSM-style, by ``SegmentStore``: one base
+segment plus a bounded list of small delta segments (streaming inserts) and
+a tombstone mask over every slot (streaming deletes). A query probes every
+segment with the same searchsorted/gather path, filters tombstones inside
+the probe (dead slots are masked exactly like bucket misses, so they never
+reach ranking or the candidate count), re-ranks per segment, and merges the
+per-segment top-k with the stable validity-aware two-key sort from PR 2 —
+the same merge that makes sharded top-k bit-identical to the single-device
+path makes the segmented top-k bit-identical to one flat table.
+
+Ids returned by queries are *effective* ids: the rank of the item in the
+live corpus in slot order (base items first, then deltas in insert order,
+tombstones skipped). That makes a mutated store's results directly
+comparable to a fresh rebuild over the effective corpus, and it is the
+numbering ``delete()`` accepts. ``compact()`` gathers the surviving keys
+and corpus rows (no re-hash — keys are stored in corpus order precisely so
+compaction never touches the hash families) and rebuilds one base segment,
+after which effective and physical ids coincide again.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import contractions
+
+_PAD_KEY = np.uint32(0xFFFFFFFF)  # bucket key of shard-padding slots
+
+
+def tree_index(tree, idx):
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+def _score_fn(metric: str):
+    return (contractions.distance if metric == "euclidean"
+            else contractions.cosine_similarity)
+
+
+def _bad_score(metric: str) -> float:
+    return jnp.inf if metric == "euclidean" else -jnp.inf
+
+
+def _combine_codes(codes, mults):
+    """(..., L, K) int codes -> (..., L) uint32 bucket keys.
+
+    sum_k codes[k] * mults[k] in uint32 arithmetic. Distinct per-position
+    multipliers make the key permutation-sensitive; the mod-2^32 wraparound
+    is identical between numpy (host tables) and jnp (device tables), and
+    int32 codes of any magnitude cast to uint32 without overflow errors.
+    """
+    xp = jnp if isinstance(codes, jax.Array) else np
+    prods = codes.astype(xp.uint32) * xp.asarray(mults).astype(xp.uint32)
+    return prods.sum(axis=-1, dtype=xp.uint32)
+
+
+def make_mults(seed: int, num_codes: int) -> np.ndarray:
+    """Per-position odd uint32 multipliers for the universal bucket hash."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << 32, size=(num_codes,), dtype=np.uint32) | 1
+
+
+@jax.jit
+def _hash_batch(family, xs):
+    return family.hash_batch(xs)
+
+
+def bucket_keys(family, mults, corpus, batch_size: int) -> jax.Array:
+    """(n, L) uint32 bucket keys of a corpus pytree, hashed in batches.
+
+    The single source of build-time keys for every segment kind — host dict
+    tables are filled from np.asarray of this, keeping host/device keys
+    bit-identical.
+    """
+    n = jax.tree.leaves(corpus)[0].shape[0]
+    mults = jnp.asarray(mults)
+    keys = []
+    for start in range(0, n, batch_size):
+        chunk = tree_index(corpus, slice(start, min(start + batch_size, n)))
+        keys.append(_combine_codes(_hash_batch(family, chunk), mults))
+    return jnp.concatenate(keys, axis=0)
+
+
+def query_keys(family, mults, queries) -> jax.Array:
+    """Hash a query batch once -> (L, B) uint32 bucket keys."""
+    codes = family.hash_batch(queries)                    # (B, L, K)
+    return _combine_codes(codes, mults).T                 # (L, B)
+
+
+def _max_run_length(sorted_keys: jax.Array) -> jax.Array:
+    """Longest run of equal values along the last axis of sorted keys."""
+    flat = sorted_keys.reshape(-1, sorted_keys.shape[-1])
+    n = flat.shape[1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    new_run = jnp.concatenate(
+        [jnp.ones(flat.shape[:1] + (1,), bool),
+         flat[:, 1:] != flat[:, :-1]], axis=1)
+    run_start = jax.lax.cummax(jnp.where(new_run, idx, 0), axis=1)
+    return jnp.max(idx - run_start + 1)
+
+
+# ---------------------------------------------------------------------------
+# Immutable segments
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSegment:
+    """One immutable sorted run: per-table sorted keys + permutation + the
+    corpus slice. ``keys`` keeps the corpus-order copy so compaction can
+    rebuild sorted tables without re-hashing."""
+
+    keys: jax.Array         # (m, L) uint32, corpus order
+    sorted_keys: jax.Array  # (L, m) uint32, ascending per table
+    perm: jax.Array         # (L, m) int32 local ids in sorted-key order
+    corpus: Any             # pytree, leaves (m, ...)
+    cap: int                # static probe width (largest bucket at build,
+                            # or the explicit bucket_cap truncation)
+
+    @property
+    def slots(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def items(self) -> int:       # every slot holds a real item
+        return self.keys.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedSegment:
+    """The sharded base: ``TableSegment`` arrays with a leading shard dim.
+
+    Local ids are per shard; pad slots (global slot id >= items) carry the
+    ``shard_size`` sentinel so a probe landing on one — even via a _PAD_KEY
+    collision — is masked as a miss by the liveness lookup.
+    """
+
+    keys: jax.Array         # (S, n_s, L) uint32, corpus order, pads _PAD_KEY
+    sorted_keys: jax.Array  # (S, L, n_s) uint32
+    perm: jax.Array         # (S, L, n_s) int32, pad slots -> n_s sentinel
+    corpus: Any             # pytree, leaves (S, n_s, ...), zero-padded
+    cap: int                # static probe width (largest per-shard bucket)
+    items: int              # real (unpadded) item count n
+
+    @property
+    def shards(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def shard_size(self) -> int:
+        return self.keys.shape[1]
+
+    @property
+    def slots(self) -> int:
+        return self.keys.shape[0] * self.keys.shape[1]
+
+
+@jax.jit
+def _sort_tables(keys_t: jax.Array):
+    """(..., L, m) keys -> (perm, sorted_keys, max_run) along the last axis."""
+    perm = jnp.argsort(keys_t, axis=-1, stable=True).astype(jnp.int32)
+    sorted_keys = jnp.take_along_axis(keys_t, perm, axis=-1)
+    return perm, sorted_keys, _max_run_length(sorted_keys)
+
+
+def _warn_coarse(layout: str, cap: int, num_tables: int, n: int,
+                 shards: int = 1) -> None:
+    """Shared coarse-family warning: the exact default cap would gather more
+    candidates than the store — for sharded bases, one shard — holds.
+    Emitted from the shared segment-build path so every layout (device,
+    sharded, host) warns identically; ``n`` is the per-shard item count
+    when ``shards`` > 1."""
+    if not n or cap * num_tables <= n:
+        return
+    fix = ("The family is too coarse for this data; raise num_codes / "
+           "shrink bucket_width, or pass an explicit bucket_cap to bound "
+           "{} work at some recall cost.")
+    if shards > 1:
+        warnings.warn(
+            f"{layout}: largest per-shard bucket has {cap} of {n} items, so "
+            f"the exact default cap gathers up to S*L*cap="
+            f"{shards * num_tables * cap} candidates per query (more than a "
+            "shard holds). " + fix.format("per-shard"))
+    else:
+        warnings.warn(
+            f"{layout}: largest bucket has {cap} of {n} items, so the exact "
+            f"default cap gathers up to L*cap={cap * num_tables} candidates "
+            "per query (more than the corpus). " + fix.format("per-query"))
+
+
+def build_segment(keys: jax.Array, corpus, *, bucket_cap: int | None = None,
+                  warn_layout: str | None = None) -> TableSegment:
+    """(m, L) corpus-order keys + corpus slice -> sorted TableSegment.
+
+    One jit program sorts every table and measures the largest bucket; the
+    coarse-family warning fires only for base builds (``warn_layout`` set) —
+    small delta segments trip the threshold by construction.
+    """
+    m = keys.shape[0]
+    perm, sorted_keys, max_run = _sort_tables(keys.T)
+    if bucket_cap is None:
+        cap = int(max_run) if m else 0
+        if warn_layout is not None:
+            _warn_coarse(warn_layout, cap, keys.shape[1], m)
+    else:
+        cap = min(int(bucket_cap), m)
+    return TableSegment(keys=keys, sorted_keys=sorted_keys, perm=perm,
+                        corpus=corpus, cap=cap)
+
+
+def build_sharded_segment(keys: jax.Array, corpus, shards: int, *,
+                          bucket_cap: int | None = None,
+                          warn_layout: str | None = None) -> ShardedSegment:
+    """(n, L) corpus-order keys + corpus -> S-sharded segment (unplaced).
+
+    The corpus is split into S contiguous slices; the last is zero-padded
+    (pad keys = _PAD_KEY, pad perm entries = the n_s sentinel). Mesh
+    placement is the caller's concern (``distributed.index_sharding``).
+    """
+    n, num_tables = keys.shape
+    n_s = max(-(-n // shards), 1)
+    pad = shards * n_s - n
+    keys_sh = jnp.pad(keys, ((0, pad), (0, 0)), constant_values=_PAD_KEY)
+    keys_sh = keys_sh.reshape(shards, n_s, num_tables)
+    perm, sorted_keys, max_run = _sort_tables(keys_sh.transpose(0, 2, 1))
+    # pad slots get the n_s sentinel: liveness lookup masks them as misses
+    offsets = jnp.arange(shards, dtype=jnp.int32)[:, None, None] * n_s
+    perm = jnp.where(offsets + perm >= n, n_s, perm)
+    corpus_sh = jax.tree.map(
+        lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        .reshape((shards, n_s) + a.shape[1:]), corpus)
+    if bucket_cap is None:
+        cap = int(max_run) if n else 0
+        if warn_layout is not None:
+            _warn_coarse(warn_layout, cap, num_tables, n_s, shards)
+    else:
+        cap = min(int(bucket_cap), n_s)
+    return ShardedSegment(keys=keys_sh, sorted_keys=sorted_keys, perm=perm,
+                          corpus=corpus_sh, cap=cap, items=n)
+
+
+# ---------------------------------------------------------------------------
+# Probe / rank / merge — the shared query math
+# ---------------------------------------------------------------------------
+
+
+def probe_tables(sorted_keys, perm, keys, cap, live):
+    """-> (cand (B, L*cap) int32 with -1 for invalid, valid (B, L*cap) bool).
+
+    keys: (L, B) uint32 query bucket keys (already hashed + combined). For
+    each query and table: searchsorted into the sorted key array, gather
+    the next ``cap`` positions, keep those still inside the bucket (same
+    key) whose slot is live, then sort + mask duplicates so each local id
+    appears at most once. ``live`` is an (m+1,) lookup — entry m covers the
+    sharded pad sentinel, tombstoned slots are False — so dead slots are
+    filtered exactly like bucket misses, before ranking or counting.
+    """
+    m = sorted_keys.shape[1]
+    starts = jax.vmap(
+        lambda sk, q: jnp.searchsorted(sk, q, side="left"))(sorted_keys, keys)
+    pos = starts[:, :, None] + jnp.arange(cap, dtype=starts.dtype)  # (L, B, cap)
+    in_range = pos < m
+    posc = jnp.minimum(pos, max(m - 1, 0))
+    key_at = jax.vmap(lambda sk, p: sk[p])(sorted_keys, posc)
+    hit = in_range & (key_at == keys[:, :, None])
+    ids = jax.vmap(lambda pm, p: pm[p])(perm, posc)       # (L, B, cap)
+    hit &= live[ids]                                      # tombstones + pads
+    b = keys.shape[1]
+    cand = jnp.where(hit, ids, m).transpose(1, 0, 2).reshape(b, -1)
+    cand = jnp.sort(cand, axis=1)                         # invalid (>=m) last
+    dup = jnp.concatenate(
+        [jnp.zeros((b, 1), bool), cand[:, 1:] == cand[:, :-1]], axis=1)
+    valid = (cand < m) & ~dup
+    return jnp.where(valid, cand, -1).astype(jnp.int32), valid
+
+
+def select_topk(metric, topk, cand, scores, valid):
+    """Stable two-key sort -> (ids (B, topk) with -1 fill, scores (B, topk)).
+
+    Primary key: validity (invalid slots strictly last, independent of their
+    score values); secondary key: the score in rank order (ascending distance
+    / descending similarity, NaN after every finite score — XLA's total
+    order, matching np.argsort in the host path). The stable sort breaks
+    score ties by candidate position, i.e. ascending id, which is what makes
+    sharded, segmented, and single-table selections bit-identical.
+    """
+    order_key = scores if metric == "euclidean" else -scores
+    _, _, s_cand, s_scores, s_valid = jax.lax.sort(
+        (~valid, order_key, cand, scores, valid),
+        dimension=1, is_stable=True, num_keys=2)
+    k = min(topk, cand.shape[1])
+    bad = _bad_score(metric)
+    ids = jnp.where(s_valid[:, :k], s_cand[:, :k], -1)
+    out_scores = jnp.where(s_valid[:, :k], s_scores[:, :k], bad)
+    if k < topk:
+        ids = jnp.pad(ids, ((0, 0), (0, topk - k)), constant_values=-1)
+        out_scores = jnp.pad(out_scores, ((0, 0), (0, topk - k)),
+                             constant_values=bad)
+    return ids, out_scores
+
+
+def rank_candidates(metric, topk, queries, corpus, cand, valid):
+    """(cand, valid) (B, W) -> (ids (B, topk), scores (B, topk), n_cand (B,)).
+
+    Exact in-format re-rank of every valid candidate followed by the
+    validity-aware top-k selection. Rows with no valid candidate come out
+    all -1 / bad-fill even when scores are NaN or +/-inf (e.g. a zero-norm
+    query under cosine) — selection never trusts score sentinels alone.
+    """
+    n_cand = valid.sum(axis=1, dtype=jnp.int32)
+    safe = jnp.where(valid, cand, 0)
+    sub = tree_index(corpus, safe)                        # leaves (B, C, ...)
+    score = _score_fn(metric)
+    scores = jax.vmap(
+        lambda q, ys: jax.vmap(lambda y: score(q, y))(ys))(queries, sub)
+    scores = jnp.where(valid, scores, _bad_score(metric))
+    ids, out_scores = select_topk(metric, topk, cand, scores, valid)
+    return ids, out_scores, n_cand
+
+
+def segment_candidates(seg_arrays, keys, cap):
+    """One segment's probe -> (cand (B, L*cap) effective ids with -1 fill,
+    valid (B, L*cap) bool). ``seg_arrays`` is the (corpus, sorted_keys,
+    perm, live, eff) tuple; local ids are mapped through ``eff`` into the
+    store's effective (live-corpus) numbering."""
+    _, sorted_keys, perm, live, eff = seg_arrays
+    cand, valid = probe_tables(sorted_keys, perm, keys, cap, live)
+    safe = jnp.where(valid, cand, 0)
+    return jnp.where(valid, eff[safe], -1), valid
+
+
+def segment_topk(metric, topk, cap, queries, seg_arrays, keys):
+    """One segment's probe + re-rank -> ((B, topk) effective ids, scores,
+    n_cand). ``seg_arrays`` is the (corpus, sorted_keys, perm, live, eff)
+    tuple; candidates come back already mapped through ``eff`` into the
+    store's effective (live-corpus) numbering, -1 fill preserved."""
+    corpus, sorted_keys, perm, live, eff = seg_arrays
+    cand, valid = probe_tables(sorted_keys, perm, keys, cap, live)
+    ids, scores, n_cand = rank_candidates(metric, topk, queries, corpus,
+                                          cand, valid)
+    return jnp.where(ids >= 0, eff[jnp.where(ids >= 0, ids, 0)], -1), \
+        scores, n_cand
+
+
+def merge_topk(metric, topk, ids, scores, n_cand):
+    """(G, B, k) per-group top-k -> global (ids, scores, n_cand).
+
+    Group-major concatenation + the same stable validity-aware selection as
+    the single-table path: score ties fall back to concat position, which is
+    (group, within-group rank) = ascending effective id whenever the groups
+    are ordered by slot offset — so the merged top-k is bit-identical to
+    ranking all candidates in one table. Groups are shards, delta segments,
+    or both.
+    """
+    g, b, k = ids.shape
+    flat_ids = ids.transpose(1, 0, 2).reshape(b, g * k)
+    flat_scores = scores.transpose(1, 0, 2).reshape(b, g * k)
+    out_ids, out_scores = select_topk(metric, topk, flat_ids, flat_scores,
+                                      flat_ids >= 0)
+    return out_ids, out_scores, n_cand.sum(axis=0)
+
+
+def merge_with_deltas(metric, topk, groups, deltas, delta_caps, queries,
+                      keys):
+    """Probe the replicated delta segments and merge them, in slot order,
+    with the base's per-group top-k ``groups`` ((G, B, k) ids/scores/n_cand
+    — G shards, or 1 for a single-device base). The single merge body shared
+    by the vmapped and the shard_map sharded query programs, which must stay
+    bit-identical."""
+    ids, scores, n_cand = groups
+    outs = [(ids, scores, n_cand)]
+    for seg_arrays, dcap in zip(deltas, delta_caps):
+        i, s, n = segment_topk(metric, topk, dcap, queries, seg_arrays, keys)
+        outs.append((i[None], s[None], n[None]))
+    return merge_topk(metric, topk,
+                      jnp.concatenate([o[0] for o in outs]),
+                      jnp.concatenate([o[1] for o in outs]),
+                      jnp.concatenate([o[2] for o in outs]))
+
+
+# ---------------------------------------------------------------------------
+# The shared query planner (single-device / host / vmapped-sharded programs;
+# the shard_map variant lives in repro.distributed.index_sharding)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "topk", "caps"))
+def segmented_query(family, segs, mults, queries, *, metric, topk, caps):
+    """One program from query batch to top-k over every segment: hash once,
+    probe + re-rank each segment, merge. ``segs`` is a tuple of per-segment
+    array tuples ordered by slot offset (base first, deltas in insert
+    order); ``caps`` the matching static probe widths."""
+    keys = query_keys(family, mults, queries)
+    outs = [segment_topk(metric, topk, cap, queries, sa, keys)
+            for sa, cap in zip(segs, caps)]
+    return merge_topk(metric, topk,
+                      jnp.stack([o[0] for o in outs]),
+                      jnp.stack([o[1] for o in outs]),
+                      jnp.stack([o[2] for o in outs]))
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "topk", "cap",
+                                             "delta_caps"))
+def sharded_query_vmap(family, base, deltas, mults, queries, *, metric, topk,
+                       cap, delta_caps):
+    """Single-program sharded query without a mesh: vmap over the S axis of
+    the base segment, plus the delta segments, merged in slot order.
+
+    Used when fewer devices than shards exist (e.g. the 1-device tier-1
+    run); identical math to the shard_map program in
+    repro.distributed.index_sharding.
+    """
+    keys = query_keys(family, mults, queries)
+    per_shard = jax.vmap(
+        lambda cs, sk, pm, lv, ef: segment_topk(
+            metric, topk, cap, queries, (cs, sk, pm, lv, ef), keys)
+    )(*base)                                              # (S, B, k) each
+    return merge_with_deltas(metric, topk, per_shard, deltas, delta_caps,
+                             queries, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("caps",))
+def segmented_candidates(family, segs, mults, queries, *, caps):
+    """-> (cand (B, sum L*cap_g) effective ids with -1 fill, valid mask)."""
+    keys = query_keys(family, mults, queries)
+    cands, valids = [], []
+    for seg_arrays, cap in zip(segs, caps):
+        cand, valid = segment_candidates(seg_arrays, keys, cap)
+        cands.append(cand)
+        valids.append(valid)
+    return jnp.concatenate(cands, axis=1), jnp.concatenate(valids, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "delta_caps"))
+def sharded_candidates(family, base, deltas, mults, queries, *, cap,
+                       delta_caps):
+    """Sharded-base variant of ``segmented_candidates`` (vmap over shards)."""
+    keys = query_keys(family, mults, queries)
+    _, sorted_keys, perm, live, eff = base
+    cand, valid = jax.vmap(
+        lambda sk, pm, lv, ef: segment_candidates((None, sk, pm, lv, ef),
+                                                  keys, cap)
+    )(sorted_keys, perm, live, eff)                       # (S, B, W)
+    s, b, w = cand.shape
+    cands = [cand.transpose(1, 0, 2).reshape(b, s * w)]
+    valids = [valid.transpose(1, 0, 2).reshape(b, s * w)]
+    for seg_arrays, dcap in zip(deltas, delta_caps):
+        dc, dv = segment_candidates(seg_arrays, keys, dcap)
+        cands.append(dc)
+        valids.append(dv)
+    return jnp.concatenate(cands, axis=1), jnp.concatenate(valids, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Mutable store: base + deltas + tombstones
+# ---------------------------------------------------------------------------
+
+
+class SegmentStore:
+    """LSM-style mutable view over immutable segments.
+
+    Holds one base segment (``TableSegment`` or ``ShardedSegment``), a
+    bounded list of delta ``TableSegment``s, and a host-side tombstone mask
+    over every slot (shard-pad slots are born dead). After each mutation it
+    re-derives the per-segment device arrays the planner consumes:
+
+      live  (m+1,) bool   per segment (sharded base: (S, n_s+1)) — slot
+                          liveness with the pad-sentinel entry always False
+      eff   (m,) int32    per segment (sharded base: (S, n_s)) — the slot's
+                          effective id: its rank among live slots in slot
+                          order, i.e. its index in ``effective_corpus()``
+
+    Deletes only flip mask bits (same array shapes -> no recompilation);
+    inserts append a segment (bounded recompiles, the index compacts past
+    ``max_deltas``). ``place_base`` lets the sharded index keep the derived
+    base arrays on its mesh.
+    """
+
+    def __init__(self, base, *, place_base: Callable | None = None):
+        self.base = base
+        self.deltas: list[TableSegment] = []
+        self.place_base = place_base or (lambda t: t)
+        self.live_host = np.zeros(base.slots, bool)
+        self.live_host[:base.items] = True     # shard pads (>= items) dead
+        self._refresh()
+
+    # -- derived state ------------------------------------------------------
+
+    def _refresh(self) -> None:
+        eff_all = (np.cumsum(self.live_host) - 1).astype(np.int32)
+        self.n_live = int(self.live_host.sum())
+        self.n_dead = (self.live_host.size - self.base.slots
+                       + self.base.items - self.n_live)
+        pos, luts = 0, []
+        for seg in [self.base] + self.deltas:
+            live = self.live_host[pos:pos + seg.slots]
+            eff = eff_all[pos:pos + seg.slots]
+            if isinstance(seg, ShardedSegment):
+                s, n_s = seg.shards, seg.shard_size
+                lut = (jnp.asarray(np.pad(live.reshape(s, n_s),
+                                          ((0, 0), (0, 1)))),
+                       jnp.asarray(eff.reshape(s, n_s)))
+                lut = self.place_base(lut)
+            else:
+                lut = (jnp.asarray(np.append(live, False)), jnp.asarray(eff))
+            luts.append(lut)
+            pos += seg.slots
+        self._luts = luts
+
+    def seg_arrays(self, i: int):
+        """(corpus, sorted_keys, perm, live, eff) of segment i (0 = base)."""
+        seg = ([self.base] + self.deltas)[i]
+        live, eff = self._luts[i]
+        return (seg.corpus, seg.sorted_keys, seg.perm, live, eff)
+
+    @property
+    def delta_arrays(self) -> tuple:
+        return tuple(self.seg_arrays(1 + i) for i in range(len(self.deltas)))
+
+    @property
+    def delta_caps(self) -> tuple[int, ...]:
+        return tuple(d.cap for d in self.deltas)
+
+    @property
+    def all_arrays(self) -> tuple:
+        return tuple(self.seg_arrays(i)
+                     for i in range(1 + len(self.deltas)))
+
+    @property
+    def all_caps(self) -> tuple[int, ...]:
+        return (self.base.cap,) + self.delta_caps
+
+    @property
+    def mutated(self) -> bool:
+        return bool(self.deltas) or self.n_dead > 0
+
+    # -- mutations ----------------------------------------------------------
+
+    def append_delta(self, seg: TableSegment) -> None:
+        """O(batch) append: earlier segments' liveness and effective ids are
+        untouched (new items rank after every live item), so only the new
+        segment's lookups are built — no base-array re-upload per insert."""
+        start = self.n_live
+        self.deltas.append(seg)
+        self.live_host = np.concatenate(
+            [self.live_host, np.ones(seg.slots, bool)])
+        self._luts.append((
+            jnp.asarray(np.append(np.ones(seg.slots, bool), False)),
+            jnp.arange(start, start + seg.slots, dtype=jnp.int32)))
+        self.n_live += seg.slots
+
+    def delete_effective(self, ids: np.ndarray) -> int:
+        """Tombstone items by their current *effective* ids (the numbering
+        queries return). Returns the number of newly-dead items."""
+        ids = np.unique(np.asarray(ids, np.int64))
+        if ids.size == 0:
+            return 0
+        if ids.size and (ids[0] < 0 or ids[-1] >= self.n_live):
+            raise IndexError(
+                f"delete ids must be in [0, {self.n_live}), got "
+                f"[{ids[0]}, {ids[-1]}]")
+        slots = np.flatnonzero(self.live_host)[ids]
+        self.live_host[slots] = False
+        self._refresh()
+        return int(ids.size)
+
+    # -- effective (live) views --------------------------------------------
+
+    def _flat_keys_and_corpus(self):
+        segs = [self.base] + self.deltas
+        flat_keys, flat_corpus = [], []
+        for seg in segs:
+            if isinstance(seg, ShardedSegment):
+                flat_keys.append(seg.keys.reshape(-1, seg.keys.shape[-1]))
+                flat_corpus.append(jax.tree.map(
+                    lambda a: a.reshape((-1,) + a.shape[2:]), seg.corpus))
+            else:
+                flat_keys.append(seg.keys)
+                flat_corpus.append(seg.corpus)
+        keys = jnp.concatenate(flat_keys, axis=0)
+        corpus = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                              *flat_corpus)
+        return keys, corpus
+
+    def effective_arrays(self):
+        """-> ((n_live, L) keys, corpus pytree) of live items in slot order —
+        the compaction input; keys come from storage, never from re-hashing."""
+        keys, corpus = self._flat_keys_and_corpus()
+        idx = jnp.asarray(np.flatnonzero(self.live_host))
+        return keys[idx], tree_index(corpus, idx)
+
+    def effective_corpus(self):
+        """The live corpus in effective-id order (zero-copy when pristine)."""
+        if not self.mutated:
+            if isinstance(self.base, ShardedSegment):
+                flat = jax.tree.map(
+                    lambda a: a.reshape((-1,) + a.shape[2:]), self.base.corpus)
+                return tree_index(flat, slice(0, self.base.items))
+            return self.base.corpus
+        return self.effective_arrays()[1]

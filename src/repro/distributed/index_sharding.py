@@ -1,8 +1,8 @@
 """Mesh placement + shard_map query program for ``ShardedLSHIndex``.
 
-The index math (per-shard probe, re-rank, global top-k merge) lives in
-``repro.core.index``; this module decides *where* the per-shard tables run
-and provides the ``shard_map`` variant of the query program:
+The index math (per-segment probe, re-rank, global top-k merge) lives in
+``repro.core.segments``; this module decides *where* the sharded base
+segment runs and provides the ``shard_map`` variant of the query program:
 
 - ``resolve_mesh``: map a shard count to (mesh, axis). An active
   ``distributed.sharding.axis_rules`` context wins — the ``lsh_shard``
@@ -11,12 +11,14 @@ and provides the ``shard_map`` variant of the query program:
   and over the dedicated 1-D ``shard`` mesh in tests. Without a context, a
   1-D mesh over the first S local devices is built; with fewer devices than
   shards the caller falls back to the vmapped single-device program.
-- ``place_sharded``: NamedSharding placement of the (S, ...)-leading index
-  arrays (sorted keys, permutations, offsets, corpus slices).
+- ``place_sharded``: NamedSharding placement of the (S, ...)-leading base
+  arrays (sorted keys, permutations, liveness/effective-id lookups, corpus
+  slices).
 - ``shard_map_query``: one jit program — replicated hashing outside the
-  shard_map, per-shard searchsorted/gather/re-rank inside it (each device
-  sees its (1, ...) block), then the global top-k merge on the gathered
-  per-shard results.
+  shard_map, per-shard searchsorted/gather/tombstone-filter/re-rank inside
+  it (each device sees its (1, ...) block), the replicated delta segments
+  probed alongside, then the global top-k merge over shards + deltas in
+  slot order.
 """
 
 from __future__ import annotations
@@ -24,7 +26,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -63,30 +64,32 @@ def place_sharded(tree, mesh: Mesh, axis: str):
     return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("metric", "topk", "cap", "mesh", "axis"))
-def shard_map_query(family, corpus_sh, sorted_keys, perm, mults, offsets,
-                    queries, *, metric, topk, cap, mesh, axis):
-    """One jit program: hash (replicated) -> per-shard top-k (shard_map)
-    -> global merge. Bit-identical to core.index._sharded_query_vmap."""
-    from repro.core import index as index_lib
+@functools.partial(jax.jit, static_argnames=("metric", "topk", "cap",
+                                             "delta_caps", "mesh", "axis"))
+def shard_map_query(family, base, deltas, mults, queries, *, metric, topk,
+                    cap, delta_caps, mesh, axis):
+    """One jit program: hash (replicated) -> per-shard top-k (shard_map) +
+    delta top-ks (replicated) -> global merge in slot order. Bit-identical
+    to core.segments.sharded_query_vmap."""
+    from repro.core import segments
 
-    codes = family.hash_batch(queries)                   # replicated hashing
-    keys = index_lib._combine_codes(codes, mults).T      # (L, B)
+    keys = segments.query_keys(family, mults, queries)   # (L, B), replicated
+    corpus_sh, sorted_keys, perm, live, eff = base
 
-    def body(corpus_s, sk, pm, off, keys_r, queries_r):
+    def body(corpus_s, sk, pm, lv, ef, keys_r, queries_r):
         # blocks carry a leading shard dim of 1 on the sharded operands
-        ids, scores, n_cand = index_lib._shard_topk(
+        ids, scores, n_cand = segments.segment_topk(
             metric, topk, cap, queries_r,
-            jax.tree.map(lambda a: a[0], corpus_s), sk[0], pm[0],
-            keys_r, off[0])
+            (jax.tree.map(lambda a: a[0], corpus_s), sk[0], pm[0], lv[0],
+             ef[0]), keys_r)
         return ids[None], scores[None], n_cand[None]
 
-    sharded, rep = P(axis), P()
-    ids, scores, n_cand = shard_map(
+    sharded_spec, rep = P(axis), P()
+    per_shard = shard_map(
         body, mesh,
-        in_specs=(sharded, sharded, sharded, sharded, rep, rep),
-        out_specs=(sharded, sharded, sharded),
+        in_specs=(sharded_spec,) * 5 + (rep, rep),
+        out_specs=(sharded_spec,) * 3,
         check_rep=False,
-    )(corpus_sh, sorted_keys, perm, offsets, keys, queries)
-    return index_lib._merge_topk(metric, topk, ids, scores, n_cand)
+    )(corpus_sh, sorted_keys, perm, live, eff, keys, queries)
+    return segments.merge_with_deltas(metric, topk, per_shard, deltas,
+                                      delta_caps, queries, keys)

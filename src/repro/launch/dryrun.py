@@ -203,18 +203,50 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     }
 
 
+def _analyze(compiled, t0) -> dict:
+    """memory / FLOP / collective record of one AOT-compiled program."""
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
+    return {
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_bytes": (mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+        },
+        "cost": {
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+        },
+        "collectives": collective_stats(compiled.as_text()),
+    }
+
+
 def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
                          dims: tuple = (8, 8, 8), batch: int = 1024,
                          topk: int = 10, num_codes: int = 4,
-                         num_tables: int = 8, bucket_cap: int = 64) -> dict:
-    """AOT-lower + compile the sharded LSH index query program.
+                         num_tables: int = 8, bucket_cap: int = 64,
+                         delta_n: int = 4096, delta_cap: int = 64) -> dict:
+    """AOT-lower + compile the sharded LSH index query programs.
 
     One corpus shard per device along the mesh's data axis (the
-    ``lsh_shard`` rule), index arrays and corpus slices sharded with the
-    same NamedSharding machinery as the model cells, queries replicated —
+    ``lsh_shard`` rule), segment-store arrays (sorted keys, permutations,
+    liveness/effective-id lookups, corpus slices) sharded with the same
+    NamedSharding machinery as the model cells, queries replicated —
     records the memory / FLOP / collective profile of serving one query
     batch so the roofline report can account the ANN workload next to the
-    model workloads.
+    model workloads. Two programs are compiled: the compacted store (base
+    segment only) and the post-insert store (base + one replicated
+    ``delta_n``-item delta segment) — the latter's profile lands under
+    ``delta_probe`` so the report can price serving during streaming
+    ingestion.
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -234,36 +266,43 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
                                     num_tables=l, rank=4),
             jax.ShapeDtypeStruct((2,), jnp.uint32))
         sds = jax.ShapeDtypeStruct
-        corpus_sds = sds((shards, n_s) + tuple(dims), jnp.float32)
-        keys_sds = sds((shards, l, n_s), jnp.uint32)
-        perm_sds = sds((shards, l, n_s), jnp.int32)
+        base_sds = (sds((shards, n_s) + tuple(dims), jnp.float32),  # corpus
+                    sds((shards, l, n_s), jnp.uint32),              # keys
+                    sds((shards, l, n_s), jnp.int32),               # perm
+                    sds((shards, n_s + 1), jnp.bool_),              # live
+                    sds((shards, n_s), jnp.int32))                  # eff
+        delta_sds = (sds((delta_n,) + tuple(dims), jnp.float32),
+                     sds((l, delta_n), jnp.uint32),
+                     sds((l, delta_n), jnp.int32),
+                     sds((delta_n + 1,), jnp.bool_),
+                     sds((delta_n,), jnp.int32))
         mults_sds = sds((k,), jnp.uint32)
-        off_sds = sds((shards,), jnp.int32)
         q_sds = sds((batch,) + tuple(dims), jnp.float32)
 
         shard_of = lambda s: named_sharding(
             ("lsh_shard",) + (None,) * (len(s.shape) - 1), s.shape)
         rep = NamedSharding(mesh, P())
         fam_sh = jax.tree.map(lambda _: rep, fam_sds)
+        base_sh = tuple(shard_of(s) for s in base_sds)
 
-        def step(fam, corpus_sh, sorted_keys, perm, mults, offsets, queries):
-            return index_sharding.shard_map_query(
-                fam, corpus_sh, sorted_keys, perm, mults, offsets, queries,
-                metric="euclidean", topk=topk, cap=bucket_cap,
-                mesh=shard_mesh, axis=shard_axis)
+        def compile_one(deltas_sds, delta_caps):
+            def step(fam, base, deltas, mults, queries):
+                return index_sharding.shard_map_query(
+                    fam, base, deltas, mults, queries,
+                    metric="euclidean", topk=topk, cap=bucket_cap,
+                    delta_caps=delta_caps, mesh=shard_mesh, axis=shard_axis)
 
-        jitted = jax.jit(step, in_shardings=(
-            fam_sh, shard_of(corpus_sds), shard_of(keys_sds),
-            shard_of(perm_sds), rep, shard_of(off_sds), rep))
-        lowered = jitted.lower(fam_sds, corpus_sds, keys_sds, perm_sds,
-                               mults_sds, off_sds, q_sds)
-        compiled = lowered.compile()
-        compile_s = time.time() - t0
-        mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
-        if isinstance(cost, (list, tuple)):  # older jax returns [dict]
-            cost = cost[0] if cost else {}
-        colls = collective_stats(compiled.as_text())
+            deltas_sh = tuple(jax.tree.map(lambda _: rep, d)
+                              for d in deltas_sds)
+            jitted = jax.jit(step, in_shardings=(
+                fam_sh, base_sh, deltas_sh, rep, rep))
+            return jitted.lower(fam_sds, base_sds, deltas_sds, mults_sds,
+                                q_sds).compile()
+
+        base_rec = _analyze(compile_one((), ()), t0)
+        t1 = time.time()
+        delta_rec = _analyze(
+            compile_one((delta_sds,), (min(delta_cap, delta_n),)), t1)
         fallbacks = sorted({(f[0], f[1], "/".join(f[2]))
                             for f in ctx.fallbacks})
 
@@ -278,22 +317,9 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         "corpus_n": corpus_n,
         "batch": batch,
         "bucket_cap": bucket_cap,
-        "compile_seconds": round(compile_s, 1),
-        "memory": {
-            "argument_bytes": mem.argument_size_in_bytes,
-            "output_bytes": mem.output_size_in_bytes,
-            "temp_bytes": mem.temp_size_in_bytes,
-            "alias_bytes": mem.alias_size_in_bytes,
-            "peak_per_device_bytes": (mem.argument_size_in_bytes
-                                      + mem.output_size_in_bytes
-                                      + mem.temp_size_in_bytes
-                                      - mem.alias_size_in_bytes),
-        },
-        "cost": {
-            "flops_per_device": cost.get("flops", 0.0),
-            "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
-        },
-        "collectives": colls,
+        **base_rec,
+        "delta_probe": {"delta_n": delta_n, "delta_cap": delta_cap,
+                        **delta_rec},
         "sharding_fallbacks": fallbacks,
     }
 
@@ -407,7 +433,9 @@ def main():
                 rec = lower_lsh_index_cell(mp)
                 print(f"[dryrun] ok      lsh-index x {mesh_tag}: "
                       f"{rec['shards']} shards over '{rec['shard_axis']}', "
-                      f"{rec['cost']['flops_per_device']:.3e} flops/dev")
+                      f"{rec['cost']['flops_per_device']:.3e} flops/dev, "
+                      f"+1 delta: "
+                      f"{rec['delta_probe']['cost']['flops_per_device']:.3e}")
             except Exception as e:
                 failures += 1
                 rec = {"status": "failed", "arch": "lsh-index",

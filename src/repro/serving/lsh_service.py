@@ -3,22 +3,30 @@ deployable serving component.
 
 A corpus of tensors (dense / CP / TT format) is hashed once at build time
 with one of the paper's families; queries arrive in batches and run through
-the device-resident ``DeviceLSHIndex`` as one jit-compiled program — batched
-hashing (batched CP/TT Gram einsums -> the Pallas kernels on TPU), vmapped
-``searchsorted`` bucket probes over the sorted key tables, and exact
-in-format re-rank — never leaving the accelerator until the final top-k.
+the segment-store indexes of ``repro.core.index`` as one jit-compiled
+program — batched hashing (batched CP/TT Gram einsums -> the Pallas kernels
+on TPU), vmapped ``searchsorted`` bucket probes over every segment's sorted
+key tables, tombstone filtering, and exact in-format re-rank — never
+leaving the accelerator until the final top-k.
+
+The corpus is mutable in place: ``insert(batch)`` appends a sorted delta
+segment (served immediately, no rebuild), ``delete(ids)`` tombstones items
+by their current effective ids, and ``compact()`` folds deltas and
+tombstones back into one base segment (also triggered automatically past
+the index's ``max_deltas``). ``ServiceStats`` tracks the mutation traffic
+next to the query traffic.
 
 ``LSHService(..., shards=S)`` serves through the mesh-sharded
-``ShardedLSHIndex``: the corpus is partitioned into S per-shard sorted
-tables (placed over a mesh axis when one is available, see
+``ShardedLSHIndex``: the base segment is partitioned into S per-shard
+sorted tables (placed over a mesh axis when one is available, see
 ``repro.distributed.index_sharding``), queries fan out to every shard and
-the per-shard top-k results merge globally. Global-id bookkeeping is
-automatic — each shard ranks local ids and offsets them into the corpus
-numbering before the merge, so callers always see corpus-global ids
-regardless of the shard count.
+the per-shard top-k results merge globally with the replicated delta
+segments. Effective-id bookkeeping is automatic — callers always see ids
+into the current live corpus regardless of shard or segment count.
 
-``LSHService(..., device=False)`` falls back to the host-dict
-``HostLSHIndex`` path (per-query Python bucketing) for A/B comparison.
+``LSHService(..., device=False)`` serves through ``HostLSHIndex`` (the
+dict-of-buckets build kept as the membership reference); queries run
+through the same shared planner, mutations are rebuild-only.
 """
 
 from __future__ import annotations
@@ -31,7 +39,7 @@ import jax
 import numpy as np
 
 from repro.core.index import (DeviceLSHIndex, HostLSHIndex, ShardedLSHIndex,
-                              _tree_index)
+                              _SegmentedIndex)
 from repro.core.lsh import LSHFamily, make_family
 
 
@@ -42,6 +50,14 @@ class ServiceStats:
     total_ms: float = 0.0
     total_candidates: int = 0
     build_s: float = 0.0
+    # mutation counters
+    inserted: int = 0          # items appended via insert()
+    insert_batches: int = 0
+    insert_ms: float = 0.0
+    deleted: int = 0           # items tombstoned via delete()
+    delete_batches: int = 0
+    compactions: int = 0       # explicit + automatic (max_deltas) compactions
+    compact_ms: float = 0.0    # explicit compact() wall time only
 
     @property
     def mean_latency_ms(self):
@@ -55,29 +71,36 @@ class ServiceStats:
     def qps(self):
         return self.queries / max(self.total_ms / 1e3, 1e-9)
 
+    @property
+    def insert_items_per_s(self):
+        return self.inserted / max(self.insert_ms / 1e3, 1e-9)
+
     def reset(self):
-        """Zero the query counters (e.g. after jit warmup); keeps build_s."""
+        """Zero the query counters (e.g. after jit warmup); keeps build_s
+        and the mutation counters."""
         self.queries = self.batches = 0
         self.total_ms = 0.0
         self.total_candidates = 0
 
 
 class LSHService:
-    """build() once, then serve query batches."""
+    """build() once, then serve query batches and streaming mutations."""
 
     def __init__(self, family: LSHFamily, metric: str = "euclidean",
                  device: bool = True, bucket_cap: int | None = None,
-                 shards: int | None = None):
+                 shards: int | None = None, max_deltas: int = 8):
         if shards is not None:
             if not device:
                 raise ValueError(
                     "shards requires the device index (pass device=True); "
                     "the host-dict path has no sharded layout")
             self.index = ShardedLSHIndex(family, metric=metric, shards=shards,
-                                         bucket_cap=bucket_cap)
+                                         bucket_cap=bucket_cap,
+                                         max_deltas=max_deltas)
         elif device:
             self.index = DeviceLSHIndex(family, metric=metric,
-                                        bucket_cap=bucket_cap)
+                                        bucket_cap=bucket_cap,
+                                        max_deltas=max_deltas)
         else:
             if bucket_cap is not None:
                 raise ValueError(
@@ -92,28 +115,21 @@ class LSHService:
         self.stats.build_s = time.perf_counter() - t0
         return self
 
+    # -- queries ------------------------------------------------------------
+
     def query_arrays(self, queries, topk: int = 10):
         """Batched raw results: (ids (B, topk), scores (B, topk), n_cand (B,)).
 
-        ids are -1-filled where a row has fewer than topk candidates.
-        Device path: one jit-compiled call; host path: per-query loop.
+        ids are effective (live-corpus) ids, -1-filled where a row has fewer
+        than topk candidates. One jit-compiled call through the shared
+        segment planner for every index deployment.
         """
         n = jax.tree.leaves(queries)[0].shape[0]
         t0 = time.perf_counter()
-        if isinstance(self.index, (DeviceLSHIndex, ShardedLSHIndex)):
-            ids, scores, n_cand = jax.block_until_ready(
-                self.index.query_batch(queries, topk=topk))
-            ids, scores, n_cand = (np.asarray(ids), np.asarray(scores),
-                                   np.asarray(n_cand))
-        else:
-            bad = np.inf if self.index.metric == "euclidean" else -np.inf
-            ids = np.full((n, topk), -1, np.int64)
-            scores = np.full((n, topk), bad, np.float32)
-            n_cand = np.zeros((n,), np.int64)
-            for i in range(n):
-                got, sc, nc = self.index.query(_tree_index(queries, i), topk)
-                ids[i, :got.size], scores[i, :sc.size] = got, sc
-                n_cand[i] = nc
+        ids, scores, n_cand = jax.block_until_ready(
+            self.index.query_batch(queries, topk=topk))
+        ids, scores, n_cand = (np.asarray(ids), np.asarray(scores),
+                               np.asarray(n_cand))
         dt = (time.perf_counter() - t0) * 1e3
         self.stats.queries += n
         self.stats.batches += 1
@@ -131,16 +147,59 @@ class LSHService:
                         "candidates": int(nc)})
         return out
 
+    # -- mutations ----------------------------------------------------------
+
+    def _mutable_index(self) -> _SegmentedIndex:
+        if not isinstance(self.index, _SegmentedIndex):
+            raise TypeError(
+                "the host index is rebuild-only; streaming mutations need "
+                "the device or sharded index (device=True)")
+        return self.index
+
+    def insert(self, batch, batch_size: int = 2048) -> "LSHService":
+        """Append a batch of items (one delta segment, served immediately)."""
+        index = self._mutable_index()
+        n = jax.tree.leaves(batch)[0].shape[0]
+        t0 = time.perf_counter()
+        index.insert(batch, batch_size=batch_size)
+        jax.block_until_ready(
+            [seg.sorted_keys for seg in
+             [index.store.base] + index.store.deltas])
+        self.stats.insert_ms += (time.perf_counter() - t0) * 1e3
+        self.stats.inserted += n
+        self.stats.insert_batches += 1
+        self.stats.compactions = index.compactions
+        return self
+
+    def delete(self, ids) -> int:
+        """Tombstone items by their current effective ids; returns count."""
+        n = self._mutable_index().delete(ids)
+        self.stats.deleted += n
+        self.stats.delete_batches += 1
+        return n
+
+    def compact(self) -> "LSHService":
+        """Fold deltas + tombstones back into one base segment."""
+        index = self._mutable_index()
+        t0 = time.perf_counter()
+        index.compact()
+        jax.block_until_ready(index.sorted_keys)
+        self.stats.compact_ms += (time.perf_counter() - t0) * 1e3
+        self.stats.compactions = index.compactions
+        return self
+
 
 def build_service(key, kind: str, dims: Sequence[int], corpus, *,
                   metric: str | None = None, num_codes: int = 8,
                   num_tables: int = 8, rank: int = 4,
                   bucket_width: float = 4.0, device: bool = True,
                   bucket_cap: int | None = None,
-                  shards: int | None = None) -> LSHService:
+                  shards: int | None = None,
+                  max_deltas: int = 8) -> LSHService:
     metric = metric or ("cosine" if kind.endswith("srp") else "euclidean")
     fam = make_family(key, kind, dims, num_codes=num_codes,
                       num_tables=num_tables, rank=rank,
                       bucket_width=bucket_width)
     return LSHService(fam, metric=metric, device=device,
-                      bucket_cap=bucket_cap, shards=shards).build(corpus)
+                      bucket_cap=bucket_cap, shards=shards,
+                      max_deltas=max_deltas).build(corpus)

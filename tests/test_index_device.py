@@ -1,9 +1,12 @@
 """Device-resident index vs the host-dict reference: bucket membership and
 top-k results must agree for every hash family kind and both metrics.
 
-The device index is built with the default exact bucket cap (largest bucket
-observed at build time), so candidate sets are identical by construction —
-these tests pin that contract.
+The device index is a segment store holding one base ``TableSegment``
+(sorted keys + permutation + corpus slice) built with the default exact
+bucket cap (largest bucket observed at build time), so candidate sets are
+identical to the host dict buckets by construction — these tests pin that
+contract, plus the segment-store shape of a fresh build. Streaming
+mutations are covered in tests/test_index_mutation.py.
 """
 
 import jax
@@ -11,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import DeviceLSHIndex, HostLSHIndex, make_family
+from repro.core import (DeviceLSHIndex, HostLSHIndex, TableSegment,
+                        make_family)
 from repro.core.index import _combine_codes, _hash_one, _max_run_length
 from repro.core.lsh import ALL_KINDS
 
@@ -165,6 +169,49 @@ class TestEmptyAndDegenerateQueries:
         assert set(h_ids.tolist()) == set(d_ids.tolist())
         if d_n:
             assert np.isnan(d_scores).all() and np.isnan(h_scores).all()
+
+
+class TestSegmentStoreStructure:
+    """A fresh build is a pristine single-segment store: one base
+    TableSegment, no deltas, no tombstones, effective ids == physical."""
+
+    def test_fresh_build_store_shape(self):
+        corpus, _ = _data(7)
+        _, device = _build_pair("cp-e2lsh", "euclidean", corpus)
+        store = device.store
+        assert isinstance(store.base, TableSegment)
+        assert not store.deltas and not store.mutated
+        assert store.n_live == N_CORPUS and store.n_dead == 0
+        assert store.base.keys.shape == (N_CORPUS, 4)          # (m, L)
+        assert store.base.sorted_keys.shape == (4, N_CORPUS)   # (L, m)
+        assert bool(store.live_host.all())
+        live, eff = store._luts[0]
+        assert live.shape == (N_CORPUS + 1,) and not bool(live[-1])
+        np.testing.assert_array_equal(np.asarray(eff), np.arange(N_CORPUS))
+        assert device.effective_corpus() is store.base.corpus  # zero-copy
+
+    def test_sorted_keys_are_permuted_build_keys(self):
+        """The segment's sorted view is exactly its corpus-order keys run
+        through the stored permutation — what compaction relies on."""
+        corpus, _ = _data(8)
+        _, device = _build_pair("tt-e2lsh", "euclidean", corpus)
+        seg = device.store.base
+        keys_t = np.asarray(seg.keys).T                        # (L, m)
+        np.testing.assert_array_equal(
+            np.take_along_axis(keys_t, np.asarray(seg.perm), axis=1),
+            np.asarray(seg.sorted_keys))
+        assert (np.diff(np.asarray(seg.sorted_keys).astype(np.int64),
+                        axis=1) >= 0).all()
+
+    def test_host_query_batch_shares_planner_results(self):
+        """HostLSHIndex serves batches through the same segment planner:
+        results are bit-identical to the device index (same store arrays)."""
+        corpus, queries = _data(9)
+        host, device = _build_pair("cp-srp", "cosine", corpus)
+        h = host.query_batch(queries, topk=TOPK)
+        d = device.query_batch(queries, topk=TOPK)
+        for a, b in zip(h, d):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 class TestBuildTimeEdgeCases:

@@ -1,0 +1,412 @@
+"""Streaming mutations vs fresh rebuild: after any interleaving of
+``insert`` / ``delete`` batches, ``query_batch`` must equal an index
+freshly built over the same effective corpus — both while delta segments
+and tombstones are outstanding and after ``compact()`` folds them back into
+one base segment — for every hash family kind, both metrics, the device and
+the sharded layout, and S in {1, 2, 4} shards. Tombstoned items must never
+surface in any top-k.
+
+Equality granularity: ids, candidate counts, and candidate sets are
+bit-identical in every cell. Scores are bit-identical after ``compact()``
+— the compacted store rebuilds the exact arrays a fresh build produces, so
+the query programs coincide — and reproduce to float-reassociation noise
+(asserted at <= 16 ulp) while deltas are outstanding: the mutated program
+ranks per segment at different candidate widths than the fresh single-table
+program, and XLA may re-vectorize the score reductions per shape (the same
+cross-program wobble tests/test_index_sharded.py documents for the vmap
+fallback, here three orders of magnitude tighter). A subprocess leg forces
+the 4-device host platform so the shard_map path of the mutated store is
+exercised in every tier-1 run; the CI 4-device leg runs this whole file
+in-process.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CPTensor, DeviceLSHIndex, HostLSHIndex,
+                        ShardedLSHIndex, cp_random_data, make_family)
+from repro.core.lsh import ALL_KINDS
+from repro.serving.lsh_service import LSHService
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+DIMS = (4, 4, 4)
+N_CORPUS, N_QUERIES, TOPK = 48, 4, 5
+SHARD_COUNTS = (1, 2, 4)
+# two insert batches and two delete batches, interleaved; delete ids are
+# effective ids at the time of the call and span base + delta segments
+N_INS1, N_INS2 = 12, 9
+DEL1 = np.array([3, 40, 50, 59])   # valid in [0, 60): base + first delta
+DEL2 = np.array([0, 33, 64])       # valid in [0, 65): post-DEL1 numbering
+
+
+def _data(seed=0):
+    kc, kq = jax.random.split(jax.random.PRNGKey(seed))
+    corpus = jax.random.normal(kc, (N_CORPUS,) + DIMS)
+    queries = corpus[:N_QUERIES] + 0.1 * jax.random.normal(
+        kq, (N_QUERIES,) + DIMS)
+    return corpus, queries
+
+
+def _inserts(seed=100):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(k1, (N_INS1,) + DIMS),
+            jax.random.normal(k2, (N_INS2,) + DIMS))
+
+
+def _family(kind):
+    k, w = (3, 6.0) if "e2lsh" in kind else (6, 0.0)
+    return make_family(jax.random.PRNGKey(42), kind, DIMS, num_codes=k,
+                       num_tables=4, rank=2, bucket_width=max(w, 1.0))
+
+
+def _mutate(index, corpus):
+    """Apply the fixed insert/delete interleaving; return the effective
+    corpus (numpy) a fresh rebuild must be bit-identical to."""
+    ins1, ins2 = _inserts()
+    eff = np.asarray(corpus)
+    index.insert(ins1)
+    eff = np.concatenate([eff, np.asarray(ins1)])
+    index.delete(DEL1)
+    eff = np.delete(eff, DEL1, axis=0)
+    index.insert(ins2)
+    eff = np.concatenate([eff, np.asarray(ins2)])
+    index.delete(DEL2)
+    eff = np.delete(eff, DEL2, axis=0)
+    return eff
+
+
+def _assert_bit_identical(got, want, msg=None, scores_exact=True):
+    g_ids, g_sc, g_nc = (np.asarray(a) for a in got)
+    w_ids, w_sc, w_nc = (np.asarray(a) for a in want)
+    np.testing.assert_array_equal(g_ids, w_ids, err_msg=msg)
+    np.testing.assert_array_equal(g_nc, w_nc, err_msg=msg)
+    if scores_exact:
+        np.testing.assert_array_equal(g_sc, w_sc, err_msg=msg)
+    else:
+        fin = np.isfinite(w_sc)
+        np.testing.assert_array_equal(np.isfinite(g_sc), fin, err_msg=msg)
+        np.testing.assert_array_equal(g_sc[~fin], w_sc[~fin], err_msg=msg)
+        np.testing.assert_array_max_ulp(g_sc[fin], w_sc[fin], maxulp=16)
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+@pytest.mark.parametrize("kind", ALL_KINDS)
+class TestStreamingParityDevice:
+    def test_mutated_equals_fresh_rebuild(self, kind, metric):
+        corpus, queries = _data()
+        fam = _family(kind)
+        mutated = DeviceLSHIndex(fam, metric=metric, max_deltas=8).build(
+            corpus)
+        eff = _mutate(mutated, corpus)
+        assert mutated.size == eff.shape[0]
+        assert len(mutated.store.deltas) == 2 and mutated.store.mutated
+        fresh = DeviceLSHIndex(fam, metric=metric).build(jnp.asarray(eff))
+        for batch in (1, N_QUERIES):
+            want = fresh.query_batch(queries[:batch], topk=TOPK)
+            _assert_bit_identical(
+                mutated.query_batch(queries[:batch], topk=TOPK), want,
+                (kind, metric, batch, "uncompacted"), scores_exact=False)
+        mutated.compact()
+        assert not mutated.store.mutated and not mutated.store.deltas
+        for batch in (1, N_QUERIES):
+            want = fresh.query_batch(queries[:batch], topk=TOPK)
+            _assert_bit_identical(
+                mutated.query_batch(queries[:batch], topk=TOPK), want,
+                (kind, metric, batch, "compacted"))
+
+    def test_sharded_mutated_equals_fresh_rebuild(self, kind, metric):
+        corpus, queries = _data()
+        fam = _family(kind)
+        mutated = ShardedLSHIndex(fam, metric=metric, shards=2,
+                                  max_deltas=8).build(corpus)
+        eff = _mutate(mutated, corpus)
+        fresh = ShardedLSHIndex(fam, metric=metric, shards=2).build(
+            jnp.asarray(eff))
+        want = fresh.query_batch(queries, topk=TOPK)
+        _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
+                              want, (kind, metric, "uncompacted"),
+                              scores_exact=False)
+        mutated.compact()
+        _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
+                              want, (kind, metric, "compacted"))
+
+
+class TestStreamingParityShardCounts:
+    """The acceptance sweep: S in {1, 2, 4}, before and after compact()."""
+
+    @pytest.mark.parametrize("shards", SHARD_COUNTS)
+    def test_all_shard_counts(self, shards):
+        corpus, queries = _data(1)
+        fam = _family("cp-e2lsh")
+        mutated = ShardedLSHIndex(fam, metric="euclidean", shards=shards,
+                                  max_deltas=8).build(corpus)
+        eff = _mutate(mutated, corpus)
+        fresh = ShardedLSHIndex(fam, metric="euclidean",
+                                shards=shards).build(jnp.asarray(eff))
+        want = fresh.query_batch(queries, topk=TOPK)
+        _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
+                              want, (shards, "uncompacted"),
+                              scores_exact=False)
+        # candidate sets (effective ids) also match the fresh rebuild
+        for i in range(N_QUERIES):
+            np.testing.assert_array_equal(mutated.candidates(queries[i]),
+                                          fresh.candidates(queries[i]))
+        mutated.compact()
+        _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
+                              want, (shards, "compacted"))
+
+    def test_cp_format_corpus_mutations(self):
+        """Pytree (CP factor) corpora stream through insert/delete/compact
+        leaf-wise, like the build path."""
+        n = 30
+        keys = jax.random.split(jax.random.PRNGKey(7), n + 8)
+        stack = lambda ks: CPTensor(
+            factors=tuple(
+                jnp.stack([cp_random_data(k, DIMS, 3).factors[m]
+                           for k in ks]) for m in range(3)), scale=1.0)
+        corpus, batch = stack(keys[:n]), stack(keys[n:])
+        fam = _family("cp-e2lsh")
+        mutated = DeviceLSHIndex(fam, metric="euclidean").build(corpus)
+        mutated.insert(batch)
+        mutated.delete([5, n + 2])
+        eff_ids = np.delete(np.arange(n + 8), [5, n + 2])
+        eff = jax.tree.map(lambda *xs: jnp.concatenate(xs)[eff_ids],
+                           corpus, batch)
+        fresh = DeviceLSHIndex(fam, metric="euclidean").build(eff)
+        queries = jax.tree.map(lambda a: a[:3], corpus)
+        _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
+                              fresh.query_batch(queries, topk=TOPK),
+                              scores_exact=False)
+        mutated.compact()
+        _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
+                              fresh.query_batch(queries, topk=TOPK))
+
+
+class TestTombstones:
+    def test_deleted_item_never_surfaces(self):
+        """An exact-member query stops returning its item the moment the
+        item is tombstoned, even with the full corpus as topk."""
+        corpus, _ = _data(2)
+        fam = _family("cp-e2lsh")
+        idx = DeviceLSHIndex(fam, metric="euclidean").build(corpus)
+        ids, scores, _ = idx.query(corpus[11], topk=1)
+        assert ids[0] == 11 and scores[0] < 1e-3
+        idx.delete([11])
+        ids, scores, n_cand = idx.query(corpus[11], topk=N_CORPUS)
+        assert n_cand <= N_CORPUS - 1
+        assert not (scores < 1e-3).any()   # the deleted vector is gone
+        corpus_eff = np.asarray(idx.effective_corpus())
+        for i, s in zip(ids, scores):      # returned ids index the live set
+            np.testing.assert_allclose(
+                np.linalg.norm(corpus_eff[i].ravel()
+                               - np.asarray(corpus[11]).ravel()),
+                s, rtol=1e-4, atol=1e-5)
+
+    def test_tombstones_lower_candidate_counts(self):
+        corpus, queries = _data(3)
+        fam = _family("tt-srp")
+        idx = DeviceLSHIndex(fam, metric="cosine").build(corpus)
+        before = np.asarray(idx.query_batch(queries, topk=TOPK)[2])
+        cand = idx.candidates(queries[0])
+        assert cand.size > 0
+        idx.delete(cand)                   # kill query 0's whole bucket set
+        after_cand = idx.candidates(
+            jax.tree.map(lambda a: a, queries[0]))
+        assert after_cand.size == 0 or not np.intersect1d(
+            after_cand, cand).size
+        after = np.asarray(idx.query_batch(queries, topk=TOPK)[2])
+        assert (after <= before).all()
+        assert int(np.asarray(idx.query_batch(queries[:1], TOPK)[2])[0]) == 0
+
+    def test_delete_out_of_range_raises(self):
+        corpus, _ = _data(4)
+        idx = DeviceLSHIndex(_family("srp"), metric="cosine").build(corpus)
+        with pytest.raises(IndexError):
+            idx.delete([N_CORPUS])
+        with pytest.raises(IndexError):
+            idx.delete([-1])
+        idx.delete([0, 0, 1])              # duplicates collapse
+        assert idx.size == N_CORPUS - 2
+
+
+class TestMutationContract:
+    def test_insert_past_max_deltas_auto_compacts(self):
+        corpus, queries = _data(5)
+        fam = _family("cp-e2lsh")
+        idx = DeviceLSHIndex(fam, metric="euclidean", max_deltas=1).build(
+            corpus)
+        ins1, ins2 = _inserts()
+        idx.insert(ins1)
+        assert len(idx.store.deltas) == 1 and idx.compactions == 0
+        idx.insert(ins2)                   # 2 > max_deltas -> auto-compact
+        assert len(idx.store.deltas) == 0 and idx.compactions == 1
+        full = jnp.concatenate([corpus, ins1, ins2])
+        fresh = DeviceLSHIndex(fam, metric="euclidean").build(full)
+        _assert_bit_identical(idx.query_batch(queries, topk=TOPK),
+                              fresh.query_batch(queries, topk=TOPK))
+
+    def test_compact_pristine_is_noop(self):
+        corpus, _ = _data(6)
+        idx = DeviceLSHIndex(_family("e2lsh"), metric="euclidean").build(
+            corpus)
+        store = idx.store
+        idx.compact()
+        assert idx.store is store and idx.compactions == 0
+
+    def test_compact_empty_raises(self):
+        corpus, _ = _data(7)
+        idx = DeviceLSHIndex(_family("srp"), metric="cosine").build(corpus)
+        idx.delete(np.arange(N_CORPUS))
+        assert idx.size == 0
+        with pytest.raises(ValueError):
+            idx.compact()
+
+    def test_effective_corpus_tracks_mutations(self):
+        corpus, _ = _data(8)
+        idx = DeviceLSHIndex(_family("cp-srp"), metric="cosine").build(corpus)
+        eff = _mutate(idx, corpus)
+        np.testing.assert_array_equal(np.asarray(idx.effective_corpus()), eff)
+        np.testing.assert_array_equal(np.asarray(idx.corpus), eff)
+        idx.compact()
+        np.testing.assert_array_equal(np.asarray(idx.effective_corpus()), eff)
+
+    def test_sharded_corpus_tracks_mutations(self):
+        """ShardedLSHIndex.corpus follows the live corpus after mutations,
+        same contract as DeviceLSHIndex.corpus."""
+        corpus, _ = _data(8)
+        idx = ShardedLSHIndex(_family("cp-srp"), metric="cosine",
+                              shards=2).build(corpus)
+        np.testing.assert_array_equal(np.asarray(idx.corpus),
+                                      np.asarray(corpus))
+        eff = _mutate(idx, corpus)
+        np.testing.assert_array_equal(np.asarray(idx.corpus), eff)
+        idx.compact()
+        np.testing.assert_array_equal(np.asarray(idx.corpus), eff)
+
+    def test_insert_empty_batch_is_noop(self):
+        corpus, queries = _data(6)
+        idx = DeviceLSHIndex(_family("e2lsh"), metric="euclidean").build(
+            corpus)
+        before = idx.query_batch(queries, topk=TOPK)
+        idx.insert(jnp.zeros((0,) + DIMS))
+        assert len(idx.store.deltas) == 0 and idx.size == N_CORPUS
+        _assert_bit_identical(idx.query_batch(queries, topk=TOPK), before)
+
+
+class TestServiceMutations:
+    def test_endpoints_and_counters(self):
+        corpus, queries = _data(9)
+        fam = _family("cp-e2lsh")
+        svc = LSHService(fam, metric="euclidean", shards=2).build(corpus)
+        ins1, ins2 = _inserts()
+        svc.insert(ins1)
+        assert svc.delete(DEL1) == DEL1.size
+        svc.insert(ins2)
+        st = svc.stats
+        assert st.inserted == N_INS1 + N_INS2 and st.insert_batches == 2
+        assert st.deleted == DEL1.size and st.delete_batches == 1
+        assert st.insert_ms > 0 and st.insert_items_per_s > 0
+        out = svc.query_batch(queries, topk=TOPK)
+        assert len(out) == N_QUERIES
+        svc.compact()
+        assert st.compactions == 1 and st.compact_ms > 0
+        assert not svc.index.store.mutated
+        # endpoints mirror direct index mutations
+        fresh = ShardedLSHIndex(fam, metric="euclidean", shards=2).build(
+            svc.index.effective_corpus())
+        _assert_bit_identical(svc.index.query_batch(queries, topk=TOPK),
+                              fresh.query_batch(queries, topk=TOPK))
+
+    def test_host_service_is_rebuild_only(self):
+        corpus, _ = _data(10)
+        svc = LSHService(_family("srp"), metric="cosine",
+                         device=False).build(corpus)
+        ins1, _ = _inserts()
+        with pytest.raises(TypeError):
+            svc.insert(ins1)
+        with pytest.raises(TypeError):
+            svc.delete([0])
+        with pytest.raises(TypeError):
+            svc.compact()
+
+    def test_recall_against_effective_corpus(self):
+        from repro.core import recall_at_k
+        corpus, queries = _data(11)
+        idx = DeviceLSHIndex(_family("cp-e2lsh"),
+                             metric="euclidean").build(corpus)
+        _mutate(idx, corpus)
+        stats = recall_at_k(idx, queries, topk=TOPK)
+        assert 0.0 <= stats["recall"] <= 1.0
+        assert stats["corpus_size"] == idx.size
+
+
+class TestShardMapStreamingMultiDevice:
+    """Force a 4-device host platform in a subprocess so the shard_map path
+    of the mutated store runs in every tier-1 invocation (the flag must be
+    set before jax initialises — same pattern as test_index_sharded.py)."""
+
+    def test_shard_map_mutation_parity_bit_identical(self):
+        code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import DeviceLSHIndex, ShardedLSHIndex, make_family
+        assert len(jax.devices()) == 4
+        DIMS = (4, 4, 4)
+        kc, kq, k1, k2 = jax.random.split(jax.random.PRNGKey(0), 4)
+        corpus = jax.random.normal(kc, (67,) + DIMS)
+        queries = corpus[:4] + 0.1 * jax.random.normal(kq, (4,) + DIMS)
+        ins1 = jax.random.normal(k1, (12,) + DIMS)
+        ins2 = jax.random.normal(k2, (9,) + DIMS)
+        dels1, dels2 = [3, 40, 66, 75], [0, 33, 70]
+        eff = np.concatenate([np.asarray(corpus), np.asarray(ins1)])
+        eff = np.delete(eff, dels1, axis=0)
+        eff = np.concatenate([eff, np.asarray(ins2)])
+        eff = np.delete(eff, dels2, axis=0)
+        for kind, metric in (("cp-e2lsh", "euclidean"), ("tt-srp", "cosine")):
+            k, w = (3, 6.0) if "e2lsh" in kind else (6, 0.0)
+            fam = make_family(jax.random.PRNGKey(42), kind, DIMS,
+                              num_codes=k, num_tables=4, rank=2,
+                              bucket_width=max(w, 1.0))
+            single = DeviceLSHIndex(fam, metric=metric).build(corpus)
+            single.insert(ins1); single.delete(dels1)
+            single.insert(ins2); single.delete(dels2)
+            d = single.query_batch(queries, topk=5)
+            for s in (2, 4):
+                sharded = ShardedLSHIndex(fam, metric=metric,
+                                          shards=s).build(corpus)
+                assert sharded.mesh is not None, (kind, s)
+                sharded.insert(ins1); sharded.delete(dels1)
+                sharded.insert(ins2); sharded.delete(dels2)
+                fresh = ShardedLSHIndex(fam, metric=metric,
+                                        shards=s).build(jnp.asarray(eff))
+                for mutated in (sharded, sharded.compact()):
+                    assert mutated.sorted_keys.sharding.spec[0] == "shard"
+                    g = mutated.query_batch(queries, topk=5)
+                    f = fresh.query_batch(queries, topk=5)
+                    for a, b in zip(g, f):   # vs fresh rebuild: bit-equal
+                        np.testing.assert_array_equal(
+                            np.asarray(a), np.asarray(b),
+                            err_msg=(kind, metric, s, "fresh"))
+                    for a, b in zip(g, d):   # vs single device: bit-equal
+                        np.testing.assert_array_equal(
+                            np.asarray(a), np.asarray(b),
+                            err_msg=(kind, metric, s, "device"))
+        print("shard_map streaming parity ok")
+        """
+        assert "shard_map streaming parity ok" in _run_sub(code)
+
+
+def _run_sub(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout

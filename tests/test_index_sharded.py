@@ -1,8 +1,10 @@
 """Mesh-sharded index vs the single-device DeviceLSHIndex: candidate sets
 and top-k results must be identical for every family kind, both metrics,
 S in {1, 2, 4} shard counts, and batch sizes 1 and >1 (shard-count
-invariance). The corpus size is coprime to the shard counts so the padded
-last shard is always exercised.
+invariance). Both indexes are segment stores — the sharded one holds a
+``ShardedSegment`` base laid over the mesh axis (streaming-mutation
+coverage lives in tests/test_index_mutation.py). The corpus size is coprime
+to the shard counts so the padded last shard is always exercised.
 
 On a multi-device host platform (the CI leg runs this file with
 XLA_FLAGS=--xla_force_host_platform_device_count=4) every shard count takes
@@ -27,7 +29,7 @@ import numpy as np
 import pytest
 
 from repro.core import (CPTensor, DeviceLSHIndex, ShardedLSHIndex,
-                        cp_random_data, make_family)
+                        ShardedSegment, cp_random_data, make_family)
 from repro.core.lsh import ALL_KINDS
 from repro.serving.lsh_service import LSHService, build_service
 
@@ -132,6 +134,38 @@ class TestShardedIndexContract:
     def test_shards_must_be_positive(self):
         with pytest.raises(ValueError):
             ShardedLSHIndex(_family("srp"), metric="cosine", shards=0)
+
+    def test_fresh_build_store_shape(self):
+        """A fresh sharded build is a pristine store whose base is one
+        ShardedSegment; pad slots are born dead (never queryable)."""
+        corpus, _ = _data(6)
+        sharded = ShardedLSHIndex(_family("cp-e2lsh"), metric="euclidean",
+                                  shards=4).build(corpus)
+        store = sharded.store
+        assert isinstance(store.base, ShardedSegment)
+        assert not store.deltas and not store.mutated
+        n_s = -(-N_CORPUS // 4)
+        assert store.base.shard_size == n_s
+        assert store.base.slots == 4 * n_s > N_CORPUS      # padded
+        assert store.n_live == N_CORPUS == sharded.size
+        assert not store.live_host[N_CORPUS:].any()        # pads dead
+        live, eff = store._luts[0]
+        assert live.shape == (4, n_s + 1)
+        assert not np.asarray(live[:, -1]).any()           # sentinel column
+        np.testing.assert_array_equal(
+            np.asarray(eff).reshape(-1)[:N_CORPUS], np.arange(N_CORPUS))
+
+    def test_coarse_family_warning_both_layouts(self):
+        """The cap*L > n warning fires from the shared segment-build path
+        for the device AND the sharded layout (the sharded build used to
+        skip it)."""
+        corpus, _ = _data(7)
+        fam = make_family(jax.random.PRNGKey(3), "srp", DIMS, num_codes=1,
+                          num_tables=6, rank=2)   # 1-bit keys: huge buckets
+        with pytest.warns(UserWarning, match="DeviceLSHIndex"):
+            DeviceLSHIndex(fam, metric="cosine").build(corpus)
+        with pytest.warns(UserWarning, match="ShardedLSHIndex"):
+            ShardedLSHIndex(fam, metric="cosine", shards=2).build(corpus)
 
     def test_keep_corpus_false_still_serves_queries(self):
         """Queries re-rank against the sharded slices only; the unsharded
