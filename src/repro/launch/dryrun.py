@@ -85,6 +85,10 @@ def collective_stats(hlo_text: str) -> dict:
     return stats
 
 
+def _n_chips(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))
+
+
 def _constrain(tree, axes_tree):
     def leaf_is_axes(a):
         return isinstance(a, tuple) and all(isinstance(e, (str, type(None)))
@@ -104,7 +108,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         return {"status": "skipped",
                 "reason": "pure full-attention arch at 500k (DESIGN.md)"}
     mesh = make_production_mesh(multi_pod=multi_pod)
-    n_chips = int(np.prod(list(mesh.shape.values())))
+    n_chips = _n_chips(mesh)
     t0 = time.time()
 
     overrides = rule_overrides(cfg, mesh)
@@ -254,6 +258,7 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
     from repro.distributed import index_sharding
 
     mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = _n_chips(mesh)
     t0 = time.time()
     with axis_rules(mesh) as ctx:
         shards = ctx.axis_size(ctx.rules["lsh_shard"])
@@ -311,6 +316,7 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         "arch": "lsh-index",
         "shape": f"n{corpus_n}_b{batch}",
         "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
         "kind": "lsh_query",
         "shards": shards,
         "shard_axis": shard_axis,

@@ -11,7 +11,7 @@ import glob
 import json
 import os
 
-from repro.launch.roofline import analyse
+from repro.launch.roofline import analyse, fmt_cell
 
 
 def dryrun_table(directory: str) -> str:
@@ -50,18 +50,29 @@ def roofline_table(directory: str, mesh: str = "16x16") -> str:
             continue
         a = analyse(r)
         dom = a["bottleneck"]
-        move = {
-            "compute": "fewer FLOPs: lighter remat policy / skip-chunk "
-                       "causal attention / lower capacity factor",
-            "memory": "fewer HBM bytes: larger fused blocks (Pallas), "
-                      "bf16 master/moment dtypes, wider per-chip tiles",
-            "collective": "fewer link bytes: reduce-scatter grads, "
-                          "collective-matmul overlap, wider TP tiles",
-        }[dom]
+        if a["kind"] == "lsh_query":
+            move = {
+                "compute": "fewer probe FLOPs: smaller bucket_cap / fewer "
+                           "tables, lower-rank hash family",
+                "memory": "fewer probe bytes: smaller bucket_cap / fewer "
+                          "tables, compact() delta segments",
+                "collective": "fewer merge bytes: smaller topk / query "
+                              "batch, narrower lsh_shard axis",
+            }[dom]
+        else:
+            move = {
+                "compute": "fewer FLOPs: lighter remat policy / skip-chunk "
+                           "causal attention / lower capacity factor",
+                "memory": "fewer HBM bytes: larger fused blocks (Pallas), "
+                          "bf16 master/moment dtypes, wider per-chip tiles",
+                "collective": "fewer link bytes: reduce-scatter grads, "
+                              "collective-matmul overlap, wider TP tiles",
+            }[dom]
         rows.append(
             f"| {a['arch']} | {a['shape']} | {a['compute_s']:.2e} "
             f"| {a['memory_s']:.2e} | {a['collective_s']:.2e} | **{dom}** "
-            f"| {a['useful_flops_ratio']:.2f} | {a['roofline_mfu'] * 100:.1f}% "
+            f"| {fmt_cell(a['useful_flops_ratio'], '.2f')} "
+            f"| {fmt_cell(a['roofline_mfu'], '.1f', 100, '%')} "
             f"| {a['mem_gib_per_device']:.1f} | {move} |")
     hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
            "| MODEL/HLO | roofline-MFU | HBM GiB | what moves the dominant"
@@ -80,7 +91,7 @@ def perf_table(directory: str) -> str:
         rows.append(
             f"| {cell} | {r['experiment']} | {a['compute_s']:.2e} "
             f"| {a['memory_s']:.2e} | {a['collective_s']:.2e} "
-            f"| {a['bottleneck']} | {a['roofline_mfu'] * 100:.1f}% "
+            f"| {a['bottleneck']} | {fmt_cell(a['roofline_mfu'], '.1f', 100, '%')} "
             f"| {a['mem_gib_per_device']:.1f} |")
     hdr = ("| cell | experiment | compute s | memory s | collective s "
            "| dominant | roofline-MFU | HBM GiB |\n"

@@ -8,6 +8,10 @@ with ring factors: all-reduce 2x (reduce + broadcast ring), all-gather /
 reduce-scatter / all-to-all / collective-permute 1x of the recorded result
 bytes. MODEL_FLOPS = 6 N D (train) or 2 N D (inference), N = active params.
 
+``kind == "lsh_query"`` records (the sharded ANN index cell from
+``dryrun --lsh-index``) share the compute/memory/collective terms but have
+no model-FLOPs notion — their MODEL/HLO and MFU columns render as "—".
+
 Emits the EXPERIMENTS.md §Roofline table + per-cell bottleneck statements.
 """
 
@@ -43,6 +47,23 @@ def analyse(rec: dict) -> dict:
     bottleneck = max(terms, key=terms.get)
     step_t = max(terms.values())
 
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "bottleneck": bottleneck,
+        "model_flops_per_chip": None,
+        "hlo_flops_per_chip": flops,
+        "useful_flops_ratio": None,
+        "roofline_mfu": None,
+        "mem_gib_per_device": rec["memory"]["peak_per_device_bytes"] / 2**30,
+        "collective_bytes": coll_detail,
+        "fallbacks": rec.get("sharding_fallbacks", []),
+    }
+    if rec["kind"] == "lsh_query":
+        # ANN index query program: roofline terms apply, model FLOPs do not.
+        return out
+
     n_chips = rec["n_chips"]
     n_active = rec["n_active_params"]
     if rec["kind"] == "train":
@@ -55,21 +76,16 @@ def analyse(rec: dict) -> dict:
         tokens = {"decode_32k": 128, "long_500k": 1}.get(rec["shape"], 0)
         model_flops = 2.0 * n_active * tokens
     model_flops_per_chip = model_flops / n_chips
-    useful = model_flops_per_chip / max(flops, 1.0)
-    mfu = (model_flops_per_chip / step_t) / PEAK_FLOPS if step_t > 0 else 0.0
+    out["model_flops_per_chip"] = model_flops_per_chip
+    out["useful_flops_ratio"] = model_flops_per_chip / max(flops, 1.0)
+    out["roofline_mfu"] = ((model_flops_per_chip / step_t) / PEAK_FLOPS
+                           if step_t > 0 else 0.0)
+    return out
 
-    return {
-        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
-        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
-        "bottleneck": bottleneck,
-        "model_flops_per_chip": model_flops_per_chip,
-        "hlo_flops_per_chip": flops,
-        "useful_flops_ratio": useful,
-        "roofline_mfu": mfu,
-        "mem_gib_per_device": rec["memory"]["peak_per_device_bytes"] / 2**30,
-        "collective_bytes": coll_detail,
-        "fallbacks": rec.get("sharding_fallbacks", []),
-    }
+
+def fmt_cell(v, spec: str, scale: float = 1.0, suffix: str = "") -> str:
+    """Table cell: em-dash when the field doesn't apply to the record kind."""
+    return "—" if v is None else f"{v * scale:{spec}}{suffix}"
 
 
 def load_records(directory: str, mesh: str = "16x16") -> list[dict]:
@@ -92,8 +108,10 @@ def table(directory: str, mesh: str = "16x16") -> str:
         lines.append(
             f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
             f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
-            f"| **{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} "
-            f"| {r['roofline_mfu']*100:.1f}% | {r['mem_gib_per_device']:.2f} |")
+            f"| **{r['bottleneck']}** "
+            f"| {fmt_cell(r['useful_flops_ratio'], '.2f')} "
+            f"| {fmt_cell(r['roofline_mfu'], '.1f', 100, '%')} "
+            f"| {r['mem_gib_per_device']:.2f} |")
     return "\n".join(lines)
 
 

@@ -267,12 +267,16 @@ class TestShardMapPathMultiDevice:
 
     def test_dryrun_lsh_index_cell_small_mesh(self):
         """The dry-run cost-accounting cell for the sharded index compiles
-        on a shrunk production mesh and reports sane numbers."""
+        on a shrunk production mesh, reports sane numbers, and its record
+        flows through the roofline/report consumers (analyse + both
+        tables), which glob every experiments/dryrun/*.json."""
         code = """
         import os
         os.environ.setdefault("XLA_FLAGS", "")
+        import json, tempfile
         import repro.launch.dryrun as dr
         import repro.launch.mesh as mesh_lib
+        from repro.launch import report, roofline
         mesh_lib.make_production_mesh = lambda multi_pod=False: mesh_lib._mesh(
             (2, 2, 2) if multi_pod else (2, 4),
             ("pod", "data", "model") if multi_pod else ("data", "model"))
@@ -281,8 +285,18 @@ class TestShardMapPathMultiDevice:
             rec = dr.lower_lsh_index_cell(mp, corpus_n=1 << 12, batch=64)
             assert rec["status"] == "ok", rec
             assert rec["shards"] == 2 and rec["shard_axis"] == "data"
+            assert rec["n_chips"] == 8  # (2,2,2) and (2,4) shrunk meshes
             assert rec["cost"]["flops_per_device"] > 0
             assert rec["memory"]["peak_per_device_bytes"] > 0
+            row = roofline.analyse(rec)
+            assert row["bottleneck"] in ("compute", "memory", "collective")
+            assert row["roofline_mfu"] is None  # no model-flops notion
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "lsh_index__16x16.json"), "w") as f:
+                json.dump(rec | {"mesh": "16x16"}, f)
+            assert "lsh-index" in roofline.table(d)
+            assert "lsh-index" in report.dryrun_table(d)
+            assert "fewer probe bytes" in report.roofline_table(d)
         print("lsh dryrun ok")
         """
         assert "lsh dryrun ok" in _run_sub(code, devices=8)
