@@ -4,7 +4,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-index bench-index-sharded bench-index-mut
+.PHONY: test bench bench-index bench-index-sharded bench-index-mut \
+	bench-hash bench-kernels
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -20,3 +21,9 @@ bench-index-sharded:
 
 bench-index-mut:
 	$(PYTHON) -m benchmarks.index_mutation
+
+bench-hash:
+	$(PYTHON) -m benchmarks.hash_throughput
+
+bench-kernels:
+	$(PYTHON) -m benchmarks.kernels

@@ -1,10 +1,30 @@
-"""Benchmark helpers: jit + block_until_ready timing, CSV emission."""
+"""Benchmark helpers: jit + block_until_ready timing, CSV emission, and the
+BENCH_index.json trajectory append shared by the index/hash/kernel benches."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
+
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "..", "BENCH_index.json")
+
+
+def append_trajectory(entry: dict) -> None:
+    """Append one benchmark entry to the repo-root BENCH_index.json history
+    (created if missing, reset if unreadable)."""
+    history = []
+    if os.path.exists(TRAJECTORY):
+        try:
+            with open(TRAJECTORY) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(entry)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(history, f, indent=1)
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:

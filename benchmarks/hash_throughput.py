@@ -1,0 +1,198 @@
+"""Hash-pipeline throughput: the PR 4 batch-native fused path vs the PR 3
+vmap-of-``hash()`` path, per family kind, on corpus-hash (index build) and
+insert-hash (one streaming-insert batch) workloads.
+
+The legacy baseline is reconstructed exactly as PR 3 shipped it: a
+jit(vmap(per-example projection chain -> discretize)) program followed by a
+*separate* uint32 code-combine dispatch per batch. The fused path is
+``segments.bucket_keys`` -> ``LSHFamily.hash_keys``: one jit program from
+the input batch to the (B, L) bucket keys (explicit batched contractions;
+for dense inputs the K projection tensors are densified once per batch and
+hashing is a single (B, d^N) x (d^N, K) matmul — O(K d^N) per example vs
+the chain's O(K R d^N)).
+
+Corpora: dense tensors (what the index benchmarks and the PR 3 insert path
+hash) for every kind, plus in-format CP/TT corpora for the tensorized
+kinds. Backend is the XLA path on CPU; on TPU the same rows time the
+Pallas kernel path (interpret-mode kernel timings on CPU are
+Python-semantics only and are not emitted).
+
+CSV rows (name,us_per_call,derived):
+
+  hash/{kind}/{fmt}/corpus_legacy   us per corpus pass, derived = items/s
+  hash/{kind}/{fmt}/corpus_fused    us per corpus pass, derived = items/s
+  hash/{kind}/{fmt}/corpus_speedup  derived = legacy_us / fused_us (the
+                                    acceptance bar: >= 2x for cp-e2lsh and
+                                    tt-srp on the dense corpus)
+  hash/{kind}/{fmt}/insert_b{B}     us per insert batch, derived =
+                                    fused items/s | speedup vs legacy
+  hash/{kind}/{fmt}/keys_equal     derived = fraction of bucket keys equal
+                                    to the legacy path (float-reassociation
+                                    can flip boundary codes; backends are
+                                    pinned bit-identical by
+                                    tests/test_hash_backends.py instead)
+
+``run()`` appends a trajectory entry to BENCH_index.json (tagged
+``"bench": "hash_throughput"``). BENCH_HASH_N shrinks the corpus for smoke
+runs.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import append_trajectory, emit, time_fn
+from repro.core import cp_random_data, make_family, tt_random_data
+from repro.core.lsh import (E2LSH_KINDS, LSHFamily, _combine_codes,
+                            e2lsh_discretize, make_mults, srp_discretize)
+from repro.core.projections import CPProjection, DenseProjection, TTProjection
+from repro.core.segments import bucket_keys
+from repro.core.tensor_formats import CPTensor, TTTensor
+
+DIMS = (8, 8, 8)
+N_CORPUS = int(os.environ.get("BENCH_HASH_N", 32_768))
+INSERT_BATCH = 1024
+HASH_BATCH = 1024
+NUM_CODES, NUM_TABLES, RANK = 4, 8, 2
+
+# ---------------------------------------------------------------------------
+# The PR 3 hash path, reconstructed: per-example mode-by-mode projection
+# chains under vmap (exactly the retired repro.core.projections single-input
+# contractions), discretize inside the vmap, combine as a second dispatch.
+# ---------------------------------------------------------------------------
+
+
+def _legacy_project_one(p, x):
+    if isinstance(p, CPProjection):
+        if isinstance(x, CPTensor):
+            h = None
+            for a, f in zip(x.factors, p.factors):
+                g = jnp.einsum("ir,kiq->krq", a, f)
+                h = g if h is None else h * g
+            return (x.scale * p.scale) * jnp.sum(h, axis=(1, 2))
+        t = jnp.einsum("i...,kir->kr...", x, p.factors[0])
+        for f in p.factors[1:]:
+            t = jnp.einsum("kri...,kir->kr...", t, f)
+        return p.scale * jnp.sum(t, axis=1)
+    if isinstance(p, TTProjection):
+        if isinstance(x, TTTensor):
+            s = jnp.ones((p.num_hashes, 1, 1), x.cores[0].dtype)
+            for gx, gp in zip(x.cores, p.cores):
+                s = jnp.einsum("kab,aic,kbie->kce", s, gx, gp)
+            return (x.scale * p.scale) * s.reshape(p.num_hashes)
+        t = jnp.einsum("i...,kair->kr...", x, p.cores[0])
+        for core in p.cores[1:]:
+            t = jnp.einsum("kai...,kair->kr...", t, core)
+        return p.scale * t.reshape(p.num_hashes)
+    assert isinstance(p, DenseProjection)
+    return p.scale * (p.matrix @ x.reshape(-1))
+
+
+@jax.jit
+def _legacy_hash_batch(family: LSHFamily, xs):
+    def one(x):
+        v = _legacy_project_one(family.projection, x)
+        if family.kind in E2LSH_KINDS:
+            codes = e2lsh_discretize(v, family.offsets, family.bucket_width)
+        else:
+            codes = srp_discretize(v)
+        return codes.reshape(family.num_tables, family.num_codes)
+    return jax.vmap(one)(xs)
+
+
+@jax.jit
+def _fused_keys(family, xs, mults):
+    # one jit program, exactly as segments.bucket_keys runs it
+    return family.hash_keys(xs, mults)
+
+
+def _legacy_bucket_keys(family, mults, corpus, batch_size):
+    n = jax.tree.leaves(corpus)[0].shape[0]
+    keys = []
+    for start in range(0, n, batch_size):
+        chunk = jax.tree.map(
+            lambda a: a[start:min(start + batch_size, n)], corpus)
+        keys.append(_combine_codes(_legacy_hash_batch(family, chunk),
+                                   jnp.asarray(mults)))
+    return jnp.concatenate(keys, axis=0)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _corpora(kind, key):
+    out = {"dense": jax.random.normal(key, (N_CORPUS,) + DIMS)}
+    if kind.startswith("cp"):
+        out["cp"] = jax.vmap(lambda k: cp_random_data(k, DIMS, 3))(
+            jax.random.split(key, N_CORPUS))
+    elif kind.startswith("tt"):
+        out["tt"] = jax.vmap(lambda k: tt_random_data(k, DIMS, 3))(
+            jax.random.split(key, N_CORPUS))
+    return out
+
+
+def run() -> list[str]:
+    rows = []
+    summary = {}
+    backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    for i, kind in enumerate(("cp-e2lsh", "tt-e2lsh", "cp-srp", "tt-srp",
+                              "e2lsh", "srp")):
+        key = jax.random.PRNGKey(100 + i)
+        fam = make_family(key, kind, DIMS, num_codes=NUM_CODES,
+                          num_tables=NUM_TABLES, rank=RANK, bucket_width=16.0,
+                          hash_backend=backend)
+        mults = make_mults(0, NUM_CODES)
+        for fmt, corpus in _corpora(kind, key).items():
+            tag = f"hash/{kind}/{fmt}"
+            legacy = lambda: _legacy_bucket_keys(fam, mults, corpus,
+                                                 HASH_BATCH)
+            fused = lambda: bucket_keys(fam, mults, corpus, HASH_BATCH)
+            keys_eq = float((np.asarray(legacy()) ==
+                             np.asarray(fused())).mean())
+            us_legacy = time_fn(legacy, warmup=1, iters=3)
+            us_fused = time_fn(fused, warmup=1, iters=3)
+            rows.append(emit(f"{tag}/corpus_legacy", us_legacy,
+                             f"{N_CORPUS / (us_legacy / 1e6):.0f}"))
+            rows.append(emit(f"{tag}/corpus_fused", us_fused,
+                             f"{N_CORPUS / (us_fused / 1e6):.0f}"))
+            speedup = us_legacy / us_fused
+            rows.append(emit(f"{tag}/corpus_speedup", 0.0, f"{speedup:.1f}x"))
+
+            batch = jax.tree.map(lambda a: a[:INSERT_BATCH], corpus)
+            ins_legacy = time_fn(
+                lambda b: _combine_codes(_legacy_hash_batch(fam, b),
+                                         jnp.asarray(mults)), batch)
+            ins_fused = time_fn(
+                lambda b: _fused_keys(fam, b, jnp.asarray(mults)), batch)
+            rows.append(emit(
+                f"{tag}/insert_b{INSERT_BATCH}", ins_fused,
+                f"{INSERT_BATCH / (ins_fused / 1e6):.0f}"
+                f"|{ins_legacy / ins_fused:.1f}x"))
+            rows.append(emit(f"{tag}/keys_equal", 0.0, f"{keys_eq:.4f}"))
+            summary[f"{kind}/{fmt}"] = {
+                "corpus_legacy_items_per_s": round(N_CORPUS / (us_legacy / 1e6)),
+                "corpus_fused_items_per_s": round(N_CORPUS / (us_fused / 1e6)),
+                "corpus_speedup": round(speedup, 1),
+                "insert_fused_items_per_s": round(
+                    INSERT_BATCH / (ins_fused / 1e6)),
+                "insert_speedup": round(ins_legacy / ins_fused, 1),
+                "keys_equal_frac": keys_eq,
+            }
+    append_trajectory({
+        "bench": "hash_throughput",
+        "backend": backend,
+        "n_devices": len(jax.devices()),
+        "corpus_n": N_CORPUS,
+        "hash_batch": HASH_BATCH,
+        "insert_batch": INSERT_BATCH,
+        "kinds": summary,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -30,7 +30,6 @@ BENCH_MUT_N to shrink the corpus for smoke runs.
 
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -38,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import append_trajectory, emit, time_fn
 from repro.core import DeviceLSHIndex, make_family, recall_at_k
 
 DIMS = (8, 8, 8)
@@ -51,10 +50,6 @@ DELETE_BATCH = 1024
 QUERY_BATCH = 1024
 N_RECALL_QUERIES = 64
 BUCKET_CAP = 64               # bound probe width at this corpus scale
-
-_TRAJECTORY = os.path.join(os.path.dirname(__file__), "..",
-                           "BENCH_index.json")
-
 
 def _data():
     kc, kn, kq, ki, kf = jax.random.split(jax.random.PRNGKey(23), 5)
@@ -73,19 +68,6 @@ def _data():
     fam = make_family(kf, "cp-e2lsh", DIMS, num_codes=4, num_tables=8,
                       rank=2, bucket_width=16.0)
     return corpus, queries, inserts, fam
-
-
-def _append_trajectory(entry: dict) -> None:
-    history = []
-    if os.path.exists(_TRAJECTORY):
-        try:
-            with open(_TRAJECTORY) as f:
-                history = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            history = []
-    history.append(entry)
-    with open(_TRAJECTORY, "w") as f:
-        json.dump(history, f, indent=1)
 
 
 def _timed(fn) -> float:
@@ -158,7 +140,7 @@ def run() -> list[str]:
                      us / QUERY_BATCH,
                      f"{QUERY_BATCH / (us / 1e6):.0f}"))
 
-    _append_trajectory({
+    append_trajectory({
         "bench": "index_mutation",
         "n_devices": len(jax.devices()),
         "corpus_n": N_CORPUS,

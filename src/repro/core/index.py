@@ -44,6 +44,10 @@ trigger an automatic compaction.
 Bucket keys are a universal multiply-add hash of the K integer hashcodes in
 uint32 arithmetic (natural mod-2^32 wraparound) so the numpy host path and
 the jnp device path produce bit-identical keys without requiring x64 mode.
+Build, insert, and query hashing all run through the family's batch-native
+``hash_keys`` program (``segments.bucket_keys`` / ``query_keys``):
+projection, discretization, and the key combine are one fused program per
+batch, on the XLA or Pallas backend the family's ``hash_backend`` selects.
 """
 
 from __future__ import annotations

@@ -44,6 +44,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import contractions
+# The universal bucket hash lives with the families (lsh.hash_keys fuses it
+# into the hashing program); re-exported here for the host/table builders.
+from repro.core.lsh import _combine_codes, make_mults
 
 _PAD_KEY = np.uint32(0xFFFFFFFF)  # bucket key of shard-padding slots
 
@@ -61,28 +64,10 @@ def _bad_score(metric: str) -> float:
     return jnp.inf if metric == "euclidean" else -jnp.inf
 
 
-def _combine_codes(codes, mults):
-    """(..., L, K) int codes -> (..., L) uint32 bucket keys.
-
-    sum_k codes[k] * mults[k] in uint32 arithmetic. Distinct per-position
-    multipliers make the key permutation-sensitive; the mod-2^32 wraparound
-    is identical between numpy (host tables) and jnp (device tables), and
-    int32 codes of any magnitude cast to uint32 without overflow errors.
-    """
-    xp = jnp if isinstance(codes, jax.Array) else np
-    prods = codes.astype(xp.uint32) * xp.asarray(mults).astype(xp.uint32)
-    return prods.sum(axis=-1, dtype=xp.uint32)
-
-
-def make_mults(seed: int, num_codes: int) -> np.ndarray:
-    """Per-position odd uint32 multipliers for the universal bucket hash."""
-    rng = np.random.default_rng(seed)
-    return rng.integers(0, 1 << 32, size=(num_codes,), dtype=np.uint32) | 1
-
-
 @jax.jit
-def _hash_batch(family, xs):
-    return family.hash_batch(xs)
+def _hash_keys(family, xs, mults):
+    """One fused program: batched projection -> discretize -> combine."""
+    return family.hash_keys(xs, mults)
 
 
 def bucket_keys(family, mults, corpus, batch_size: int) -> jax.Array:
@@ -90,21 +75,22 @@ def bucket_keys(family, mults, corpus, batch_size: int) -> jax.Array:
 
     The single source of build-time keys for every segment kind — host dict
     tables are filled from np.asarray of this, keeping host/device keys
-    bit-identical.
+    bit-identical. Each batch runs as ONE fused jit program through
+    ``family.hash_keys`` (projection, discretize, and the uint32 radix
+    combine never round-trip through separate dispatches).
     """
     n = jax.tree.leaves(corpus)[0].shape[0]
     mults = jnp.asarray(mults)
     keys = []
     for start in range(0, n, batch_size):
         chunk = tree_index(corpus, slice(start, min(start + batch_size, n)))
-        keys.append(_combine_codes(_hash_batch(family, chunk), mults))
+        keys.append(_hash_keys(family, chunk, mults))
     return jnp.concatenate(keys, axis=0)
 
 
 def query_keys(family, mults, queries) -> jax.Array:
-    """Hash a query batch once -> (L, B) uint32 bucket keys."""
-    codes = family.hash_batch(queries)                    # (B, L, K)
-    return _combine_codes(codes, mults).T                 # (L, B)
+    """Hash a query batch once -> (L, B) uint32 bucket keys (fused)."""
+    return family.hash_keys(queries, jnp.asarray(mults)).T
 
 
 def _max_run_length(sorted_keys: jax.Array) -> jax.Array:

@@ -1,0 +1,65 @@
+"""Shared in-kernel epilogues for the fused hashing kernels.
+
+Both projection kernels (cp_gram, tt_inner) end with the same (BBLK, LBLK*K)
+block of scaled raw <P, X> values sitting in registers/VMEM; these helpers
+turn it into the final output *inside the kernel* so the float values never
+reach HBM:
+
+  "raw"        (BBLK, LBLK, K) float32   the values themselves
+  "e2lsh"      (BBLK, LBLK, K) int32     floor((v + b) / w)   (Defs 10-11)
+  "srp"        (BBLK, LBLK, K) int32     1 iff v > 0          (Defs 12-13)
+  "e2lsh-keys" (BBLK, LBLK)    uint32    radix combine of the e2lsh codes
+  "srp-keys"   (BBLK, LBLK)    uint32    radix combine of the srp codes
+  "srp-packed" (BBLK, LBLK, K/32) uint32 sign bits packed little-endian
+
+The radix combine is sum_k codes[k] * mults[k] in uint32 arithmetic —
+exactly ``repro.core.lsh._combine_codes`` (int32 -> uint32 casts wrap mod
+2^32). The E2LSH quantize uses the same ``(v + b) / w`` division as
+``lsh.e2lsh_discretize`` so codes stay bit-comparable with the XLA path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPILOGUES = ("raw", "e2lsh", "srp", "e2lsh-keys", "srp-keys", "srp-packed")
+
+
+def out_struct(b: int, l: int, k: int, epilogue: str) -> jax.ShapeDtypeStruct:
+    """Full-array output shape/dtype of a fused hash kernel."""
+    if epilogue == "raw":
+        return jax.ShapeDtypeStruct((b, l, k), jnp.float32)
+    if epilogue in ("e2lsh", "srp"):
+        return jax.ShapeDtypeStruct((b, l, k), jnp.int32)
+    if epilogue in ("e2lsh-keys", "srp-keys"):
+        return jax.ShapeDtypeStruct((b, l), jnp.uint32)
+    if epilogue == "srp-packed":
+        assert k % 32 == 0, k
+        return jax.ShapeDtypeStruct((b, l, k // 32), jnp.uint32)
+    raise ValueError(f"epilogue must be one of {EPILOGUES}, got {epilogue!r}")
+
+
+def apply_epilogue(v: jax.Array, offs: jax.Array, mults: jax.Array, *,
+                   epilogue: str, w: float) -> jax.Array:
+    """(BBLK, LBLK, K) scaled raw values -> the kernel's output block.
+
+    offs: (LBLK, K) float32 E2LSH offsets (ignored by srp/raw);
+    mults: (1, K) uint32 radix multipliers (ignored unless *-keys).
+    """
+    if epilogue == "raw":
+        return v
+    if epilogue.startswith("e2lsh"):
+        codes = jnp.floor((v + offs[None]) / w).astype(jnp.int32)
+    else:
+        codes = (v > 0).astype(jnp.int32)
+    if epilogue in ("e2lsh", "srp"):
+        return codes
+    if epilogue.endswith("keys"):
+        return jnp.sum(codes.astype(jnp.uint32) * mults[0][None, None, :],
+                       axis=-1, dtype=jnp.uint32)
+    # srp-packed: K % 32 == 0 (ops.py pads with zero projections -> bit 0)
+    bb, lb, k = codes.shape
+    words = codes.astype(jnp.uint32).reshape(bb, lb, k // 32, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 1, 32), 3)
+    return jnp.sum(words << shifts, axis=-1, dtype=jnp.uint32)

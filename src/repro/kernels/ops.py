@@ -5,9 +5,16 @@ TTProjection with per-mode tuples) to the stacked, padded, MXU-aligned
 layouts the kernels want, and slice the padding back off:
 
   * mode dims padded to a multiple of 8 with zero rows (Grams unchanged);
-  * K padded to the K-block with zero projections (outputs sliced off);
+  * the batch axis padded to the B-block with zero inputs (outputs sliced);
   * TT boundary ranks zero-padded to R, chain started from e_00;
-  * SRP K padded to a multiple of 32 with -1 values (sign bit 0).
+  * SRP K padded to a multiple of 32 with zero projections (sign bit 0)
+    for the packed epilogue; E2LSH quantize pads K to the lane width.
+
+``fused_hash`` is the batch-native entry the LSH families dispatch to when
+``hash_backend`` resolves to pallas: one kernel launch takes a (B, ...)
+batch of CP/TT inputs straight to integer codes, combined uint32 bucket
+keys, or packed SRP signatures (see kernels/epilogues.py) — the raw
+projection values never round-trip through HBM.
 
 On this CPU container kernels always run with interpret=True (the TPU
 lowering is the target; pass interpret=False on real hardware).
@@ -24,6 +31,8 @@ from repro.kernels.cp_gram import cp_gram_pallas
 from repro.kernels.e2lsh_quant import e2lsh_quant_pallas
 from repro.kernels.srp_pack import srp_pack_pallas
 from repro.kernels.tt_inner import tt_inner_pallas
+
+_LANES = 128  # TPU VPU lane width (f32 tile is (8, 128))
 
 
 def on_tpu() -> bool:
@@ -51,72 +60,163 @@ def _check_equal_dims(dims):
             "repro.core.projections path for ragged modes")
 
 
+def _pick_block_l(l: int) -> int:
+    """Largest power-of-two table-block (<= 8) dividing L."""
+    return max(c for c in (8, 4, 2, 1) if l % c == 0)
+
+
 # ---------------------------------------------------------------------------
-# CP x CP inner products
+# Format stacking (batched inputs, stacked projections)
 # ---------------------------------------------------------------------------
 
 
-def cp_inner_products(x: CPTensor, p: CPProjection, block_k: int = 8,
-                      interpret: bool | None = None) -> jax.Array:
-    """(K,) raw <P_k, X> values (scales applied) via the fused Gram kernel."""
-    _check_equal_dims(x.dims)
-    _check_equal_dims(p.dims)
-    xf = jnp.stack([f.astype(jnp.float32) for f in x.factors])   # (N, d, Rx)
-    pf = jnp.stack([f.astype(jnp.float32) for f in p.factors], 0)  # (N, K, d, Rp)
-    xf = _pad_axis(xf, 1, 8)
+def _stack_cp_batch(x: CPTensor) -> jax.Array:
+    """Batched CP factors (each (B, d, R)) -> (B, N, d, Rx), d padded to 8."""
+    xf = jnp.stack([f.astype(jnp.float32) for f in x.factors], axis=1)
+    return _pad_axis(xf, 2, 8)
+
+
+def _stack_cp_proj(p: CPProjection, num_tables: int) -> jax.Array:
+    """Projection factors (each (L*K, d, R)) -> (N, L, K, d, Rp), d -> 8."""
+    pf = jnp.stack([f.astype(jnp.float32) for f in p.factors], 0)
     pf = _pad_axis(pf, 2, 8)
-    k = pf.shape[1]
-    pf = _pad_axis(pf, 1, block_k)
-    out = cp_gram_pallas(xf, pf, block_k=block_k,
-                         interpret=_default_interpret(interpret))
-    return (x.scale * p.scale) * out[:k]
-
-
-# ---------------------------------------------------------------------------
-# TT x TT inner products
-# ---------------------------------------------------------------------------
+    n, kt, d, rp = pf.shape
+    return pf.reshape(n, num_tables, kt // num_tables, d, rp)
 
 
 def _stack_tt_cores(cores, rank: int) -> jax.Array:
-    """Zero-pad boundary cores to (rank, d, rank) and stack -> (N, R, d, R)."""
-    out = []
-    for c in cores:
-        c = c.astype(jnp.float32)
-        c = _pad_axis(_pad_axis(c, 0, rank) if c.shape[0] < rank else c,
-                      2, rank) if (c.shape[0] < rank or c.shape[2] < rank) else c
-        # _pad_axis pads to a multiple; boundary ranks are 1 so this yields rank
-        out.append(c)
-    return jnp.stack(out)
+    """Zero-pad boundary cores to (rank, d, rank) and stack -> (N, R, d, R).
+
+    ``_pad_axis`` pads to a multiple of ``rank``; every core rank is in
+    [1, rank] (rank is the chain max), so both rank axes land exactly on
+    ``rank`` — boundary cores (rank 1) and truncated interior ranks alike.
+    """
+    return jnp.stack([
+        _pad_axis(_pad_axis(c.astype(jnp.float32), 0, rank), 2, rank)
+        for c in cores])
 
 
-def tt_inner_products(x: TTTensor, p: TTProjection, block_k: int = 8,
+def _stack_tt_batch(x: TTTensor, rank: int) -> jax.Array:
+    """Batched TT cores (each (B, r, d, r)) -> (B, N, Rx, d, Rx), d -> 8."""
+    cores = [_pad_axis(_pad_axis(c.astype(jnp.float32), 1, rank), 3, rank)
+             for c in x.cores]
+    return _pad_axis(jnp.stack(cores, axis=1), 3, 8)
+
+
+def _stack_tt_proj(p: TTProjection, rank: int, num_tables: int) -> jax.Array:
+    """Projection cores (each (L*K, r, d, r)) -> (N, L, K, Rp, d, Rp)."""
+    cores = [_pad_axis(_pad_axis(c.astype(jnp.float32), 1, rank), 3, rank)
+             for c in p.cores]
+    pc = _pad_axis(jnp.stack(cores, axis=0), 3, 8)
+    n, kt, rp, d, _ = pc.shape
+    return pc.reshape(n, num_tables, kt // num_tables, rp, d, rp)
+
+
+# ---------------------------------------------------------------------------
+# Fused batch-native hashing (the hash_backend='pallas' entry point)
+# ---------------------------------------------------------------------------
+
+
+def fused_hash(xs, p, *, epilogue: str, kind: str, num_tables: int,
+               num_codes: int, offsets: jax.Array | None = None,
+               w: float = 0.0, mults=None, block_b: int = 8,
+               interpret: bool | None = None) -> jax.Array:
+    """One fused kernel launch from a (B, ...) batch to hash outputs.
+
+    xs: batched CPTensor (under a CPProjection) or batched TTTensor (under
+    a TTProjection), equal mode dims. epilogue:
+
+      'codes'  -> (B, L, K) int32 hashcodes (E2LSH floor / SRP sign fused)
+      'keys'   -> (B, L) uint32 bucket keys (discretize + radix combine
+                  with the (K,) uint32 ``mults`` fused)
+      'packed' -> (B, L, ceil(K/32)) uint32 SRP signatures (sign + pack)
+
+    ``kind`` picks the discretizer ('*e2lsh' vs '*srp'); ``offsets``/``w``
+    are the E2LSH quantizer parameters. Bit-identical to the XLA path of
+    ``LSHFamily`` (pinned by tests/test_hash_backends.py).
+    """
+    e2 = kind.endswith("e2lsh")
+    kernel_epilogue = {
+        "codes": "e2lsh" if e2 else "srp",
+        "keys": "e2lsh-keys" if e2 else "srp-keys",
+        "packed": "srp-packed",
+    }[epilogue]
+    interpret = _default_interpret(interpret)
+
+    if isinstance(p, CPProjection) and isinstance(xs, CPTensor):
+        xf = _pad_axis(_stack_cp_batch(xs), 0, block_b)
+        pf = _stack_cp_proj(p, num_tables)
+        kernel = cp_gram_pallas
+        k_axis = 2
+    elif isinstance(p, TTProjection) and isinstance(xs, TTTensor):
+        rx = max(max(c.shape[1], c.shape[3]) for c in xs.cores)
+        rp = max(max(c.shape[1], c.shape[3]) for c in p.cores)
+        xf = _pad_axis(_stack_tt_batch(xs, rx), 0, block_b)
+        pf = _stack_tt_proj(p, rp, num_tables)
+        kernel = tt_inner_pallas
+        k_axis = 2
+    else:
+        raise TypeError(
+            f"fused_hash needs matching CP/TT formats, got {type(p).__name__}"
+            f" projection on {type(xs).__name__} inputs")
+
+    if epilogue == "packed":
+        # zero projections give v = 0 -> sign bit 0, matching pack_bits' pad
+        pf = _pad_axis(pf, k_axis, 32)
+
+    offs = None
+    if e2:
+        offs = offsets.astype(jnp.float32).reshape(num_tables, num_codes)
+    mults_arr = None
+    if epilogue == "keys":
+        mults_arr = jnp.asarray(mults).astype(jnp.uint32).reshape(1, num_codes)
+
+    b = jax.tree.leaves(xs)[0].shape[0]
+    out = kernel(xf, pf, offs, mults_arr, epilogue=kernel_epilogue,
+                 w=float(w) if e2 else 1.0,
+                 scale=float(xs.scale * p.scale),
+                 block_b=block_b, block_l=_pick_block_l(num_tables),
+                 interpret=interpret)
+    return out[:b]
+
+
+# ---------------------------------------------------------------------------
+# CP x CP / TT x TT raw inner products (single input, test/benchmark API)
+# ---------------------------------------------------------------------------
+
+
+def cp_inner_products(x: CPTensor, p: CPProjection,
                       interpret: bool | None = None) -> jax.Array:
-    """(K,) raw <T_k, X> values (scales applied) via the chain kernel."""
+    """(K,) raw <P_k, X> values (scales applied) via the fused Gram kernel
+    — the batch-of-1 case of the batch-native kernel."""
+    _check_equal_dims(x.dims)
+    _check_equal_dims(p.dims)
+    xb = jax.tree.map(lambda a: a[None], x)
+    xf = _pad_axis(_stack_cp_batch(xb), 0, 8)
+    pf = _stack_cp_proj(p, 1)
+    out = cp_gram_pallas(xf, pf, epilogue="raw",
+                         interpret=_default_interpret(interpret))
+    return (x.scale * p.scale) * out[0, 0]
+
+
+def tt_inner_products(x: TTTensor, p: TTProjection,
+                      interpret: bool | None = None) -> jax.Array:
+    """(K,) raw <T_k, X> values (scales applied) via the chain kernel —
+    the batch-of-1 case of the batch-native kernel."""
     _check_equal_dims(x.dims)
     _check_equal_dims(p.dims)
     rx = max(max(c.shape[0], c.shape[2]) for c in x.cores)
     rp = max(max(c.shape[1], c.shape[3]) for c in p.cores)
-    xc = _stack_tt_cores(x.cores, rx)                     # (N, Rx, d, Rx)
-    pc = []
-    for c in p.cores:  # (K, r, d, r)
-        c = c.astype(jnp.float32)
-        if c.shape[1] < rp:
-            c = _pad_axis(c, 1, rp)
-        if c.shape[3] < rp:
-            c = _pad_axis(c, 3, rp)
-        pc.append(c)
-    pc = jnp.stack(pc)                                    # (N, K, Rp, d, Rp)
-    xc = _pad_axis(xc, 2, 8)
-    pc = _pad_axis(pc, 3, 8)
-    k = pc.shape[1]
-    pc = _pad_axis(pc, 1, block_k)
-    out = tt_inner_pallas(xc, pc, block_k=block_k,
+    xb = jax.tree.map(lambda a: a[None], x)
+    xf = _pad_axis(_stack_tt_batch(xb, rx), 0, 8)
+    pf = _stack_tt_proj(p, rp, 1)
+    out = tt_inner_pallas(xf, pf, epilogue="raw",
                           interpret=_default_interpret(interpret))
-    return (x.scale * p.scale) * out[:k]
+    return (x.scale * p.scale) * out[0, 0]
 
 
 # ---------------------------------------------------------------------------
-# Discretization tails
+# Discretization tails (standalone kernels; the fused path inlines these)
 # ---------------------------------------------------------------------------
 
 
@@ -133,10 +233,16 @@ def srp_pack(values: jax.Array, block_b: int = 8,
 
 def e2lsh_quantize(values: jax.Array, offsets: jax.Array, w: float,
                    block_b: int = 8, interpret: bool | None = None) -> jax.Array:
-    """(B, K) values + (K,) offsets -> int32 (B, K) hashcodes."""
+    """(B, K) values + (K,) offsets -> int32 (B, K) hashcodes.
+
+    Both the batch axis and the K axis are padded — K to the f32 lane
+    width with zero values/offsets (codes floor(0/w) = 0, sliced off), so
+    non-lane-aligned K never reaches the kernel's (block_b, K) tiles.
+    """
     b, k = values.shape
     v = _pad_axis(values.astype(jnp.float32), 0, block_b)
-    out = e2lsh_quant_pallas(v, offsets.astype(jnp.float32), float(w),
-                             block_b=block_b,
+    v = _pad_axis(v, 1, _LANES)
+    offs = _pad_axis(offsets.astype(jnp.float32), 0, _LANES)
+    out = e2lsh_quant_pallas(v, offs, float(w), block_b=block_b,
                              interpret=_default_interpret(interpret))
-    return out[:b]
+    return out[:b, :k]

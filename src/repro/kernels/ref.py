@@ -1,13 +1,20 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
-Shapes use the *stacked-equal-mode* layout the kernels operate on (all mode
-dimensions equal, boundary TT ranks zero-padded to R):
+Shapes use the *batched stacked-equal-mode* layout the kernels operate on
+(leading batch axis B, all mode dimensions equal, boundary TT ranks
+zero-padded to R):
 
-  cp_inner_ref : x_factors (N, d, Rx), p_factors (N, K, d, Rp) -> (K,)
-  tt_inner_ref : x_cores (N, Rx, d, Rx), p_cores (N, K, Rp, d, Rp) -> (K,)
-                 (mode 0 cores live in row 0; the chain starts from e_00)
+  cp_inner_ref : x_factors (B, N, d, Rx), p_factors (N, K, d, Rp) -> (B, K)
+  tt_inner_ref : x_cores (B, N, Rx, d, Rx), p_cores (N, K, Rp, d, Rp)
+                 -> (B, K)  (mode 0 cores live in row 0; chain from e_00)
+  combine_ref  : codes (B, L, K) int, mults (K,) uint32 -> (B, L) uint32
   srp_pack_ref : values (B, K) -> uint32 (B, ceil(K/32))
   e2lsh_quant_ref : values (B, K), offsets (K,), w -> int32 (B, K)
+
+The fused-epilogue kernels compose these: e.g. the "e2lsh-keys" output of
+``cp_gram_pallas`` equals
+``combine_ref(e2lsh_quant_ref(scale * cp_inner_ref(...), offs, w).reshape(
+B, L, K), mults)``.
 """
 
 from __future__ import annotations
@@ -17,27 +24,33 @@ import jax.numpy as jnp
 
 
 def cp_inner_ref(x_factors: jax.Array, p_factors: jax.Array) -> jax.Array:
-    """Batched <P_k, X> for CP x CP (no scales): prod-of-Grams reduction."""
-    n = x_factors.shape[0]
+    """Batched <P_k, X_z> for CP x CP (no scales): prod-of-Grams reduction."""
+    n = x_factors.shape[1]
     h = None
     for m in range(n):
-        g = jnp.einsum("dr,kdq->krq", x_factors[m], p_factors[m])
+        g = jnp.einsum("zdr,kdq->zkrq", x_factors[:, m], p_factors[m])
         h = g if h is None else h * g
-    return jnp.sum(h, axis=(1, 2))
+    return jnp.sum(h, axis=(2, 3))
 
 
 def tt_inner_ref(x_cores: jax.Array, p_cores: jax.Array) -> jax.Array:
-    """Batched <T_k, X> for TT x TT with zero-padded boundary ranks.
+    """Batched <T_k, X_z> for TT x TT with zero-padded boundary ranks.
 
-    State S_k in R^{Rx x Rp}, S0 = e_00 (only [0, 0] = 1); per mode:
+    State S_{z,k} in R^{Rx x Rp}, S0 = e_00 (only [0, 0] = 1); per mode:
     S' = sum_i Gx[:, i, :]^T S Gp[:, i, :].
     """
-    n, rx = x_cores.shape[0], x_cores.shape[1]
+    b, n, rx = x_cores.shape[0], x_cores.shape[1], x_cores.shape[2]
     k, rp = p_cores.shape[1], p_cores.shape[2]
-    s = jnp.zeros((k, rx, rp), x_cores.dtype).at[:, 0, 0].set(1.0)
+    s = jnp.zeros((b, k, rx, rp), x_cores.dtype).at[:, :, 0, 0].set(1.0)
     for m in range(n):
-        s = jnp.einsum("kab,aic,kbie->kce", s, x_cores[m], p_cores[m])
-    return s[:, 0, 0]
+        s = jnp.einsum("zkab,zaic,kbie->zkce", s, x_cores[:, m], p_cores[m])
+    return s[:, :, 0, 0]
+
+
+def combine_ref(codes: jax.Array, mults: jax.Array) -> jax.Array:
+    """(..., L, K) int codes -> (..., L) uint32 radix bucket keys."""
+    prods = codes.astype(jnp.uint32) * jnp.asarray(mults).astype(jnp.uint32)
+    return prods.sum(axis=-1, dtype=jnp.uint32)
 
 
 def srp_pack_ref(values: jax.Array) -> jax.Array:

@@ -1,24 +1,32 @@
-"""Pallas TPU kernel: batched TT x TT inner products (transfer-matrix chain).
+"""Pallas TPU kernel: batch-native fused TT x TT hashing (transfer-matrix
+chain).
 
-For K stacked TT projection tensors T_k and one TT input X, computes
+For a (B,)-batch of TT inputs X_z and L*K stacked TT projection tensors
+T_{l,k}, computes in one kernel
 
-    out[k] = e_0^T ( prod_n  sum_i  Gx^(n)[:,i,:] (x) Gp_k^(n)[:,i,:] ) e_0
+    v[z, l, k] = scale * e_0^T ( prod_n sum_i Gx_z^(n)[:,i,:] (x)
+                                 Gp_{l,k}^(n)[:,i,:] ) e_0
 
-via the standard chain: state S in R^{Rx x Rp}, S <- sum_i Gx[:,i,:]^T S
-Gp[:,i,:] per mode — the hot loop of TT-E2LSH / TT-SRP (Definitions 11, 13),
-O(K N d max{Rx,Rp}^3) FLOPs.
+via the standard chain: state S in R^{Rx x Rp} per (input, hash) pair,
+S <- sum_i Gx[:,i,:]^T S Gp[:,i,:] per mode — the hash hot loop of
+TT-E2LSH / TT-SRP (Definitions 11, 13), O(B L K N d max{Rx,Rp}^3) FLOPs —
+plus the fused discretization epilogue (floor-quantize / sign / uint32
+radix combine / bit-pack, see kernels/epilogues.py) so raw projections
+never round-trip through HBM.
 
 TPU mapping
 -----------
 * Boundary cores are zero-padded to rank R by ops.py and the chain starts
-  from S0 = e_00, so every mode is a uniform (R, d, R) block — one BlockSpec,
-  no boundary specialization inside the kernel.
-* The running state S_k lives in a VMEM scratch across the whole mode loop;
-  per mode the update is two MXU matmuls:
-      tmp(b, i c) = S^T(b,a) @ Gx(a, i c)        # (Rx,Rx) x (Rx, d*Rx)
-      S'(c, e)    = tmp^T(c, b i) @ Gp(b i, e)   # reshape + (Rx, d*Rp) matmul
-  batched over the K-block. Nothing but the final (KBLK,) scalars leaves VMEM.
-* Mode loop is a static unroll (N is small); K-blocks form the grid.
+  from S0 = e_00, so every mode is a uniform (R, d, R) block — one
+  BlockSpec, no boundary specialization inside the kernel.
+* The running states S_{z,t} live in one VMEM scratch (BBLK, T, Rx, Rp)
+  across the whole mode loop; per mode the update is two MXU matmuls:
+      tmp(z,t; b, i c) = S^T(z,t; b,a) @ Gx_z(a, i c)
+      S'(t; z,c, e)    = tmp(z,t; (b i), c)^T @ Gp_t((b i), e)
+  batched over the (B-block, table-block) pair. Nothing but the final
+  (BBLK, T) values sees the epilogue; only its output leaves VMEM.
+* Mode loop is a static unroll (N is small); (B-blocks, table-blocks) form
+  the grid.
 """
 
 from __future__ import annotations
@@ -30,60 +38,88 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.epilogues import apply_epilogue, out_struct
 
-def _tt_inner_kernel(x_ref, p_ref, o_ref, s_ref, *, n_modes: int):
-    # x_ref: (N, Rx, d, Rx); p_ref: (N, KBLK, Rp, d, Rp); o_ref: (KBLK,)
-    # s_ref: VMEM scratch (KBLK, Rx, Rp)
-    kblk, rx, rp = s_ref.shape
-    s0 = jnp.zeros((kblk, rx, rp), jnp.float32).at[:, 0, 0].set(1.0)
-    s_ref[...] = s0
+
+def _tt_hash_kernel(x_ref, p_ref, b_ref, m_ref, o_ref, s_ref, *,
+                    n_modes: int, epilogue: str, w: float, scale: float):
+    # x_ref: (BBLK, N, Rx, d, Rx); p_ref: (N, LBLK, K, Rp, d, Rp)
+    # b_ref: (LBLK, K) f32; m_ref: (1, K) u32
+    # s_ref: VMEM scratch (BBLK, T, Rx, Rp), T = LBLK*K
+    bb, t, rx, rp = s_ref.shape
+    _, lb, k, _, d, _ = p_ref.shape
+    s_ref[...] = jnp.zeros((bb, t, rx, rp), jnp.float32).at[:, :, 0, 0].set(1.0)
     for m in range(n_modes):  # static unroll
-        gx = x_ref[m]                        # (Rx, d, Rx)
-        gp = p_ref[m]                        # (KBLK, Rp, d, Rp)
-        d = gx.shape[1]
-        s = s_ref[...]                       # (KBLK, Rx, Rp)
-        # tmp[k, b, i, c] = sum_a s[k, a, b] * gx[a, i, c]
-        gx2 = gx.reshape(rx, d * rx)         # (a, i*c)
+        gx = x_ref[:, m].reshape(bb, rx, d * rx)          # (z; a, i*c)
+        gp = p_ref[m].reshape(t, rp * d, rp)              # (t; b*i, e)
+        s = s_ref[...]                                    # (z, t, a, b)
+        # tmp[z, t, b, i*c] = sum_a s[z, t, a, b] * gx[z, a, i*c]
         tmp = jax.lax.dot_general(
-            jnp.swapaxes(s, 1, 2),           # (KBLK, b=Rp, a=Rx)
-            gx2,
-            dimension_numbers=(((2,), (0,)), ((), ())),
+            jnp.swapaxes(s, 2, 3),                        # (z, t, b, a)
+            gx,
+            dimension_numbers=(((3,), (1,)), ((0,), (0,))),
             preferred_element_type=jnp.float32,
-        )                                    # (KBLK, Rp, d*Rx)
-        tmp = tmp.reshape(kblk, rp, d, rx)
-        # s'[k, c, e] = sum_{b, i} tmp[k, b, i, c] * gp[k, b, i, e]
-        tmp2 = tmp.reshape(kblk, rp * d, rx)
-        gp2 = gp.reshape(kblk, rp * d, rp)
-        s_ref[...] = jax.lax.dot_general(
-            tmp2, gp2,
-            dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        )                                                 # (z, t, b, i*c)
+        tmp = tmp.reshape(bb, t, rp * d, rx)              # (z, t, b*i, c)
+        # s'[z, t, c, e] = sum_{b,i} tmp[z, t, (b i), c] * gp[t, (b i), e]
+        s_new = jax.lax.dot_general(
+            tmp, gp,
+            dimension_numbers=(((2,), (1,)), ((1,), (0,))),
             preferred_element_type=jnp.float32,
-        )                                    # (KBLK, Rx, Rp)
-    o_ref[...] = s_ref[:, 0, 0]
+        )                                                 # (t, z, c, e)
+        s_ref[...] = jnp.swapaxes(s_new, 0, 1)
+    v = scale * s_ref[:, :, 0, 0]                         # (BBLK, T)
+    v = v.reshape(bb, lb, k)
+    o_ref[...] = apply_epilogue(v, b_ref[...], m_ref[...],
+                                epilogue=epilogue, w=w)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("epilogue", "w", "scale",
+                                             "block_b", "block_l", "interpret"))
 def tt_inner_pallas(x_cores: jax.Array, p_cores: jax.Array,
-                    block_k: int = 8, interpret: bool = True) -> jax.Array:
-    """x_cores (N, Rx, d, Rx), p_cores (N, K, Rp, d, Rp) -> (K,) float32.
+                    offsets: jax.Array | None = None,
+                    mults: jax.Array | None = None, *,
+                    epilogue: str = "raw", w: float = 1.0, scale: float = 1.0,
+                    block_b: int = 8, block_l: int = 1,
+                    interpret: bool = True) -> jax.Array:
+    """x_cores (B, N, Rx, d, Rx), p_cores (N, L, K, Rp, d, Rp) ->
+    (B, L, K) values/codes, (B, L) keys or (B, L, K/32) packed words, per
+    ``epilogue`` (see kernels/epilogues.py).
 
     Mode-0 cores must be zero-padded into row 0 (ops.py does this); padded
-    K entries are all-zero cores giving exactly 0 output.
+    B entries are all-zero cores giving exactly 0 raw values, and their
+    outputs are sliced off. Requires B % block_b == 0, L % block_l == 0.
     """
-    n, rx, d, _ = x_cores.shape
-    _, k, rp, _, _ = p_cores.shape
-    assert k % block_k == 0, (k, block_k)
-    grid = (k // block_k,)
-    kernel = functools.partial(_tt_inner_kernel, n_modes=n)
+    b, n, rx, d, _ = x_cores.shape
+    _, l, k, rp, _, _ = p_cores.shape
+    assert b % block_b == 0, (b, block_b)
+    assert l % block_l == 0, (l, block_l)
+    if offsets is None:
+        offsets = jnp.zeros((l, k), jnp.float32)
+    if mults is None:
+        mults = jnp.zeros((1, k), jnp.uint32)
+    out = out_struct(b, l, k, epilogue)
+    if out.ndim == 3:
+        out_spec = pl.BlockSpec((block_b, block_l, out.shape[-1]),
+                                lambda i, j: (i, j, 0))
+    else:
+        out_spec = pl.BlockSpec((block_b, block_l), lambda i, j: (i, j))
+    grid = (b // block_b, l // block_l)
+    kernel = functools.partial(_tt_hash_kernel, n_modes=n, epilogue=epilogue,
+                               w=w, scale=scale)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((n, rx, d, rx), lambda i: (0, 0, 0, 0)),     # broadcast X
-            pl.BlockSpec((n, block_k, rp, d, rp), lambda i: (0, i, 0, 0, 0)),
+            pl.BlockSpec((block_b, n, rx, d, rx), lambda i, j: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((n, block_l, k, rp, d, rp),
+                         lambda i, j: (0, j, 0, 0, 0, 0)),
+            pl.BlockSpec((block_l, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_k,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_k, rx, rp), jnp.float32)],
+        out_specs=out_spec,
+        out_shape=out,
+        scratch_shapes=[pltpu.VMEM((block_b, block_l * k, rx, rp),
+                                   jnp.float32)],
         interpret=interpret,
-    )(x_cores, p_cores)
+    )(x_cores, p_cores, offsets, mults)

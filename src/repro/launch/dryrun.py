@@ -308,6 +308,16 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         t1 = time.time()
         delta_rec = _analyze(
             compile_one((delta_sds,), (min(delta_cap, delta_n),)), t1)
+
+        # the fused hash program (projection -> discretize -> bucket keys,
+        # one jit program; the build/insert/query-hash hot path) profiled
+        # alongside the probe programs
+        t2 = time.time()
+        hash_jit = jax.jit(lambda fam, mults, batch:
+                           fam.hash_keys(batch, mults),
+                           in_shardings=(fam_sh, rep, rep))
+        hash_rec = _analyze(
+            hash_jit.lower(fam_sds, mults_sds, q_sds).compile(), t2)
         fallbacks = sorted({(f[0], f[1], "/".join(f[2]))
                             for f in ctx.fallbacks})
 
@@ -326,6 +336,14 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         **base_rec,
         "delta_probe": {"delta_n": delta_n, "delta_cap": delta_cap,
                         **delta_rec},
+        # the backend that actually executes for this cell's (dense) corpus:
+        # CP/TT projections over dense inputs have no kernel, so the pallas
+        # backend serves them through XLA — report the executed path, not
+        # the resolved knob (they differ under REPRO_HASH_BACKEND=pallas)
+        "hash_program": {"batch": batch,
+                         "backend": ("pallas" if fam_sds._use_pallas(q_sds)
+                                     else "xla"),
+                         **hash_rec},
         "sharding_fallbacks": fallbacks,
     }
 
@@ -441,7 +459,9 @@ def main():
                       f"{rec['shards']} shards over '{rec['shard_axis']}', "
                       f"{rec['cost']['flops_per_device']:.3e} flops/dev, "
                       f"+1 delta: "
-                      f"{rec['delta_probe']['cost']['flops_per_device']:.3e}")
+                      f"{rec['delta_probe']['cost']['flops_per_device']:.3e}, "
+                      f"hash ({rec['hash_program']['backend']}): "
+                      f"{rec['hash_program']['cost']['flops_per_device']:.3e}")
             except Exception as e:
                 failures += 1
                 rec = {"status": "failed", "arch": "lsh-index",

@@ -4,10 +4,12 @@ deployable serving component.
 A corpus of tensors (dense / CP / TT format) is hashed once at build time
 with one of the paper's families; queries arrive in batches and run through
 the segment-store indexes of ``repro.core.index`` as one jit-compiled
-program — batched hashing (batched CP/TT Gram einsums -> the Pallas kernels
-on TPU), vmapped ``searchsorted`` bucket probes over every segment's sorted
-key tables, tombstone filtering, and exact in-format re-rank — never
-leaving the accelerator until the final top-k.
+program — batch-native fused hashing (projection -> discretize -> bucket
+keys in one program; ``build_service(..., hash_backend=...)`` picks the
+XLA einsum path or the Pallas kernels, 'auto' = pallas on TPU), vmapped
+``searchsorted`` bucket probes over every segment's sorted key tables,
+tombstone filtering, and exact in-format re-rank — never leaving the
+accelerator until the final top-k.
 
 The corpus is mutable in place: ``insert(batch)`` appends a sorted delta
 segment (served immediately, no rebuild), ``delete(ids)`` tombstones items
@@ -195,11 +197,12 @@ def build_service(key, kind: str, dims: Sequence[int], corpus, *,
                   bucket_width: float = 4.0, device: bool = True,
                   bucket_cap: int | None = None,
                   shards: int | None = None,
-                  max_deltas: int = 8) -> LSHService:
+                  max_deltas: int = 8,
+                  hash_backend: str = "auto") -> LSHService:
     metric = metric or ("cosine" if kind.endswith("srp") else "euclidean")
     fam = make_family(key, kind, dims, num_codes=num_codes,
                       num_tables=num_tables, rank=rank,
-                      bucket_width=bucket_width)
+                      bucket_width=bucket_width, hash_backend=hash_backend)
     return LSHService(fam, metric=metric, device=device,
                       bucket_cap=bucket_cap, shards=shards,
                       max_deltas=max_deltas).build(corpus)

@@ -288,6 +288,12 @@ class TestShardMapPathMultiDevice:
             assert rec["n_chips"] == 8  # (2,2,2) and (2,4) shrunk meshes
             assert rec["cost"]["flops_per_device"] > 0
             assert rec["memory"]["peak_per_device_bytes"] > 0
+            hp = rec["hash_program"]   # the fused hash profiled alongside
+            # dense corpus -> the XLA path executes even when the pallas
+            # backend is forced (e.g. the REPRO_HASH_BACKEND=pallas CI leg)
+            assert hp["backend"] == "xla"
+            assert hp["batch"] == 64
+            assert hp["cost"]["flops_per_device"] > 0
             row = roofline.analyse(rec)
             assert row["bottleneck"] in ("compute", "memory", "collective")
             assert row["roofline_mfu"] is None  # no model-flops notion

@@ -1,6 +1,8 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp ref.py oracles,
-swept over shapes and dtypes (including non-aligned shapes that exercise the
-ops.py padding paths), plus agreement with the core-library paths."""
+swept over batched shapes and dtypes (including non-aligned shapes that
+exercise the ops.py padding paths), fused-epilogue correctness (discretize /
+combine / pack vs composed oracles), plus agreement with the core-library
+projection paths."""
 
 import jax
 import jax.numpy as jnp
@@ -9,14 +11,16 @@ import pytest
 
 from repro.core import (cp_random_data, tt_random_data, sample_cp_projection,
                         sample_tt_projection, project)
+from repro.core.lsh import (e2lsh_discretize, make_mults, pack_bits,
+                            _combine_codes)
 from repro.kernels import (cp_inner_products, tt_inner_products, srp_pack,
                            e2lsh_quantize)
 from repro.kernels import ref
+from repro.kernels import ops
 from repro.kernels.cp_gram import cp_gram_pallas
 from repro.kernels.tt_inner import tt_inner_pallas
 from repro.kernels.srp_pack import srp_pack_pallas
 from repro.kernels.e2lsh_quant import e2lsh_quant_pallas
-from repro.core.lsh import pack_bits, e2lsh_discretize
 
 
 def _key(seed):
@@ -24,44 +28,57 @@ def _key(seed):
 
 
 SHAPE_SWEEP = [
-    # (n_modes, d, rx, rp, k)
-    (2, 8, 1, 1, 8),
-    (2, 16, 4, 8, 8),
-    (3, 8, 2, 4, 16),
-    (3, 24, 8, 8, 8),
-    (4, 8, 4, 2, 24),
-    (4, 16, 3, 5, 8),
-    (5, 8, 2, 2, 8),
+    # (batch, n_modes, d, rx, rp, l_tables, k_codes)
+    (8, 2, 8, 1, 1, 1, 8),
+    (8, 2, 16, 4, 8, 2, 4),
+    (16, 3, 8, 2, 4, 1, 16),
+    (8, 3, 24, 8, 8, 4, 2),
+    (24, 4, 8, 4, 2, 3, 8),
+    (8, 4, 16, 3, 5, 1, 7),
+    (8, 5, 8, 2, 2, 2, 3),
 ]
 
 
 class TestCPGramKernel:
-    @pytest.mark.parametrize("n,d,rx,rp,k", SHAPE_SWEEP)
-    def test_vs_ref_shape_sweep(self, n, d, rx, rp, k):
-        kx, kp = jax.random.split(_key(n * 1000 + d))
-        xf = jax.random.normal(kx, (n, d, rx))
-        pf = jax.random.normal(kp, (n, k, d, rp))
-        got = cp_gram_pallas(xf, pf, block_k=8, interpret=True)
-        want = ref.cp_inner_ref(xf, pf)
-        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    @pytest.mark.parametrize("b,n,d,rx,rp,l,k", SHAPE_SWEEP)
+    def test_vs_ref_shape_sweep(self, b, n, d, rx, rp, l, k):
+        kx, kp = jax.random.split(_key(n * 1000 + d + b))
+        xf = jax.random.normal(kx, (b, n, d, rx))
+        pf = jax.random.normal(kp, (n, l, k, d, rp))
+        got = cp_gram_pallas(xf, pf, epilogue="raw", interpret=True)
+        want = ref.cp_inner_ref(xf, pf.reshape(n, l * k, d, rp))
+        np.testing.assert_allclose(got, want.reshape(b, l, k),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_batch_blocking_matches_unblocked(self):
+        """The B x table grid must tile without changing any output."""
+        kx, kp = jax.random.split(_key(0))
+        xf = jax.random.normal(kx, (32, 3, 8, 4))
+        pf = jax.random.normal(kp, (3, 4, 6, 8, 4))
+        a = cp_gram_pallas(xf, pf, epilogue="raw", block_b=8, block_l=2,
+                           interpret=True)
+        c = cp_gram_pallas(xf, pf, epilogue="raw", block_b=32, block_l=4,
+                           interpret=True)
+        np.testing.assert_allclose(a, c, rtol=1e-6, atol=1e-6)
 
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_dtype_sweep(self, dtype):
         kx, kp = jax.random.split(_key(0))
-        xf = jax.random.normal(kx, (3, 8, 4)).astype(dtype)
-        pf = jax.random.normal(kp, (3, 8, 8, 4)).astype(dtype)
+        xf = jax.random.normal(kx, (8, 3, 8, 4)).astype(dtype)
+        pf = jax.random.normal(kp, (3, 1, 8, 8, 4)).astype(dtype)
         got = cp_gram_pallas(xf.astype(jnp.float32), pf.astype(jnp.float32),
-                             block_k=8, interpret=True)
-        want = ref.cp_inner_ref(xf.astype(jnp.float32), pf.astype(jnp.float32))
+                             epilogue="raw", interpret=True)
+        want = ref.cp_inner_ref(xf.astype(jnp.float32),
+                                pf.astype(jnp.float32).reshape(3, 8, 8, 4))
         tol = 1e-4 if dtype == jnp.float32 else 5e-2
-        np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+        np.testing.assert_allclose(got[:, 0], want, rtol=tol, atol=tol)
 
     @pytest.mark.parametrize("seed", range(6))
     def test_ops_wrapper_vs_core_projection(self, seed):
         """ops.cp_inner_products == core project() on real CP formats.
 
-        dims=10 (not a multiple of 8) and K=12 (not a multiple of block_k=8)
-        exercise the mode-dim and K-block zero-padding paths in ops.py.
+        dims=10 (not a multiple of 8) exercises the mode-dim zero-padding
+        and the B=1 -> block_b batch padding in ops.py.
         """
         kx, kp = jax.random.split(_key(seed))
         dims = (10, 10, 10)
@@ -73,8 +90,8 @@ class TestCPGramKernel:
 
     @pytest.mark.parametrize("d,k", [(9, 13), (7, 1), (11, 8), (8, 17)])
     def test_padded_nonaligned_shapes_vs_ref(self, d, k):
-        """Mode-dim padding (d % 8 != 0) and K-block padding (k % 8 != 0)
-        must not change any of the K outputs vs the unpadded oracle."""
+        """Mode-dim padding (d % 8 != 0) and odd K must not change any of
+        the K outputs vs the unpadded oracle."""
         kx, kp = jax.random.split(_key(d * 100 + k))
         dims = (d, d, d)
         x = cp_random_data(kx, dims, 2)
@@ -86,18 +103,19 @@ class TestCPGramKernel:
 
 
 class TestTTInnerKernel:
-    @pytest.mark.parametrize("n,d,rx,rp,k", SHAPE_SWEEP)
-    def test_vs_ref_shape_sweep(self, n, d, rx, rp, k):
-        kx, kp = jax.random.split(_key(n * 999 + d))
-        xc = jax.random.normal(kx, (n, rx, d, rx))
-        pc = jax.random.normal(kp, (n, k, rp, d, rp))
-        got = tt_inner_pallas(xc, pc, block_k=8, interpret=True)
-        want = ref.tt_inner_ref(xc, pc)
-        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    @pytest.mark.parametrize("b,n,d,rx,rp,l,k", SHAPE_SWEEP)
+    def test_vs_ref_shape_sweep(self, b, n, d, rx, rp, l, k):
+        kx, kp = jax.random.split(_key(n * 999 + d + b))
+        xc = jax.random.normal(kx, (b, n, rx, d, rx))
+        pc = jax.random.normal(kp, (n, l, k, rp, d, rp))
+        got = tt_inner_pallas(xc, pc, epilogue="raw", interpret=True)
+        want = ref.tt_inner_ref(xc, pc.reshape(n, l * k, rp, d, rp))
+        np.testing.assert_allclose(got, want.reshape(b, l, k),
+                                   rtol=1e-4, atol=1e-4)
 
     @pytest.mark.parametrize("seed", range(6))
     def test_ops_wrapper_vs_core_projection(self, seed):
-        """dims=9 and K=10 exercise mode-dim + K-block padding for TT."""
+        """dims=9 exercises mode-dim + batch padding for TT."""
         kx, kp = jax.random.split(_key(seed))
         dims = (9, 9, 9)
         x = tt_random_data(kx, dims, 3)
@@ -127,6 +145,90 @@ class TestTTInnerKernel:
         got = tt_inner_products(x, p, interpret=True)
         want = project(p, x)
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestStackTTCores:
+    """Direct unit coverage of the boundary-rank core stacking in ops.py."""
+
+    def test_boundary_and_interior_ranks(self):
+        rank = 4
+        cores = (jnp.arange(1 * 5 * 4, dtype=jnp.float32).reshape(1, 5, 4),
+                 jnp.ones((4, 5, 4), jnp.float32),
+                 jnp.full((4, 5, 1), 2.0))
+        out = ops._stack_tt_cores(cores, rank)
+        assert out.shape == (3, rank, 5, rank)
+        # real entries land in the leading rows/cols, the rest is exactly 0
+        np.testing.assert_array_equal(out[0, :1], cores[0])
+        np.testing.assert_array_equal(out[0, 1:], 0.0)
+        np.testing.assert_array_equal(out[1], cores[1])
+        np.testing.assert_array_equal(out[2, :, :, :1], cores[2])
+        np.testing.assert_array_equal(out[2, :, :, 1:], 0.0)
+
+    def test_truncated_interior_rank(self):
+        """Cores with rank strictly between 1 and the chain max (e.g. from
+        a truncated TT-SVD) pad to exactly the chain max, not a multiple."""
+        rank = 5
+        core = jnp.ones((3, 4, 2), jnp.float32)
+        out = ops._stack_tt_cores((core,), rank)
+        assert out.shape == (1, rank, 4, rank)
+        np.testing.assert_array_equal(out[0, :3, :, :2], core)
+        assert float(jnp.abs(out).sum()) == float(jnp.abs(core).sum())
+
+
+class TestFusedEpilogues:
+    """The in-kernel discretize / combine / pack epilogues vs composed
+    oracles, through the real ops.fused_hash padding path."""
+
+    DIMS = (7, 7, 7)
+
+    def _family(self, kind, k=5, l=3, seed=2):
+        from repro.core import make_family
+        return make_family(_key(seed), kind, self.DIMS, num_codes=k,
+                           num_tables=l, rank=3, bucket_width=4.0,
+                           hash_backend="xla")
+
+    def _batch(self, kind, b=11, seed=4):
+        maker = cp_random_data if kind.startswith("cp") else tt_random_data
+        return jax.vmap(lambda kk: maker(kk, self.DIMS, 2))(
+            jax.random.split(_key(seed), b))
+
+    @pytest.mark.parametrize("kind", ["cp-e2lsh", "tt-e2lsh"])
+    def test_e2lsh_codes_and_keys(self, kind):
+        fam = self._family(kind)
+        xs = self._batch(kind)
+        want = fam.hash_batch(xs)  # xla oracle: batched einsum + discretize
+        got = ops.fused_hash(xs, fam.projection, epilogue="codes",
+                             kind=kind, num_tables=3, num_codes=5,
+                             offsets=fam.offsets, w=fam.bucket_width,
+                             interpret=True)
+        np.testing.assert_array_equal(got, want)
+        mults = make_mults(0, 5)
+        got_keys = ops.fused_hash(xs, fam.projection, epilogue="keys",
+                                  kind=kind, num_tables=3, num_codes=5,
+                                  offsets=fam.offsets, w=fam.bucket_width,
+                                  mults=mults, interpret=True)
+        np.testing.assert_array_equal(got_keys,
+                                      _combine_codes(np.asarray(want), mults))
+
+    @pytest.mark.parametrize("kind", ["cp-srp", "tt-srp"])
+    def test_srp_codes_keys_packed(self, kind):
+        fam = self._family(kind)
+        xs = self._batch(kind)
+        want = fam.hash_batch(xs)
+        got = ops.fused_hash(xs, fam.projection, epilogue="codes",
+                             kind=kind, num_tables=3, num_codes=5,
+                             interpret=True)
+        np.testing.assert_array_equal(got, want)
+        mults = make_mults(1, 5)
+        got_keys = ops.fused_hash(xs, fam.projection, epilogue="keys",
+                                  kind=kind, num_tables=3, num_codes=5,
+                                  mults=mults, interpret=True)
+        np.testing.assert_array_equal(got_keys,
+                                      _combine_codes(np.asarray(want), mults))
+        got_packed = ops.fused_hash(xs, fam.projection, epilogue="packed",
+                                    kind=kind, num_tables=3, num_codes=5,
+                                    interpret=True)
+        np.testing.assert_array_equal(got_packed, pack_bits(want))
 
 
 class TestSRPPackKernel:
@@ -177,6 +279,18 @@ class TestE2LSHQuantKernel:
         got = e2lsh_quantize(v, offs, 2.0, interpret=True)
         want = e2lsh_discretize(v, offs, 2.0)
         np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("k", [1, 5, 12, 127, 129, 200])
+    def test_ops_wrapper_pads_k_axis(self, k):
+        """Regression: K not a multiple of the f32 lane width (128) must be
+        padded on BOTH values and offsets and sliced back — every live
+        column bit-equal to the unpadded oracle, output exactly (B, K)."""
+        kv, kb = jax.random.split(_key(k * 7))
+        v = 5.0 * jax.random.normal(kv, (6, k))
+        offs = jax.random.uniform(kb, (k,), minval=0.0, maxval=2.0)
+        got = e2lsh_quantize(v, offs, 2.0, interpret=True)
+        assert got.shape == (6, k)
+        np.testing.assert_array_equal(got, e2lsh_discretize(v, offs, 2.0))
 
     def test_floor_boundary_values(self):
         """Exact multiples of w land in the upper bucket (floor semantics)."""
