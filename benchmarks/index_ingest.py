@@ -1,0 +1,226 @@
+"""Sustained-ingest benchmark for the shard-native mutation plane:
+interleaved insert / delete / query rounds at S in {1, 2, 4} shards on an
+n=100k corpus (CPU-friendly), reporting
+
+  - delta memory vs the replicated-delta baseline (PR 3 kept one flat copy
+    of every delta segment per shard; routed slabs store each item exactly
+    once, so the aggregate delta footprint should shrink ~S x),
+  - shard-local ``compact()`` wall time vs the global-gather fold
+    (``rebalance()`` is exactly PR 3's compact path: gather every survivor,
+    re-partition contiguously — so the pair measures what going shard-local
+    buys at steady state),
+  - mid-ingest serving QPS and post-ingest recall@10 against the effective
+    corpus.
+
+CSV rows (name,us_per_call,derived), per shard count S:
+
+  index_ingest/build_s{S}             us = full build, derived = n
+  index_ingest/insert_b{B}_s{S}       us = per routed insert batch (median),
+                                      derived = items/s
+  index_ingest/delete_b{D}_s{S}       us = per tombstone batch (median)
+  index_ingest/qps_mid_ingest_s{S}    us = per-query latency with
+                                      outstanding slabs, derived = QPS
+  index_ingest/delta_mem_s{S}         derived = slab MiB | replicated MiB
+                                      (the S x baseline) | ratio
+  index_ingest/compact_local_s{S}     us = shard-local fold, derived = n_live
+  index_ingest/compact_global_s{S}    us = global gather + re-partition
+                                      (the PR 3 compact), derived = n_live
+  index_ingest/recall10_s{S}          derived = recall@10 | mean candidates
+
+``run()`` appends one trajectory entry to BENCH_index.json (tagged
+``"bench": "index_ingest"``). Set BENCH_INGEST_N to shrink for smoke runs.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import append_trajectory, emit, time_fn
+from repro.core import ShardedLSHIndex, make_family, recall_at_k
+from repro.core.segments import ShardedSegment
+
+DIMS = (8, 8, 8)
+N_CORPUS = int(os.environ.get("BENCH_INGEST_N", 100_000))
+PER_CLUSTER = 8               # clustered corpus: real neighbors (see
+NOISE = 0.15                  # benchmarks/index_qps.py)
+SHARD_COUNTS = (1, 2, 4)
+INSERT_BATCH = 1024
+DELETE_BATCH = 256
+QUERY_BATCH = 256
+N_ROUNDS = 4                  # timed ingest rounds (after 1 warmup round)
+N_RECALL_QUERIES = 64
+BUCKET_CAP = 64               # bound probe width at this corpus scale
+
+
+def _data():
+    kc, kn, kq, ki, kf = jax.random.split(jax.random.PRNGKey(29), 5)
+    n_clusters = max(N_CORPUS // PER_CLUSTER, 1)
+    centers = jax.random.normal(kc, (n_clusters,) + DIMS)
+    corpus = (jnp.repeat(centers, PER_CLUSTER, axis=0)[:N_CORPUS]
+              + NOISE * jax.random.normal(kn, (N_CORPUS,) + DIMS))
+    queries = (jnp.tile(centers, (QUERY_BATCH // n_clusters + 1,)
+                        + (1,) * len(DIMS))[:QUERY_BATCH]
+               + NOISE * jax.random.normal(kq, (QUERY_BATCH,) + DIMS))
+    n_ins = (N_ROUNDS + 1) * INSERT_BATCH
+    inserts = (jnp.tile(centers, (n_ins // n_clusters + 1,)
+                        + (1,) * len(DIMS))[:n_ins]
+               + NOISE * jax.random.normal(ki, (n_ins,) + DIMS))
+    fam = make_family(kf, "cp-e2lsh", DIMS, num_codes=4, num_tables=8,
+                      rank=2, bucket_width=16.0)
+    return corpus, queries, inserts, fam
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def _tree_bytes(tree) -> int:
+    return sum(a.nbytes for a in jax.tree.leaves(tree))
+
+
+def _delta_bytes(store) -> tuple[int, int]:
+    """-> (actual slab bytes, replicated-baseline bytes). Actual sums every
+    delta's device arrays (keys + sorted keys + perm + corpus + lookups,
+    padding included). The baseline is what PR 3's replicated layout would
+    hold for the same items: one flat copy of each delta on every shard."""
+    shards = store.base.shards if isinstance(store.base, ShardedSegment) \
+        else 1
+    actual = replicated = 0
+    for i, seg in enumerate(store.deltas):
+        live, eff = store._luts[1 + i]
+        win = store._wins[1 + i]            # live-window luts (capped store)
+        seg_bytes = (_tree_bytes((seg.keys, seg.sorted_keys, seg.perm))
+                     + _tree_bytes(seg.corpus)
+                     + live.nbytes + eff.nbytes
+                     + (_tree_bytes(win) if win is not None else 0))
+        actual += seg_bytes
+        m = seg.items
+        per_slot = seg_bytes // max(seg.slots, 1)   # same dtypes, no pads
+        replicated += shards * m * per_slot
+    return actual, replicated
+
+
+def _ingest(idx, inserts, deletes_rng, queries=None, timings=None):
+    """One warmup + N_ROUNDS timed rounds of insert -> delete [-> query].
+    The warmup round pays the slab scatter+sort compile; quantized slab
+    widths keep the later rounds on the cached program. Query timing uses
+    one warmup call per round (the program changes as slabs accumulate),
+    so it reports steady-state serving at that delta depth."""
+    for r in range(N_ROUNDS + 1):
+        batch = jax.lax.dynamic_slice_in_dim(
+            inserts, r * INSERT_BATCH, INSERT_BATCH)
+        t = _timed(lambda: jax.block_until_ready(
+            idx.insert(batch).store.deltas[-1].sorted_keys))
+        dead = deletes_rng.choice(idx.size, size=DELETE_BATCH, replace=False)
+        td = _timed(lambda: idx.delete(dead))
+        if queries is not None:
+            tq = time_fn(lambda qb: idx.query_batch(qb, topk=10),
+                         queries[:QUERY_BATCH], warmup=1, iters=2)
+        if timings is not None and r > 0:   # round 0 pays the compiles
+            timings["insert"].append(t)
+            timings["delete"].append(td)
+            timings["query"].append(tq)
+
+
+def _median(xs):
+    return sorted(xs)[len(xs) // 2]
+
+
+def run() -> list[str]:
+    rows = []
+    corpus, queries, inserts, fam = _data()
+    traj = {"bench": "index_ingest", "n_devices": len(jax.devices()),
+            "corpus_n": N_CORPUS, "insert_batch": INSERT_BATCH,
+            "delete_batch": DELETE_BATCH, "rounds": N_ROUNDS, "shards": {}}
+    for s in SHARD_COUNTS:
+        make_index = lambda: ShardedLSHIndex(
+            fam, metric="euclidean", shards=s, bucket_cap=BUCKET_CAP,
+            max_deltas=2 * (N_ROUNDS + 2))  # no auto-compact mid-loop
+        idx = make_index()
+        build_us = _timed(lambda: jax.block_until_ready(
+            idx.build(corpus).sorted_keys))
+        rows.append(emit(f"index_ingest/build_s{s}", build_us, N_CORPUS))
+
+        timings = {"insert": [], "delete": [], "query": []}
+        _ingest(idx, inserts, np.random.default_rng(7), queries, timings)
+        insert_us = _median(timings["insert"])
+        rows.append(emit(f"index_ingest/insert_b{INSERT_BATCH}_s{s}",
+                         insert_us,
+                         f"{INSERT_BATCH / (insert_us / 1e6):.0f}"))
+        rows.append(emit(f"index_ingest/delete_b{DELETE_BATCH}_s{s}",
+                         _median(timings["delete"]), DELETE_BATCH))
+        query_us = _median(timings["query"])
+        rows.append(emit(f"index_ingest/qps_mid_ingest_s{s}",
+                         query_us / QUERY_BATCH,
+                         f"{QUERY_BATCH / (query_us / 1e6):.0f}"))
+
+        actual_b, repl_b = _delta_bytes(idx.store)
+        ratio = repl_b / max(actual_b, 1)
+        rows.append(emit(
+            f"index_ingest/delta_mem_s{s}", 0.0,
+            f"{actual_b / 2**20:.1f}MiB|repl {repl_b / 2**20:.1f}MiB|"
+            f"{ratio:.2f}x"))
+
+        stats = recall_at_k(idx, queries[:N_RECALL_QUERIES], topk=10)
+        rows.append(emit(
+            f"index_ingest/recall10_s{s}", 0.0,
+            f"{stats['recall']:.3f}|{stats['mean_candidates']:.0f}"))
+
+        # shard-local compact vs the PR 3 global-gather fold (rebalance IS
+        # that path: gather every survivor, re-partition contiguously).
+        # Replaying the identical ingest on clones gives both folds the
+        # same store; the first execution of each pays its compile, so the
+        # reported numbers come from a second, warm clone.
+        def _clone():
+            c = make_index()
+            jax.block_until_ready(c.build(corpus).sorted_keys)
+            _ingest(c, inserts, np.random.default_rng(7))
+            return c
+
+        _timed(lambda: jax.block_until_ready(      # compile the local fold
+            idx.compact().sorted_keys))
+        n_live = idx.size
+        del idx
+        warm = _clone()
+        local_us = _timed(lambda: jax.block_until_ready(
+            warm.compact().sorted_keys))
+        del warm
+        cold = _clone()
+        _timed(lambda: jax.block_until_ready(      # compile the global fold
+            cold.rebalance().sorted_keys))
+        del cold
+        warm = _clone()
+        global_us = _timed(lambda: jax.block_until_ready(
+            warm.rebalance().sorted_keys))
+        del warm
+        rows.append(emit(f"index_ingest/compact_local_s{s}", local_us,
+                         n_live))
+        rows.append(emit(f"index_ingest/compact_global_s{s}", global_us,
+                         n_live))
+
+        traj["shards"][str(s)] = {
+            "build_s": build_us / 1e6,
+            "insert_batch_s": insert_us / 1e6,
+            "insert_items_per_s": round(INSERT_BATCH / (insert_us / 1e6)),
+            "qps_mid_ingest": round(QUERY_BATCH / (query_us / 1e6)),
+            "delta_mem_mib": round(actual_b / 2**20, 2),
+            "delta_mem_replicated_mib": round(repl_b / 2**20, 2),
+            "delta_mem_ratio": round(ratio, 2),
+            "compact_local_s": local_us / 1e6,
+            "compact_global_s": global_us / 1e6,
+            "compact_speedup": round(global_us / max(local_us, 1), 2),
+            "recall10_post_ingest": round(stats["recall"], 4),
+        }
+    append_trajectory(traj)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -7,9 +7,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (collision, hash_throughput, index_mutation,
-                            index_qps, index_sharded, kernels, recall,
-                            table1_e2lsh, table2_srp)
+    from benchmarks import (collision, hash_throughput, index_ingest,
+                            index_mutation, index_qps, index_sharded,
+                            kernels, recall, table1_e2lsh, table2_srp)
     print("name,us_per_call,derived")
     rows = []
     rows += table1_e2lsh.run()
@@ -19,6 +19,7 @@ def main() -> None:
     rows += index_qps.run()
     rows += index_sharded.run()
     rows += index_mutation.run()
+    rows += index_ingest.run()
     rows += hash_throughput.run()
     rows += kernels.run()
     print(f"# {len(rows)} benchmark rows", file=sys.stderr)

@@ -14,11 +14,17 @@ segments). Three deployments share that planner:
 ``DeviceLSHIndex`` (the default, exported as ``LSHIndex``) keeps the store
 on one device and runs one jit program per query batch.
 
-``ShardedLSHIndex`` lays the *base* segment over a mesh axis in S
-contiguous shards (the shard_map placement lives in
-``repro.distributed.index_sharding``); delta segments stay replicated until
-``compact()`` folds them into the sharded base. Results are identical to
-``DeviceLSHIndex`` for any shard count.
+``ShardedLSHIndex`` is shard-native end-to-end: the base segment lays over
+a mesh axis in S contiguous shards (the shard_map placement lives in
+``repro.distributed.index_sharding``) and every mutation stays on the
+shards. ``insert`` routes each batch to shards least-loaded-first in
+contiguous slabs (one ``ShardedSegment`` delta per batch, placed with the
+same NamedSharding rules as the base — nothing is replicated), and
+``compact()`` folds each shard's base slice + delta slabs + tombstones
+into a new base shard locally, with no cross-shard traffic; only an
+explicit ``rebalance()`` re-partitions the live corpus contiguously when
+occupancy skews. Results are identical to ``DeviceLSHIndex`` for any
+shard count.
 
 ``HostLSHIndex`` keeps the FAISS-style dict-of-buckets build as the
 bucket-membership semantics reference (``candidates()`` probes the dicts),
@@ -31,14 +37,16 @@ probing it immediately), ``delete(ids)`` tombstones items by their current
 effective ids (no recompilation — only mask bits flip), and ``compact()``
 merges the surviving keys + corpus rows back into one base segment without
 re-hashing. With the default exact bucket cap, query results match a fresh
-build over the effective corpus bit-identically (ids and candidate counts
-always; scores to float-reassociation ulps while deltas are outstanding,
-exactly after ``compact()``). An explicit ``bucket_cap`` truncates each
-probe window in slot order, and tombstoned slots keep consuming window
-space until ``compact()`` reclaims them — a mutated capped index can
-gather fewer live candidates per bucket than a fresh capped build (and
-delta segments carry their own caps), so the parity guarantee applies to
-the default cap only. Inserts past ``max_deltas`` outstanding deltas
+build over the effective corpus bit-identically: ids and candidate counts
+always; scores to float-reassociation ulps while deltas are outstanding or
+while a shard-locally compacted base partitions shards differently from a
+contiguous fresh build, and exactly whenever the stored arrays coincide
+with a fresh build's (a flat ``compact()``, or a sharded ``rebalance()``).
+Indexes built with an explicit ``bucket_cap`` keep live-window lookups, so
+a truncated probe window gathers the first ``cap`` *live* members of each
+bucket — tombstones no longer consume window space — but delta segments
+still carry their own caps, so the fresh-rebuild parity guarantee applies
+to the default cap only. Inserts past ``max_deltas`` outstanding deltas
 trigger an automatic compaction.
 
 Bucket keys are a universal multiply-add hash of the K integer hashcodes in
@@ -240,9 +248,10 @@ class DeviceLSHIndex(_SegmentedIndex):
         return self
 
     def _new_store(self, keys, corpus) -> SegmentStore:
-        return SegmentStore(build_segment(
-            keys, corpus, bucket_cap=self.bucket_cap,
-            warn_layout=type(self).__name__))
+        return SegmentStore(
+            build_segment(keys, corpus, bucket_cap=self.bucket_cap,
+                          warn_layout=type(self).__name__),
+            live_window=self.bucket_cap is not None)
 
     # -- query --------------------------------------------------------------
 
@@ -280,15 +289,22 @@ class ShardedLSHIndex(_SegmentedIndex):
     The *base* segment is partitioned into ``shards`` contiguous slices;
     each shard holds its own (L, n_s) sorted bucket keys + permutation
     (local ids, pad slots marked with the n_s sentinel) and its (n_s, ...)
-    corpus slice, placed with ``NamedSharding``. A query batch runs as one
-    jit program: replicated hashing, per-shard searchsorted/gather/re-rank
-    (via ``shard_map`` when a mesh carries the shard axis, ``vmap``
-    otherwise), plus the replicated delta segments, then a global merge of
-    the per-shard/per-segment (scores, effective ids). With the default
-    exact cap the merged top-k is bit-identical to ``DeviceLSHIndex`` for
-    any shard count. ``insert`` appends replicated delta segments;
-    ``compact()`` folds them (minus tombstones) back into a freshly
-    re-partitioned sharded base.
+    corpus slice, placed with ``NamedSharding``. Mutations are
+    shard-native: ``insert`` routes each batch to shards with the
+    deterministic least-loaded-first policy (``segments.route_balanced``)
+    and appends one sharded delta slab per batch, placed exactly like the
+    base; ``delete`` flips tombstone bits; ``compact()`` folds every
+    shard's base slice + delta slabs + tombstones into a new base shard
+    *locally* (no re-hash, no global gather — O(n/S) per shard), leaving
+    each shard's item mix unchanged; ``rebalance()`` is the explicit
+    global re-partition for when sustained skew (or compaction history)
+    leaves occupancy uneven, and restores the contiguous fresh-build
+    layout. A query batch runs as one jit program: replicated hashing,
+    per-shard probe of the base block + every delta slab with an in-shard
+    merge (via ``shard_map`` when a mesh carries the shard axis, ``vmap``
+    otherwise — see ``query_path``), then the single global S-way merge.
+    With the default exact cap the merged top-k is bit-identical to
+    ``DeviceLSHIndex`` for any shard count and any routing.
 
     An explicit ``bucket_cap`` truncates each *shard's* slice of a bucket,
     so the union of candidates can exceed the single-device truncation (up
@@ -308,6 +324,7 @@ class ShardedLSHIndex(_SegmentedIndex):
     _corpus: Any = None            # build-time pytree (keep_corpus=True)
     store: SegmentStore | None = None
     compactions: int = 0
+    rebalances: int = 0
     mesh: Any = None               # jax Mesh carrying the shard axis, or None
     mesh_axis: str | None = None
     _mults: np.ndarray | None = None
@@ -323,9 +340,16 @@ class ShardedLSHIndex(_SegmentedIndex):
         """The effective (live) corpus the returned ids index into — the
         build-time pytree while pristine (None under ``keep_corpus=False``),
         regathered from the segments once mutated, matching
-        ``DeviceLSHIndex.corpus``."""
-        if self.store is not None and self.store.mutated:
+        ``DeviceLSHIndex.corpus``. A shard-local ``compact()`` invalidates
+        the build-time copy (shards no longer hold contiguous slices); the
+        regathered corpus is cached here so repeated access costs one
+        gather, not one per call."""
+        if self.store is None:
+            return self._corpus
+        if self.store.mutated:
             return self.store.effective_corpus()
+        if self._corpus is None and self.keep_corpus:
+            self._corpus = self.store.effective_corpus()
         return self._corpus
 
     @property
@@ -335,6 +359,18 @@ class ShardedLSHIndex(_SegmentedIndex):
     @property
     def shard_size(self) -> int:
         return self.store.base.shard_size
+
+    @property
+    def query_path(self) -> str:
+        """The program ``query_batch`` executes: ``"shard_map"`` when a
+        mesh carries the shard axis, ``"vmap"`` on the single-program
+        fallback. Introspection hook for CI legs that must fail loudly if
+        multi-device coverage silently degrades to the vmap path."""
+        return "shard_map" if self.mesh is not None else "vmap"
+
+    def occupancy(self) -> np.ndarray:
+        """(S,) live items per shard (base + delta slabs)."""
+        return self.store.shard_live_counts
 
     # -- build --------------------------------------------------------------
 
@@ -347,22 +383,130 @@ class ShardedLSHIndex(_SegmentedIndex):
         self.store = self._new_store(keys, corpus)
         return self
 
+    def _place(self):
+        if self.mesh is None:
+            return lambda t: t
+        from repro.distributed import index_sharding
+        return functools.partial(index_sharding.place_sharded,
+                                 mesh=self.mesh, axis=self.mesh_axis)
+
+    def _place_segment(self, seg):
+        place = self._place()
+        return dataclasses.replace(
+            seg, keys=place(seg.keys), sorted_keys=place(seg.sorted_keys),
+            perm=place(seg.perm), corpus=place(seg.corpus))
+
     def _new_store(self, keys, corpus) -> SegmentStore:
-        # compact() re-bases onto the effective corpus; keep the pristine
+        # rebalance() re-bases onto the effective corpus; keep the pristine
         # fallback of the ``corpus`` property in sync with it
         self._corpus = corpus if self.keep_corpus else None
         seg = build_sharded_segment(
             keys, corpus, int(self.shards), bucket_cap=self.bucket_cap,
             warn_layout=type(self).__name__)
+        live_window = self.bucket_cap is not None
         if self.mesh is None:
-            return SegmentStore(seg)
-        from repro.distributed import index_sharding
-        place = functools.partial(index_sharding.place_sharded,
-                                  mesh=self.mesh, axis=self.mesh_axis)
-        seg = dataclasses.replace(
-            seg, keys=place(seg.keys), sorted_keys=place(seg.sorted_keys),
-            perm=place(seg.perm), corpus=place(seg.corpus))
-        return SegmentStore(seg, place_base=place)
+            return SegmentStore(seg, live_window=live_window)
+        return SegmentStore(self._place_segment(seg), place=self._place(),
+                            live_window=live_window)
+
+    # -- mutations (shard-native) -------------------------------------------
+
+    def insert(self, batch, batch_size: int = 1024):
+        """Route a batch to shards (least-loaded-first, contiguous slabs)
+        and append it as one sharded delta slab, hashed once and sorted
+        per shard locally. New items take the next effective ids in batch
+        order, exactly as on the device index; more than ``max_deltas``
+        outstanding deltas trigger an automatic (shard-local) compaction.
+        """
+        if jax.tree.leaves(batch)[0].shape[0] == 0:
+            return self
+        n = jax.tree.leaves(batch)[0].shape[0]
+        keys = bucket_keys(self.family, self._mults, batch, batch_size)
+        alloc, offsets = segments.route_balanced(
+            n, self.store.shard_live_counts)
+        seg, positions = segments.build_sharded_delta(
+            keys, batch, alloc, offsets, seq0=self.store.seq_len,
+            bucket_cap=self.bucket_cap)
+        if self.mesh is not None:
+            seg = self._place_segment(seg)
+        self.store.append_delta(seg, positions)
+        if len(self.store.deltas) > self.max_deltas:
+            self.compact()
+        return self
+
+    def compact(self):
+        """Fold each shard's base slice + delta slabs + tombstones into a
+        new base shard, shard-locally: stored keys only (no re-hash), one
+        per-shard gather + sort program with no cross-shard traffic, so
+        steady-state compaction costs O(n/S) per shard. Shards keep the
+        item mix routing gave them — their sequence ranges stay
+        non-contiguous until an explicit ``rebalance()``; effective ids
+        (and so query results) are unchanged by construction."""
+        store = self.store
+        if not store.mutated:
+            return self
+        if store.n_live == 0:
+            raise ValueError("cannot compact an index with no live items")
+        s = self.store.base.shards
+        segs = store._segments()
+        live2d = np.concatenate(
+            [store.live_host[off:off + g.slots].reshape(s, g.shard_size)
+             for off, g in zip(np.cumsum([0] + [g.slots for g in segs[:-1]]),
+                               segs)], axis=1)
+        pos2d = np.concatenate(
+            [p.reshape(s, g.shard_size)
+             for p, g in zip(store.slot_pos, segs)], axis=1)
+        counts = live2d.sum(axis=1).astype(np.int64)
+        new_ns = max(int(counts.max()), 1)
+        w = live2d.shape[1]
+        idx = np.full((s, new_ns), w, np.int64)
+        new_pos = np.full((s, new_ns), -1, np.int64)
+        eff_seq = np.cumsum(store._live_seq) - 1
+        for sh in range(s):
+            sel = np.flatnonzero(live2d[sh])    # slot order = seq order
+            idx[sh, :sel.size] = sel
+            new_pos[sh, :sel.size] = eff_seq[pos2d[sh, sel]]
+        keys_cat = jnp.concatenate([g.keys for g in segs], axis=1)
+        corpus_cat = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=1),
+            *[g.corpus for g in segs])
+        keys_n, sorted_keys, perm, corpus_n, max_runs = \
+            segments._slab_gather_sort(
+                keys_cat, corpus_cat, jnp.asarray(idx, jnp.int32),
+                jnp.asarray(counts, jnp.int32), shard_size=new_ns)
+        if self.bucket_cap is None:
+            cap = max(int(np.asarray(max_runs).max()), 1)
+            segments._warn_coarse(type(self).__name__, cap,
+                                  self.family.num_tables, int(counts.max()),
+                                  shards=s)
+        else:
+            cap = min(int(self.bucket_cap), new_ns)
+        seg = segments.ShardedSegment(
+            keys=keys_n, sorted_keys=sorted_keys, perm=perm, corpus=corpus_n,
+            cap=cap, counts=tuple(int(c) for c in counts))
+        if self.mesh is not None:
+            seg = self._place_segment(seg)
+        self._corpus = None      # shard layout no longer matches build time
+        self.store = SegmentStore(
+            seg, place=self._place(), base_pos=new_pos.reshape(-1),
+            live_window=self.bucket_cap is not None)
+        self.compactions += 1
+        return self
+
+    def rebalance(self):
+        """Gather the live corpus (sequence order) and re-partition it into
+        S contiguous, evenly-sized shards — the one deliberately global
+        operation in the mutation plane, for when routing skew or
+        shard-local compaction history leaves occupancy uneven. Restores
+        the exact layout of a fresh build over the effective corpus (so
+        post-rebalance queries are bit-identical to one, scores included).
+        """
+        if self.store.n_live == 0:
+            raise ValueError("cannot rebalance an index with no live items")
+        keys, corpus = self.store.effective_arrays()
+        self.store = self._new_store(keys, corpus)
+        self.rebalances += 1
+        return self
 
     # -- query --------------------------------------------------------------
 

@@ -14,22 +14,36 @@ layout, per segment instead of per index):
 
 Mutability is layered on top, LSM-style, by ``SegmentStore``: one base
 segment plus a bounded list of small delta segments (streaming inserts) and
-a tombstone mask over every slot (streaming deletes). A query probes every
+a tombstone mask over every slot (streaming deletes). Delta segments are
+``TableSegment``s on the single-device store and ``ShardedSegment`` slabs
+on the sharded store — ``route_balanced`` assigns each insert batch to
+shards least-loaded-first in contiguous slabs, so the mutation plane is
+shard-native end-to-end and nothing is replicated. A query probes every
 segment with the same searchsorted/gather path, filters tombstones inside
 the probe (dead slots are masked exactly like bucket misses, so they never
 reach ranking or the candidate count), re-ranks per segment, and merges the
-per-segment top-k with the stable validity-aware two-key sort from PR 2 —
-the same merge that makes sharded top-k bit-identical to the single-device
-path makes the segmented top-k bit-identical to one flat table.
+per-segment top-k with the stable validity-aware sort from PR 2 (extended
+with the effective id as a third sort key, which makes the merge
+independent of how items are partitioned into segments and shards).
 
 Ids returned by queries are *effective* ids: the rank of the item in the
-live corpus in slot order (base items first, then deltas in insert order,
-tombstones skipped). That makes a mutated store's results directly
-comparable to a fresh rebuild over the effective corpus, and it is the
-numbering ``delete()`` accepts. ``compact()`` gathers the surviving keys
-and corpus rows (no re-hash — keys are stored in corpus order precisely so
-compaction never touches the hash families) and rebuilds one base segment,
-after which effective and physical ids coincide again.
+live corpus in *sequence order* (the order items entered the store — base
+items first, then deltas in insert order, tombstones skipped). Because
+routed delta slabs interleave shards, each segment carries a host-side
+``slot_pos`` map from slot to sequence position; effective ids derive from
+it, so a mutated store's results stay directly comparable to a fresh
+rebuild over the effective corpus, and it is the numbering ``delete()``
+accepts. ``compact()`` folds the surviving keys and corpus rows (no
+re-hash — keys are stored in corpus order precisely so compaction never
+touches the hash families) into a new base; the sharded fold is
+shard-local (``_slab_gather_sort``), so shards keep whatever mix of items
+they held and only an explicit ``rebalance()`` moves items across shards.
+
+Indexes built with an explicit ``bucket_cap`` keep per-segment live-window
+lookups (``live_rank``/``live_pos``): a truncated probe window skips
+tombstoned slots and gathers the first ``cap`` *live* members of each
+bucket, so heavy deletes no longer silently shrink capped candidate sets
+until compaction.
 """
 
 from __future__ import annotations
@@ -95,14 +109,27 @@ def query_keys(family, mults, queries) -> jax.Array:
 
 def _max_run_length(sorted_keys: jax.Array) -> jax.Array:
     """Longest run of equal values along the last axis of sorted keys."""
+    return _max_run_length_masked(sorted_keys,
+                                  jnp.ones(sorted_keys.shape, bool))
+
+
+def _max_run_length_masked(sorted_keys: jax.Array,
+                           valid: jax.Array) -> jax.Array:
+    """Longest run of equal values along the last axis, counting only
+    ``valid`` positions (runs break at invalid slots). Pad slots sort to
+    the tail of their key run (stable sort, pads carry the largest local
+    ids), so masking them yields the true largest *stored* bucket."""
     flat = sorted_keys.reshape(-1, sorted_keys.shape[-1])
+    v = valid.reshape(flat.shape)
     n = flat.shape[1]
+    if n == 0:
+        return jnp.int32(0)
     idx = jnp.arange(n, dtype=jnp.int32)
     new_run = jnp.concatenate(
         [jnp.ones(flat.shape[:1] + (1,), bool),
-         flat[:, 1:] != flat[:, :-1]], axis=1)
+         (flat[:, 1:] != flat[:, :-1]) | ~v[:, :-1]], axis=1)
     run_start = jax.lax.cummax(jnp.where(new_run, idx, 0), axis=1)
-    return jnp.max(idx - run_start + 1)
+    return jnp.max(jnp.where(v, idx - run_start + 1, 0))
 
 
 # ---------------------------------------------------------------------------
@@ -134,11 +161,15 @@ class TableSegment:
 
 @dataclasses.dataclass(frozen=True)
 class ShardedSegment:
-    """The sharded base: ``TableSegment`` arrays with a leading shard dim.
+    """Sharded arrays with a leading shard dim: the sharded *base* and the
+    routed delta *slabs* share this layout.
 
-    Local ids are per shard; pad slots (global slot id >= items) carry the
-    ``shard_size`` sentinel so a probe landing on one — even via a _PAD_KEY
-    collision — is masked as a miss by the liveness lookup.
+    Each shard holds ``counts[s]`` real items in slots ``[0, counts[s])`` of
+    its slab; the remaining slots are padding (pad keys = _PAD_KEY, pad perm
+    entries = the ``shard_size`` sentinel, so a probe landing on one — even
+    via a _PAD_KEY collision — is masked as a miss by the liveness lookup).
+    A fresh contiguous build fills every shard but the last; slab deltas and
+    shard-locally compacted bases carry arbitrary per-shard counts.
     """
 
     keys: jax.Array         # (S, n_s, L) uint32, corpus order, pads _PAD_KEY
@@ -146,7 +177,11 @@ class ShardedSegment:
     perm: jax.Array         # (S, L, n_s) int32, pad slots -> n_s sentinel
     corpus: Any             # pytree, leaves (S, n_s, ...), zero-padded
     cap: int                # static probe width (largest per-shard bucket)
-    items: int              # real (unpadded) item count n
+    counts: tuple[int, ...]  # real item count per shard
+
+    @property
+    def items(self) -> int:   # real (unpadded) item count n
+        return sum(self.counts)
 
     @property
     def shards(self) -> int:
@@ -241,8 +276,140 @@ def build_sharded_segment(keys: jax.Array, corpus, shards: int, *,
             _warn_coarse(warn_layout, cap, num_tables, n_s, shards)
     else:
         cap = min(int(bucket_cap), n_s)
+    counts = tuple(int(np.clip(n - s * n_s, 0, n_s)) for s in range(shards))
     return ShardedSegment(keys=keys_sh, sorted_keys=sorted_keys, perm=perm,
-                          corpus=corpus_sh, cap=cap, items=n)
+                          corpus=corpus_sh, cap=cap, counts=counts)
+
+
+# ---------------------------------------------------------------------------
+# Routed delta slabs + shard-local fold (the shard-native mutation plane)
+# ---------------------------------------------------------------------------
+
+
+def route_balanced(batch_n: int, loads) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic balance policy: fill the least-loaded shard first.
+
+    -> (alloc (S,), offsets (S,)) int64, shard-id order: shard ``s`` takes
+    the contiguous batch slab ``[offsets[s], offsets[s] + alloc[s])``.
+    Water-fill over ascending (load, shard id): the lowest shards are
+    raised toward a common level, leftovers go one item each to the
+    least-loaded shards — so steady-state ingest keeps shard occupancy
+    within one item of even without ever moving stored rows.
+    """
+    loads = np.asarray(loads, np.int64)
+    s = loads.size
+    order = np.lexsort((np.arange(s), loads))
+    lv = loads[order]
+    alloc_sorted = np.zeros(s, np.int64)
+    b = int(batch_n)
+    if b > 0:
+        for k in range(1, s + 1):
+            room = int((lv[k] - lv[:k]).sum()) if k < s else b
+            if room >= b:
+                level, extra = divmod(int(lv[:k].sum()) + b, k)
+                tgt = np.full(k, level, np.int64)
+                tgt[:extra] += 1
+                alloc_sorted[:k] = tgt - lv[:k]
+                break
+    alloc = np.zeros(s, np.int64)
+    alloc[order] = alloc_sorted
+    offsets = np.zeros(s, np.int64)
+    offsets[order] = np.concatenate(([0], np.cumsum(alloc_sorted)[:-1]))
+    return alloc, offsets
+
+
+@functools.partial(jax.jit, static_argnames=("shards", "shard_size"))
+def _slab_scatter_sort(keys, corpus, idx, counts, *, shards, shard_size):
+    """Scatter a routed batch into per-shard slabs and sort each locally.
+
+    ``keys`` (B, L) corpus-order bucket keys; ``idx`` (S * shard_size,)
+    int32 rows into the batch (row B = pad); ``counts`` (S,) int32 real
+    rows per shard. One program: pad-row gather -> per-shard stable sort
+    -> pad sentinel -> masked max bucket run. The device half of
+    ``build_sharded_delta`` — also the ``insert_program`` the dry run
+    AOT-profiles.
+    """
+    b, num_tables = keys.shape
+    keys_pad = jnp.concatenate(
+        [keys, jnp.full((1, num_tables), _PAD_KEY, jnp.uint32)])
+    keys_sh = keys_pad[idx].reshape(shards, shard_size, num_tables)
+    corpus_sh = jax.tree.map(
+        lambda a: jnp.concatenate([a, jnp.zeros_like(a[:1])])[idx]
+        .reshape((shards, shard_size) + a.shape[1:]), corpus)
+    perm, sorted_keys, _ = _sort_tables(keys_sh.transpose(0, 2, 1))
+    pad = perm >= counts[:, None, None]
+    perm = jnp.where(pad, shard_size, perm)
+    # per-shard max runs (host takes the max): keeps the program free of
+    # even the scalar cross-shard reduce a global max would schedule
+    max_runs = jax.vmap(_max_run_length_masked)(sorted_keys, ~pad)
+    return keys_sh, sorted_keys, perm, corpus_sh, max_runs
+
+
+def build_sharded_delta(keys, corpus, alloc, offsets, *, seq0: int,
+                        bucket_cap: int | None = None
+                        ) -> tuple[ShardedSegment, np.ndarray]:
+    """(B, L) batch keys + batch corpus + a ``route_balanced`` plan ->
+    (slab ShardedSegment, positions).
+
+    ``positions`` is the (S * slab,) int64 slot -> sequence-position map
+    (``seq0 + batch row``, -1 for pad slots) ``SegmentStore.append_delta``
+    consumes; offsets are closed-form, so the bookkeeping never inspects
+    the routed arrays. The slab width is the largest per-shard allocation
+    rounded up to a coarse grid (8, then 64 past 256 slots): routing
+    drifts the raw width by a few items between batches, and ``shard_size``
+    is a static program shape — quantizing it keeps steady-state ingest on
+    one compiled scatter+sort program instead of recompiling every batch.
+    """
+    b, _ = keys.shape
+    s = alloc.size
+    raw = max(int(alloc.max()), 1)
+    q = 64 if raw >= 256 else 8
+    slab = -(-raw // q) * q
+    idx = np.full((s, slab), b, np.int64)
+    pos = np.full((s, slab), -1, np.int64)
+    for sh in range(s):
+        c, o = int(alloc[sh]), int(offsets[sh])
+        idx[sh, :c] = o + np.arange(c)
+        pos[sh, :c] = seq0 + o + np.arange(c)
+    keys_sh, sorted_keys, perm, corpus_sh, max_runs = _slab_scatter_sort(
+        keys, corpus, jnp.asarray(idx.reshape(-1), jnp.int32),
+        jnp.asarray(alloc, jnp.int32), shards=s, shard_size=slab)
+    cap = min(int(bucket_cap), slab) if bucket_cap is not None \
+        else max(int(np.asarray(max_runs).max()), 1)
+    seg = ShardedSegment(keys=keys_sh, sorted_keys=sorted_keys, perm=perm,
+                         corpus=corpus_sh, cap=cap,
+                         counts=tuple(int(a) for a in alloc))
+    return seg, pos.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("shard_size",))
+def _slab_gather_sort(keys_cat, corpus_cat, idx, counts, *, shard_size):
+    """Shard-local compaction fold: each shard gathers its own survivors
+    from the concatenated base + delta slabs and re-sorts locally.
+
+    ``keys_cat`` (S, W, L) / ``corpus_cat`` leaves (S, W, ...) are the
+    per-shard slot axes of every segment concatenated (W = sum of slab
+    widths); ``idx`` (S, shard_size) indexes into W (W = pad), ``counts``
+    (S,) real survivors per shard. Every op is elementwise or a gather
+    along the non-sharded slot axis, so under the mesh the program stays
+    shard-local — no collective, no global gather. Also the
+    ``compact_program`` the dry run AOT-profiles.
+    """
+    s, w, num_tables = keys_cat.shape
+    keys_pad = jnp.concatenate(
+        [keys_cat, jnp.full((s, 1, num_tables), _PAD_KEY, jnp.uint32)],
+        axis=1)
+    keys_n = jnp.take_along_axis(keys_pad, idx[:, :, None], axis=1)
+    corpus_n = jax.tree.map(
+        lambda a: jnp.take_along_axis(
+            jnp.concatenate([a, jnp.zeros_like(a[:, :1])], axis=1),
+            idx.reshape((s, shard_size) + (1,) * (a.ndim - 2)), axis=1),
+        corpus_cat)
+    perm, sorted_keys, _ = _sort_tables(keys_n.transpose(0, 2, 1))
+    pad = perm >= counts[:, None, None]
+    perm = jnp.where(pad, shard_size, perm)
+    max_runs = jax.vmap(_max_run_length_masked)(sorted_keys, ~pad)
+    return keys_n, sorted_keys, perm, corpus_n, max_runs
 
 
 # ---------------------------------------------------------------------------
@@ -250,7 +417,7 @@ def build_sharded_segment(keys: jax.Array, corpus, shards: int, *,
 # ---------------------------------------------------------------------------
 
 
-def probe_tables(sorted_keys, perm, keys, cap, live):
+def probe_tables(sorted_keys, perm, keys, cap, live, win=None):
     """-> (cand (B, L*cap) int32 with -1 for invalid, valid (B, L*cap) bool).
 
     keys: (L, B) uint32 query bucket keys (already hashed + combined). For
@@ -260,12 +427,27 @@ def probe_tables(sorted_keys, perm, keys, cap, live):
     appears at most once. ``live`` is an (m+1,) lookup — entry m covers the
     sharded pad sentinel, tombstoned slots are False — so dead slots are
     filtered exactly like bucket misses, before ranking or counting.
+
+    ``win`` (stores built with an explicit ``bucket_cap``) is the
+    (live_rank (L, m+1), live_pos (L, m)) live-window lookup: the probe
+    then gathers the first ``cap`` *live* positions of the bucket instead
+    of the first ``cap`` positions, so tombstoned slots stop consuming
+    truncation-window space (a dense window silently drops live bucket
+    members past ``cap`` dead ones until compaction).
     """
     m = sorted_keys.shape[1]
     starts = jax.vmap(
         lambda sk, q: jnp.searchsorted(sk, q, side="left"))(sorted_keys, keys)
-    pos = starts[:, :, None] + jnp.arange(cap, dtype=starts.dtype)  # (L, B, cap)
-    in_range = pos < m
+    if win is None:
+        pos = starts[:, :, None] + jnp.arange(cap, dtype=starts.dtype)
+        in_range = pos < m                                # (L, B, cap)
+    else:
+        live_rank, live_pos = win
+        rank0 = jax.vmap(lambda lr, st: lr[st])(live_rank, starts)  # (L, B)
+        j = rank0[:, :, None] + jnp.arange(cap, dtype=rank0.dtype)
+        in_range = j < m
+        pos = jax.vmap(lambda lp, p: lp[p])(
+            live_pos, jnp.minimum(j, max(m - 1, 0)))      # (L, B, cap)
     posc = jnp.minimum(pos, max(m - 1, 0))
     key_at = jax.vmap(lambda sk, p: sk[p])(sorted_keys, posc)
     hit = in_range & (key_at == keys[:, :, None])
@@ -281,19 +463,24 @@ def probe_tables(sorted_keys, perm, keys, cap, live):
 
 
 def select_topk(metric, topk, cand, scores, valid):
-    """Stable two-key sort -> (ids (B, topk) with -1 fill, scores (B, topk)).
+    """Stable three-key sort -> (ids (B, topk) with -1 fill, scores (B, topk)).
 
     Primary key: validity (invalid slots strictly last, independent of their
     score values); secondary key: the score in rank order (ascending distance
     / descending similarity, NaN after every finite score — XLA's total
-    order, matching np.argsort in the host path). The stable sort breaks
-    score ties by candidate position, i.e. ascending id, which is what makes
-    sharded, segmented, and single-table selections bit-identical.
+    order, matching np.argsort in the host path); tertiary key: the
+    candidate id itself, so score ties resolve to the ascending id
+    *regardless of candidate position*. Single-table probes present
+    candidates in ascending-id order, where the id key reproduces the old
+    stable positional tie-break bit-for-bit; merges over shards and routed
+    delta slabs present them in partition order, where the explicit key is
+    what keeps selection independent of how items are laid out — the
+    invariant behind mutated-vs-fresh parity for any shard routing.
     """
     order_key = scores if metric == "euclidean" else -scores
     _, _, s_cand, s_scores, s_valid = jax.lax.sort(
         (~valid, order_key, cand, scores, valid),
-        dimension=1, is_stable=True, num_keys=2)
+        dimension=1, is_stable=True, num_keys=3)
     k = min(topk, cand.shape[1])
     bad = _bad_score(metric)
     ids = jnp.where(s_valid[:, :k], s_cand[:, :k], -1)
@@ -327,21 +514,21 @@ def rank_candidates(metric, topk, queries, corpus, cand, valid):
 def segment_candidates(seg_arrays, keys, cap):
     """One segment's probe -> (cand (B, L*cap) effective ids with -1 fill,
     valid (B, L*cap) bool). ``seg_arrays`` is the (corpus, sorted_keys,
-    perm, live, eff) tuple; local ids are mapped through ``eff`` into the
-    store's effective (live-corpus) numbering."""
-    _, sorted_keys, perm, live, eff = seg_arrays
-    cand, valid = probe_tables(sorted_keys, perm, keys, cap, live)
+    perm, live, eff, win) tuple; local ids are mapped through ``eff`` into
+    the store's effective (live-corpus) numbering."""
+    _, sorted_keys, perm, live, eff, win = seg_arrays
+    cand, valid = probe_tables(sorted_keys, perm, keys, cap, live, win)
     safe = jnp.where(valid, cand, 0)
     return jnp.where(valid, eff[safe], -1), valid
 
 
 def segment_topk(metric, topk, cap, queries, seg_arrays, keys):
     """One segment's probe + re-rank -> ((B, topk) effective ids, scores,
-    n_cand). ``seg_arrays`` is the (corpus, sorted_keys, perm, live, eff)
-    tuple; candidates come back already mapped through ``eff`` into the
-    store's effective (live-corpus) numbering, -1 fill preserved."""
-    corpus, sorted_keys, perm, live, eff = seg_arrays
-    cand, valid = probe_tables(sorted_keys, perm, keys, cap, live)
+    n_cand). ``seg_arrays`` is the (corpus, sorted_keys, perm, live, eff,
+    win) tuple; candidates come back already mapped through ``eff`` into
+    the store's effective (live-corpus) numbering, -1 fill preserved."""
+    corpus, sorted_keys, perm, live, eff, win = seg_arrays
+    cand, valid = probe_tables(sorted_keys, perm, keys, cap, live, win)
     ids, scores, n_cand = rank_candidates(metric, topk, queries, corpus,
                                           cand, valid)
     return jnp.where(ids >= 0, eff[jnp.where(ids >= 0, ids, 0)], -1), \
@@ -352,11 +539,10 @@ def merge_topk(metric, topk, ids, scores, n_cand):
     """(G, B, k) per-group top-k -> global (ids, scores, n_cand).
 
     Group-major concatenation + the same stable validity-aware selection as
-    the single-table path: score ties fall back to concat position, which is
-    (group, within-group rank) = ascending effective id whenever the groups
-    are ordered by slot offset — so the merged top-k is bit-identical to
-    ranking all candidates in one table. Groups are shards, delta segments,
-    or both.
+    the single-table path. The effective id rides along as the third sort
+    key, so score ties resolve identically however items are partitioned
+    into groups — shards, delta slabs, or both — and the merged top-k is
+    bit-identical to ranking all candidates in one table.
     """
     g, b, k = ids.shape
     flat_ids = ids.transpose(1, 0, 2).reshape(b, g * k)
@@ -366,22 +552,26 @@ def merge_topk(metric, topk, ids, scores, n_cand):
     return out_ids, out_scores, n_cand.sum(axis=0)
 
 
-def merge_with_deltas(metric, topk, groups, deltas, delta_caps, queries,
-                      keys):
-    """Probe the replicated delta segments and merge them, in slot order,
-    with the base's per-group top-k ``groups`` ((G, B, k) ids/scores/n_cand
-    — G shards, or 1 for a single-device base). The single merge body shared
-    by the vmapped and the shard_map sharded query programs, which must stay
-    bit-identical."""
-    ids, scores, n_cand = groups
-    outs = [(ids, scores, n_cand)]
-    for seg_arrays, dcap in zip(deltas, delta_caps):
-        i, s, n = segment_topk(metric, topk, dcap, queries, seg_arrays, keys)
-        outs.append((i[None], s[None], n[None]))
+def shard_topk_with_deltas(metric, topk, cap, delta_caps, queries, base_s,
+                           deltas_s, keys):
+    """One shard's merged top-k over its base slice + its delta slabs.
+
+    ``base_s`` / each element of ``deltas_s`` is a per-shard (corpus,
+    sorted_keys, perm, live, eff, win) tuple (no leading shard dim). The
+    single body shared verbatim by the vmapped and the shard_map sharded
+    query programs, which must stay bit-identical; the per-shard top-k
+    covers base + deltas together, so the only cross-shard stage left is
+    the final S-way merge."""
+    outs = [segment_topk(metric, topk, cap, queries, base_s, keys)]
+    for seg_arrays, dcap in zip(deltas_s, delta_caps):
+        outs.append(segment_topk(metric, topk, dcap, queries, seg_arrays,
+                                 keys))
+    if len(outs) == 1:
+        return outs[0]
     return merge_topk(metric, topk,
-                      jnp.concatenate([o[0] for o in outs]),
-                      jnp.concatenate([o[1] for o in outs]),
-                      jnp.concatenate([o[2] for o in outs]))
+                      jnp.stack([o[0] for o in outs]),
+                      jnp.stack([o[1] for o in outs]),
+                      jnp.stack([o[2] for o in outs]))
 
 
 # ---------------------------------------------------------------------------
@@ -409,20 +599,20 @@ def segmented_query(family, segs, mults, queries, *, metric, topk, caps):
                                              "delta_caps"))
 def sharded_query_vmap(family, base, deltas, mults, queries, *, metric, topk,
                        cap, delta_caps):
-    """Single-program sharded query without a mesh: vmap over the S axis of
-    the base segment, plus the delta segments, merged in slot order.
+    """Single-program sharded query without a mesh: vmap the per-shard
+    base + delta-slab body over the S axis, then the global S-way merge.
 
     Used when fewer devices than shards exist (e.g. the 1-device tier-1
     run); identical math to the shard_map program in
-    repro.distributed.index_sharding.
+    repro.distributed.index_sharding — both call
+    ``shard_topk_with_deltas`` per shard.
     """
     keys = query_keys(family, mults, queries)
     per_shard = jax.vmap(
-        lambda cs, sk, pm, lv, ef: segment_topk(
-            metric, topk, cap, queries, (cs, sk, pm, lv, ef), keys)
-    )(*base)                                              # (S, B, k) each
-    return merge_with_deltas(metric, topk, per_shard, deltas, delta_caps,
-                             queries, keys)
+        lambda base_s, deltas_s: shard_topk_with_deltas(
+            metric, topk, cap, delta_caps, queries, base_s, deltas_s, keys),
+        in_axes=(0, 0))(base, deltas)                     # (S, B, k) each
+    return merge_topk(metric, topk, *per_shard)
 
 
 @functools.partial(jax.jit, static_argnames=("caps",))
@@ -440,21 +630,48 @@ def segmented_candidates(family, segs, mults, queries, *, caps):
 @functools.partial(jax.jit, static_argnames=("cap", "delta_caps"))
 def sharded_candidates(family, base, deltas, mults, queries, *, cap,
                        delta_caps):
-    """Sharded-base variant of ``segmented_candidates`` (vmap over shards)."""
+    """Sharded-base + sharded-delta-slab variant of
+    ``segmented_candidates`` (vmap over shards for every segment)."""
     keys = query_keys(family, mults, queries)
-    _, sorted_keys, perm, live, eff = base
-    cand, valid = jax.vmap(
-        lambda sk, pm, lv, ef: segment_candidates((None, sk, pm, lv, ef),
-                                                  keys, cap)
-    )(sorted_keys, perm, live, eff)                       # (S, B, W)
-    s, b, w = cand.shape
-    cands = [cand.transpose(1, 0, 2).reshape(b, s * w)]
-    valids = [valid.transpose(1, 0, 2).reshape(b, s * w)]
+    parts = [jax.vmap(lambda b_s: segment_candidates(b_s, keys, cap))(base)]
     for seg_arrays, dcap in zip(deltas, delta_caps):
-        dc, dv = segment_candidates(seg_arrays, keys, dcap)
-        cands.append(dc)
-        valids.append(dv)
+        parts.append(jax.vmap(
+            lambda d_s, dcap=dcap: segment_candidates(d_s, keys, dcap)
+        )(seg_arrays))                                    # (S, B, W) each
+    cands, valids = [], []
+    for cand, valid in parts:
+        s, b, w = cand.shape
+        cands.append(cand.transpose(1, 0, 2).reshape(b, s * w))
+        valids.append(valid.transpose(1, 0, 2).reshape(b, s * w))
     return jnp.concatenate(cands, axis=1), jnp.concatenate(valids, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Live-window lookups (explicit bucket_cap stores)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _live_window_tables(perm, live):
+    """(L, m) perm + (m+1,) live -> (live_rank (L, m+1), live_pos (L, m)).
+
+    ``live_rank[p]`` counts the live slots among sorted positions [0, p) of
+    the table; ``live_pos`` lists the live positions in ascending order
+    (dead positions follow, also ascending — a probe walking past the live
+    members of a bucket lands on dead slots that the liveness mask then
+    filters). Together they let a truncated probe window address the j-th
+    *live* member of a bucket directly."""
+    live_sorted = live[perm]                              # (L, m) bool
+    rank = jnp.concatenate(
+        [jnp.zeros(perm.shape[:1] + (1,), jnp.int32),
+         jnp.cumsum(live_sorted, axis=1, dtype=jnp.int32)], axis=1)
+    pos = jnp.argsort(~live_sorted, axis=1, stable=True).astype(jnp.int32)
+    return rank, pos
+
+
+@jax.jit
+def _live_window_tables_sharded(perm, live):
+    return jax.vmap(_live_window_tables)(perm, live)
 
 
 # ---------------------------------------------------------------------------
@@ -466,58 +683,130 @@ class SegmentStore:
     """LSM-style mutable view over immutable segments.
 
     Holds one base segment (``TableSegment`` or ``ShardedSegment``), a
-    bounded list of delta ``TableSegment``s, and a host-side tombstone mask
-    over every slot (shard-pad slots are born dead). After each mutation it
-    re-derives the per-segment device arrays the planner consumes:
+    bounded list of delta segments (``TableSegment``s on the single-device
+    store, routed ``ShardedSegment`` slabs on the sharded store), and a
+    host-side tombstone mask over every slot (shard-pad slots are born
+    dead). Each segment also carries a host-side ``slot_pos`` map from slot
+    to *sequence position* — the order items entered the store — because
+    routed slabs interleave shards, so slot order no longer equals arrival
+    order. After each mutation the store re-derives the per-segment device
+    arrays the planner consumes:
 
-      live  (m+1,) bool   per segment (sharded base: (S, n_s+1)) — slot
-                          liveness with the pad-sentinel entry always False
-      eff   (m,) int32    per segment (sharded base: (S, n_s)) — the slot's
-                          effective id: its rank among live slots in slot
-                          order, i.e. its index in ``effective_corpus()``
+      live  (m+1,) bool   per segment (sharded: (S, n_s+1)) — slot liveness
+                          with the pad-sentinel entry always False
+      eff   (m,) int32    per segment (sharded: (S, n_s)) — the slot's
+                          effective id: its rank among live slots in
+                          sequence order, i.e. its index in
+                          ``effective_corpus()``
+      win   optional      (live_rank, live_pos) live-window lookups, built
+                          only for ``live_window=True`` stores (explicit
+                          bucket_cap indexes) so truncated probe windows
+                          skip tombstoned slots
 
     Deletes only flip mask bits (same array shapes -> no recompilation);
     inserts append a segment (bounded recompiles, the index compacts past
-    ``max_deltas``). ``place_base`` lets the sharded index keep the derived
-    base arrays on its mesh.
+    ``max_deltas``). ``place`` keeps every sharded segment's derived
+    arrays on the index's mesh; ``base_pos`` overrides the base slot ->
+    sequence map (shard-local compaction produces bases whose shards hold
+    non-contiguous sequence ranges).
     """
 
-    def __init__(self, base, *, place_base: Callable | None = None):
+    def __init__(self, base, *, place: Callable | None = None,
+                 base_pos: np.ndarray | None = None,
+                 live_window: bool = False):
         self.base = base
-        self.deltas: list[TableSegment] = []
-        self.place_base = place_base or (lambda t: t)
-        self.live_host = np.zeros(base.slots, bool)
-        self.live_host[:base.items] = True     # shard pads (>= items) dead
+        self.deltas: list[TableSegment | ShardedSegment] = []
+        self.place = place or (lambda t: t)
+        self.live_window = bool(live_window)
+        if base_pos is None:
+            real = np.zeros(base.slots, bool)
+            if isinstance(base, ShardedSegment):
+                n_s = base.shard_size
+                for s, c in enumerate(base.counts):
+                    real[s * n_s:s * n_s + c] = True
+            else:
+                real[:] = True
+            base_pos = np.where(real, np.cumsum(real) - 1, -1)
+        self.slot_pos = [np.asarray(base_pos, np.int64)]
+        self.live_host = self.slot_pos[0] >= 0  # shard pads are born dead
+        self.seq_len = int(base.items)
         self._refresh()
 
     # -- derived state ------------------------------------------------------
 
-    def _refresh(self) -> None:
-        eff_all = (np.cumsum(self.live_host) - 1).astype(np.int32)
-        self.n_live = int(self.live_host.sum())
-        self.n_dead = (self.live_host.size - self.base.slots
-                       + self.base.items - self.n_live)
-        pos, luts = 0, []
-        for seg in [self.base] + self.deltas:
-            live = self.live_host[pos:pos + seg.slots]
-            eff = eff_all[pos:pos + seg.slots]
-            if isinstance(seg, ShardedSegment):
-                s, n_s = seg.shards, seg.shard_size
-                lut = (jnp.asarray(np.pad(live.reshape(s, n_s),
-                                          ((0, 0), (0, 1)))),
-                       jnp.asarray(eff.reshape(s, n_s)))
-                lut = self.place_base(lut)
-            else:
-                lut = (jnp.asarray(np.append(live, False)), jnp.asarray(eff))
+    def _segments(self) -> list:
+        return [self.base] + self.deltas
+
+    def _seg_luts(self, seg, live: np.ndarray, eff: np.ndarray):
+        if isinstance(seg, ShardedSegment):
+            s, n_s = seg.shards, seg.shard_size
+            lut = (jnp.asarray(np.pad(live.reshape(s, n_s),
+                                      ((0, 0), (0, 1)))),
+                   jnp.asarray(eff.reshape(s, n_s).astype(np.int32)))
+            return self.place(lut)
+        return (jnp.asarray(np.append(live, False)),
+                jnp.asarray(eff.astype(np.int32)))
+
+    def _seg_win(self, seg, live_lut):
+        if not self.live_window:
+            return None
+        if isinstance(seg, ShardedSegment):
+            return self.place(_live_window_tables_sharded(seg.perm, live_lut))
+        return _live_window_tables(seg.perm, live_lut)
+
+    def _refresh(self, touched: set[int] | None = None) -> None:
+        """Rebuild the sequence-order views and the segment lookups.
+
+        ``touched`` is the set of segment indices whose live mask changed
+        (None = rebuild everything). Segments are ordered blocks in
+        sequence space (each delta's positions follow every earlier
+        segment's), so segments before the first touched one keep both
+        lookups untouched; later segments rebuild ``eff`` (ranks shifted)
+        but reuse their live-window tables unless their own mask changed —
+        deletes stay cheap even on capped stores with a big base and many
+        slabs."""
+        live_seq = np.zeros(self.seq_len, bool)
+        pos_to_slot = np.full(self.seq_len, -1, np.int64)
+        off = 0
+        for pos, seg in zip(self.slot_pos, self._segments()):
+            valid = pos >= 0
+            live_seq[pos[valid]] = self.live_host[off:off + seg.slots][valid]
+            pos_to_slot[pos[valid]] = off + np.flatnonzero(valid)
+            off += seg.slots
+        self._live_seq = live_seq
+        self._pos_to_slot = pos_to_slot
+        self.n_live = int(live_seq.sum())
+        self.n_dead = self.seq_len - self.n_live
+        eff_seq = (np.cumsum(live_seq) - 1).astype(np.int64)
+        first = 0 if touched is None else min(touched, default=0)
+        luts, wins, off = [], [], 0
+        for i, (pos, seg) in enumerate(zip(self.slot_pos,
+                                           self._segments())):
+            if touched is not None and i < first:
+                luts.append(self._luts[i])
+                wins.append(self._wins[i])
+                off += seg.slots
+                continue
+            live = self.live_host[off:off + seg.slots]
+            eff = (eff_seq[np.clip(pos, 0, None)] if self.seq_len
+                   else np.zeros(seg.slots, np.int64))
+            eff = np.where(pos >= 0, eff, 0)
+            lut = self._seg_luts(seg, live, eff)
             luts.append(lut)
-            pos += seg.slots
-        self._luts = luts
+            if touched is None or i in touched:
+                wins.append(self._seg_win(seg, lut[0]))
+            else:
+                wins.append(self._wins[i])
+            off += seg.slots
+        self._luts, self._wins = luts, wins
 
     def seg_arrays(self, i: int):
-        """(corpus, sorted_keys, perm, live, eff) of segment i (0 = base)."""
-        seg = ([self.base] + self.deltas)[i]
+        """(corpus, sorted_keys, perm, live, eff, win) of segment i
+        (0 = base; ``win`` is None unless the store keeps live windows)."""
+        seg = self._segments()[i]
         live, eff = self._luts[i]
-        return (seg.corpus, seg.sorted_keys, seg.perm, live, eff)
+        return (seg.corpus, seg.sorted_keys, seg.perm, live, eff,
+                self._wins[i])
 
     @property
     def delta_arrays(self) -> tuple:
@@ -540,20 +829,48 @@ class SegmentStore:
     def mutated(self) -> bool:
         return bool(self.deltas) or self.n_dead > 0
 
+    @property
+    def shard_live_counts(self) -> np.ndarray:
+        """(S,) live items per shard over the base + every sharded delta —
+        the occupancy the routing policy balances against."""
+        counts = None
+        off = 0
+        for seg in self._segments():
+            live = self.live_host[off:off + seg.slots]
+            if isinstance(seg, ShardedSegment):
+                c = live.reshape(seg.shards, seg.shard_size).sum(axis=1)
+                counts = c.astype(np.int64) if counts is None else counts + c
+            off += seg.slots
+        return counts
+
     # -- mutations ----------------------------------------------------------
 
-    def append_delta(self, seg: TableSegment) -> None:
+    def append_delta(self, seg, positions: np.ndarray | None = None) -> None:
         """O(batch) append: earlier segments' liveness and effective ids are
         untouched (new items rank after every live item), so only the new
-        segment's lookups are built — no base-array re-upload per insert."""
-        start = self.n_live
+        segment's lookups are built — no base-array re-upload per insert.
+        ``positions`` maps the segment's slots to sequence positions (``-1``
+        pads); defaults to the identity continuation for flat deltas."""
+        if positions is None:
+            positions = np.arange(self.seq_len, self.seq_len + seg.slots)
+        positions = np.asarray(positions, np.int64)
+        valid = positions >= 0
+        n_new = int(valid.sum())
+        start, seq0, slots0 = self.n_live, self.seq_len, self.live_host.size
         self.deltas.append(seg)
-        self.live_host = np.concatenate(
-            [self.live_host, np.ones(seg.slots, bool)])
-        self._luts.append((
-            jnp.asarray(np.append(np.ones(seg.slots, bool), False)),
-            jnp.arange(start, start + seg.slots, dtype=jnp.int32)))
-        self.n_live += seg.slots
+        self.slot_pos.append(positions)
+        self.live_host = np.concatenate([self.live_host, valid])
+        self._live_seq = np.concatenate([self._live_seq,
+                                         np.ones(n_new, bool)])
+        p2s = np.full(n_new, -1, np.int64)
+        p2s[positions[valid] - seq0] = slots0 + np.flatnonzero(valid)
+        self._pos_to_slot = np.concatenate([self._pos_to_slot, p2s])
+        self.seq_len += n_new
+        self.n_live += n_new
+        eff = np.where(valid, start + (positions - seq0), 0)
+        lut = self._seg_luts(seg, valid, eff)
+        self._luts.append(lut)
+        self._wins.append(self._seg_win(seg, lut[0]))
 
     def delete_effective(self, ids: np.ndarray) -> int:
         """Tombstone items by their current *effective* ids (the numbering
@@ -565,17 +882,20 @@ class SegmentStore:
             raise IndexError(
                 f"delete ids must be in [0, {self.n_live}), got "
                 f"[{ids[0]}, {ids[-1]}]")
-        slots = np.flatnonzero(self.live_host)[ids]
+        seq_ids = np.flatnonzero(self._live_seq)[ids]
+        slots = self._pos_to_slot[seq_ids]
         self.live_host[slots] = False
-        self._refresh()
+        bounds = np.cumsum([seg.slots for seg in self._segments()])
+        touched = set(np.searchsorted(bounds, slots,
+                                      side="right").tolist())
+        self._refresh(touched)
         return int(ids.size)
 
     # -- effective (live) views --------------------------------------------
 
     def _flat_keys_and_corpus(self):
-        segs = [self.base] + self.deltas
         flat_keys, flat_corpus = [], []
-        for seg in segs:
+        for seg in self._segments():
             if isinstance(seg, ShardedSegment):
                 flat_keys.append(seg.keys.reshape(-1, seg.keys.shape[-1]))
                 flat_corpus.append(jax.tree.map(
@@ -588,19 +908,36 @@ class SegmentStore:
                               *flat_corpus)
         return keys, corpus
 
+    def _live_slots_seq_order(self) -> np.ndarray:
+        """Flat slot indices of the live items, in sequence order."""
+        live_slots = np.flatnonzero(self.live_host)
+        pos = np.concatenate(self.slot_pos)[live_slots]
+        return live_slots[np.argsort(pos, kind="stable")]
+
     def effective_arrays(self):
-        """-> ((n_live, L) keys, corpus pytree) of live items in slot order —
-        the compaction input; keys come from storage, never from re-hashing."""
+        """-> ((n_live, L) keys, corpus pytree) of live items in sequence
+        (= effective id) order — the rebalance/global-compaction input;
+        keys come from storage, never from re-hashing."""
         keys, corpus = self._flat_keys_and_corpus()
-        idx = jnp.asarray(np.flatnonzero(self.live_host))
+        idx = jnp.asarray(self._live_slots_seq_order())
         return keys[idx], tree_index(corpus, idx)
 
     def effective_corpus(self):
-        """The live corpus in effective-id order (zero-copy when pristine)."""
-        if not self.mutated:
-            if isinstance(self.base, ShardedSegment):
-                flat = jax.tree.map(
-                    lambda a: a.reshape((-1,) + a.shape[2:]), self.base.corpus)
-                return tree_index(flat, slice(0, self.base.items))
+        """The live corpus in effective-id order. Zero-copy for a pristine
+        flat base, a slice view when live slots are already a contiguous
+        prefix in sequence order (pristine contiguous sharded base), and a
+        corpus-only gather otherwise — the stored keys are never touched
+        (``effective_arrays`` is the keys+corpus variant compaction needs).
+        """
+        if not self.mutated and isinstance(self.base, TableSegment):
             return self.base.corpus
-        return self.effective_arrays()[1]
+        flats = [jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]),
+                              seg.corpus)
+                 if isinstance(seg, ShardedSegment) else seg.corpus
+                 for seg in self._segments()]
+        corpus = flats[0] if len(flats) == 1 else jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *flats)
+        idx = self._live_slots_seq_order()
+        if np.array_equal(idx, np.arange(idx.size)):
+            return tree_index(corpus, slice(0, idx.size))
+        return tree_index(corpus, jnp.asarray(idx))

@@ -11,14 +11,16 @@ segment runs and provides the ``shard_map`` variant of the query program:
   and over the dedicated 1-D ``shard`` mesh in tests. Without a context, a
   1-D mesh over the first S local devices is built; with fewer devices than
   shards the caller falls back to the vmapped single-device program.
-- ``place_sharded``: NamedSharding placement of the (S, ...)-leading base
-  arrays (sorted keys, permutations, liveness/effective-id lookups, corpus
-  slices).
+- ``place_sharded``: NamedSharding placement of any (S, ...)-leading index
+  arrays — the base segment AND the routed delta slabs (sorted keys,
+  permutations, liveness/effective-id/live-window lookups, corpus slices)
+  follow the same rules, so the mutation plane shards exactly like the
+  query plane.
 - ``shard_map_query``: one jit program — replicated hashing outside the
-  shard_map, per-shard searchsorted/gather/tombstone-filter/re-rank inside
-  it (each device sees its (1, ...) block), the replicated delta segments
-  probed alongside, then the global top-k merge over shards + deltas in
-  slot order.
+  shard_map; inside it each device probes its base block *and* its slab of
+  every delta segment (searchsorted/gather/tombstone-filter/re-rank) and
+  merges them into one per-shard top-k; then the single global S-way merge.
+  Deltas are never a replicated post-merge appendix.
 """
 
 from __future__ import annotations
@@ -68,28 +70,32 @@ def place_sharded(tree, mesh: Mesh, axis: str):
                                              "delta_caps", "mesh", "axis"))
 def shard_map_query(family, base, deltas, mults, queries, *, metric, topk,
                     cap, delta_caps, mesh, axis):
-    """One jit program: hash (replicated) -> per-shard top-k (shard_map) +
-    delta top-ks (replicated) -> global merge in slot order. Bit-identical
-    to core.segments.sharded_query_vmap."""
+    """One jit program: hash (replicated) -> per-shard top-k over the base
+    block + every delta slab (shard_map) -> global S-way merge.
+    Bit-identical to core.segments.sharded_query_vmap — both run
+    ``segments.shard_topk_with_deltas`` per shard.
+
+    ``base`` and each element of ``deltas`` is a (corpus, sorted_keys,
+    perm, live, eff, win) tuple whose array leaves carry a leading shard
+    dim laid over ``axis``; each device sees its (1, ...) blocks.
+    """
     from repro.core import segments
 
     keys = segments.query_keys(family, mults, queries)   # (L, B), replicated
-    corpus_sh, sorted_keys, perm, live, eff = base
 
-    def body(corpus_s, sk, pm, lv, ef, keys_r, queries_r):
+    def body(base_blk, deltas_blk, keys_r, queries_r):
         # blocks carry a leading shard dim of 1 on the sharded operands
-        ids, scores, n_cand = segments.segment_topk(
-            metric, topk, cap, queries_r,
-            (jax.tree.map(lambda a: a[0], corpus_s), sk[0], pm[0], lv[0],
-             ef[0]), keys_r)
+        take0 = lambda t: jax.tree.map(lambda a: a[0], t)
+        ids, scores, n_cand = segments.shard_topk_with_deltas(
+            metric, topk, cap, delta_caps, queries_r,
+            take0(base_blk), take0(deltas_blk), keys_r)
         return ids[None], scores[None], n_cand[None]
 
     sharded_spec, rep = P(axis), P()
     per_shard = shard_map(
         body, mesh,
-        in_specs=(sharded_spec,) * 5 + (rep, rep),
+        in_specs=(sharded_spec, sharded_spec, rep, rep),
         out_specs=(sharded_spec,) * 3,
         check_rep=False,
-    )(corpus_sh, sorted_keys, perm, live, eff, keys, queries)
-    return segments.merge_with_deltas(metric, topk, per_shard, deltas,
-                                      delta_caps, queries, keys)
+    )(base, deltas, keys, queries)
+    return segments.merge_topk(metric, topk, *per_shard)

@@ -238,7 +238,7 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
                          topk: int = 10, num_codes: int = 4,
                          num_tables: int = 8, bucket_cap: int = 64,
                          delta_n: int = 4096, delta_cap: int = 64) -> dict:
-    """AOT-lower + compile the sharded LSH index query programs.
+    """AOT-lower + compile the sharded LSH index query + mutation programs.
 
     One corpus shard per device along the mesh's data axis (the
     ``lsh_shard`` rule), segment-store arrays (sorted keys, permutations,
@@ -246,14 +246,17 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
     NamedSharding machinery as the model cells, queries replicated —
     records the memory / FLOP / collective profile of serving one query
     batch so the roofline report can account the ANN workload next to the
-    model workloads. Two programs are compiled: the compacted store (base
-    segment only) and the post-insert store (base + one replicated
-    ``delta_n``-item delta segment) — the latter's profile lands under
-    ``delta_probe`` so the report can price serving during streaming
-    ingestion.
+    model workloads. Four programs are compiled: the compacted store (base
+    segment only), the post-insert store (base + one sharded
+    ``delta_n``-item delta slab probed inside the same shard_map body —
+    ``delta_probe``), the fused hash pipeline (``hash_program``), and the
+    two shard-local mutation programs — the routed slab scatter + sort
+    behind ``insert`` (``insert_program``, hash included) and the
+    per-shard survivor fold behind ``compact()`` (``compact_program``).
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.core import segments
     from repro.core.lsh import make_family
     from repro.distributed import index_sharding
 
@@ -265,22 +268,30 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         shard_mesh, shard_axis = index_sharding.resolve_mesh(shards)
         assert shard_axis is not None, "lsh_shard rule must resolve here"
         n_s = -(-corpus_n // shards)
+        d_ns = max(-(-delta_n // shards), 1)
         l, k = num_tables, num_codes
         fam_sds = jax.eval_shape(
             lambda key: make_family(key, "cp-e2lsh", dims, num_codes=k,
                                     num_tables=l, rank=4),
             jax.ShapeDtypeStruct((2,), jnp.uint32))
         sds = jax.ShapeDtypeStruct
-        base_sds = (sds((shards, n_s) + tuple(dims), jnp.float32),  # corpus
-                    sds((shards, l, n_s), jnp.uint32),              # keys
-                    sds((shards, l, n_s), jnp.int32),               # perm
-                    sds((shards, n_s + 1), jnp.bool_),              # live
-                    sds((shards, n_s), jnp.int32))                  # eff
-        delta_sds = (sds((delta_n,) + tuple(dims), jnp.float32),
-                     sds((l, delta_n), jnp.uint32),
-                     sds((l, delta_n), jnp.int32),
-                     sds((delta_n + 1,), jnp.bool_),
-                     sds((delta_n,), jnp.int32))
+
+        def seg_sds(s, m):
+            """(corpus, sorted_keys, perm, live, eff, win) SDS tuple of one
+            sharded segment. This cell prices an explicit-bucket_cap store,
+            and those keep live-window lookups (live_rank, live_pos) and
+            run the live-window probe — profile the program that actually
+            ships, lookups included."""
+            return (sds((s, m) + tuple(dims), jnp.float32),
+                    sds((s, l, m), jnp.uint32),
+                    sds((s, l, m), jnp.int32),
+                    sds((s, m + 1), jnp.bool_),
+                    sds((s, m), jnp.int32),
+                    (sds((s, l, m + 1), jnp.int32),
+                     sds((s, l, m), jnp.int32)))
+
+        base_sds = seg_sds(shards, n_s)
+        delta_sds = seg_sds(shards, d_ns)   # routed slab: sharded like base
         mults_sds = sds((k,), jnp.uint32)
         q_sds = sds((batch,) + tuple(dims), jnp.float32)
 
@@ -288,7 +299,7 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
             ("lsh_shard",) + (None,) * (len(s.shape) - 1), s.shape)
         rep = NamedSharding(mesh, P())
         fam_sh = jax.tree.map(lambda _: rep, fam_sds)
-        base_sh = tuple(shard_of(s) for s in base_sds)
+        seg_sh = lambda t: jax.tree.map(shard_of, t)
 
         def compile_one(deltas_sds, delta_caps):
             def step(fam, base, deltas, mults, queries):
@@ -297,17 +308,16 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
                     metric="euclidean", topk=topk, cap=bucket_cap,
                     delta_caps=delta_caps, mesh=shard_mesh, axis=shard_axis)
 
-            deltas_sh = tuple(jax.tree.map(lambda _: rep, d)
-                              for d in deltas_sds)
+            deltas_sh = tuple(seg_sh(d) for d in deltas_sds)
             jitted = jax.jit(step, in_shardings=(
-                fam_sh, base_sh, deltas_sh, rep, rep))
+                fam_sh, seg_sh(base_sds), deltas_sh, rep, rep))
             return jitted.lower(fam_sds, base_sds, deltas_sds, mults_sds,
                                 q_sds).compile()
 
         base_rec = _analyze(compile_one((), ()), t0)
         t1 = time.time()
         delta_rec = _analyze(
-            compile_one((delta_sds,), (min(delta_cap, delta_n),)), t1)
+            compile_one((delta_sds,), (min(delta_cap, d_ns),)), t1)
 
         # the fused hash program (projection -> discretize -> bucket keys,
         # one jit program; the build/insert/query-hash hot path) profiled
@@ -318,6 +328,44 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
                            in_shardings=(fam_sh, rep, rep))
         hash_rec = _analyze(
             hash_jit.lower(fam_sds, mults_sds, q_sds).compile(), t2)
+
+        # the shard-local mutation programs: insert = fused batch hash +
+        # routed slab scatter + per-shard sort; compact = per-shard
+        # survivor gather + re-sort over base + one delta slab (stored
+        # keys only — compaction never re-hashes)
+        t3 = time.time()
+        ins_batch_sds = sds((delta_n,) + tuple(dims), jnp.float32)
+        ins_idx_sds = sds((shards * d_ns,), jnp.int32)
+        counts_sds = sds((shards,), jnp.int32)
+
+        def insert_step(fam, mults, ins_batch, idx, counts):
+            keys = fam.hash_keys(ins_batch, mults)
+            return segments._slab_scatter_sort(
+                keys, ins_batch, idx, counts, shards=shards,
+                shard_size=d_ns)
+
+        insert_rec = _analyze(
+            jax.jit(insert_step, in_shardings=(fam_sh, rep, rep, rep, rep))
+            .lower(fam_sds, mults_sds, ins_batch_sds, ins_idx_sds,
+                   counts_sds).compile(), t3)
+
+        t4 = time.time()
+        w = n_s + d_ns                      # base + one delta slab folded
+        keys_cat_sds = sds((shards, w, l), jnp.uint32)
+        corpus_cat_sds = sds((shards, w) + tuple(dims), jnp.float32)
+        fold_idx_sds = sds((shards, w), jnp.int32)
+
+        def compact_step(keys_cat, corpus_cat, idx, counts):
+            return segments._slab_gather_sort(keys_cat, corpus_cat, idx,
+                                              counts, shard_size=w)
+
+        compact_rec = _analyze(
+            jax.jit(compact_step,
+                    in_shardings=(shard_of(keys_cat_sds),
+                                  shard_of(corpus_cat_sds),
+                                  shard_of(fold_idx_sds), rep))
+            .lower(keys_cat_sds, corpus_cat_sds, fold_idx_sds,
+                   counts_sds).compile(), t4)
         fallbacks = sorted({(f[0], f[1], "/".join(f[2]))
                             for f in ctx.fallbacks})
 
@@ -344,6 +392,9 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
                          "backend": ("pallas" if fam_sds._use_pallas(q_sds)
                                      else "xla"),
                          **hash_rec},
+        "insert_program": {"insert_n": delta_n, "slab_size": d_ns,
+                           **insert_rec},
+        "compact_program": {"folded_slots_per_shard": w, **compact_rec},
         "sharding_fallbacks": fallbacks,
     }
 
@@ -461,7 +512,11 @@ def main():
                       f"+1 delta: "
                       f"{rec['delta_probe']['cost']['flops_per_device']:.3e}, "
                       f"hash ({rec['hash_program']['backend']}): "
-                      f"{rec['hash_program']['cost']['flops_per_device']:.3e}")
+                      f"{rec['hash_program']['cost']['flops_per_device']:.3e}"
+                      f", insert: "
+                      f"{rec['insert_program']['cost']['flops_per_device']:.3e}"
+                      f", compact: "
+                      f"{rec['compact_program']['cost']['flops_per_device']:.3e}")
             except Exception as e:
                 failures += 1
                 rec = {"status": "failed", "arch": "lsh-index",

@@ -11,31 +11,33 @@ import glob
 import json
 import os
 
-from repro.launch.roofline import analyse, fmt_cell
+from repro.launch.roofline import analyse, expand, fmt_cell
 
 
 def dryrun_table(directory: str) -> str:
     rows = []
     for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
-        r = json.load(open(path))
+        rec = json.load(open(path))
         name = os.path.basename(path)[:-5]
-        if r.get("status") == "skipped":
+        if rec.get("status") == "skipped":
             arch, shape, mesh = name.split("__")
             rows.append(f"| {arch} | {shape} | {mesh} | skipped (see "
                         f"DESIGN.md §Arch-applicability) | — | — | — |")
             continue
-        if r.get("status") != "ok":
+        if rec.get("status") != "ok":
             rows.append(f"| {name} | FAILED | | | | | |")
             continue
-        m = r["memory"]
-        coll = r["collectives"]
-        coll_s = " ".join(f"{k.split('-')[-1] if k != 'all-to-all' else 'a2a'}:"
-                          f"{v['count']}" for k, v in coll.items() if v["count"])
-        rows.append(
-            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
-            f"({r['compile_seconds']}s) "
-            f"| {m['peak_per_device_bytes'] / 2**30:.2f} "
-            f"| {r['cost']['flops_per_device']:.2e} | {coll_s} |")
+        for r in expand(rec):
+            m = r["memory"]
+            coll = r["collectives"]
+            coll_s = " ".join(
+                f"{k.split('-')[-1] if k != 'all-to-all' else 'a2a'}:"
+                f"{v['count']}" for k, v in coll.items() if v["count"])
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+                f"({r['compile_seconds']}s) "
+                f"| {m['peak_per_device_bytes'] / 2**30:.2f} "
+                f"| {r['cost']['flops_per_device']:.2e} | {coll_s} |")
     hdr = ("| arch | shape | mesh | compile | HBM GiB/chip | HLO flops/chip"
            " (scan body x1) | collective schedule (op:count) |\n"
            "|---|---|---|---|---|---|---|")
@@ -44,10 +46,13 @@ def dryrun_table(directory: str) -> str:
 
 def roofline_table(directory: str, mesh: str = "16x16") -> str:
     rows = []
+    recs = []
     for path in sorted(glob.glob(os.path.join(directory, f"*__{mesh}.json"))):
-        r = json.load(open(path))
-        if r.get("status") != "ok":
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
             continue
+        recs.extend(expand(rec))
+    for r in recs:
         a = analyse(r)
         dom = a["bottleneck"]
         if a["kind"] == "lsh_query":
@@ -58,6 +63,15 @@ def roofline_table(directory: str, mesh: str = "16x16") -> str:
                           "tables, compact() delta segments",
                 "collective": "fewer merge bytes: smaller topk / query "
                               "batch, narrower lsh_shard axis",
+            }[dom]
+        elif a["kind"] == "lsh_mutation":
+            move = {
+                "compute": "fewer mutation FLOPs: smaller insert batches / "
+                           "fewer tables (sort cost is per table)",
+                "memory": "fewer mutation bytes: smaller slabs, compact "
+                          "more often so folds stay small",
+                "collective": "mutation programs should be shard-local — a "
+                              "collective here is a partitioning bug",
             }[dom]
         else:
             move = {

@@ -11,6 +11,10 @@ bytes. MODEL_FLOPS = 6 N D (train) or 2 N D (inference), N = active params.
 ``kind == "lsh_query"`` records (the sharded ANN index cell from
 ``dryrun --lsh-index``) share the compute/memory/collective terms but have
 no model-FLOPs notion — their MODEL/HLO and MFU columns render as "—".
+Each lsh record also embeds AOT profiles of its sub-programs (the
+base+delta ``delta_probe``, the fused ``hash_program``, and the
+shard-local ``insert_program`` / ``compact_program`` mutation programs —
+kind ``lsh_mutation``); ``expand()`` turns them into their own table rows.
 
 Emits the EXPERIMENTS.md §Roofline table + per-cell bottleneck statements.
 """
@@ -60,8 +64,9 @@ def analyse(rec: dict) -> dict:
         "collective_bytes": coll_detail,
         "fallbacks": rec.get("sharding_fallbacks", []),
     }
-    if rec["kind"] == "lsh_query":
-        # ANN index query program: roofline terms apply, model FLOPs do not.
+    if rec["kind"] in ("lsh_query", "lsh_mutation"):
+        # ANN index query / shard-local mutation program: roofline terms
+        # apply, model FLOPs do not.
         return out
 
     n_chips = rec["n_chips"]
@@ -88,6 +93,39 @@ def fmt_cell(v, spec: str, scale: float = 1.0, suffix: str = "") -> str:
     return "—" if v is None else f"{v * scale:{spec}}{suffix}"
 
 
+# Sub-programs an lsh_query record embeds: (key, kind of the synthetic row)
+LSH_SUBPROGRAMS = (("delta_probe", "lsh_query"),
+                   ("hash_program", "lsh_query"),
+                   ("insert_program", "lsh_mutation"),
+                   ("compact_program", "lsh_mutation"))
+
+
+def expand(rec: dict) -> list[dict]:
+    """A dry-run record plus synthetic records for its embedded LSH
+    sub-programs, so every AOT-profiled program gets its own roofline row.
+    Non-LSH records pass through unchanged."""
+    out = [rec]
+    if rec.get("kind") != "lsh_query":
+        return out
+    for name, kind in LSH_SUBPROGRAMS:
+        sub = rec.get(name)
+        if not isinstance(sub, dict) or "cost" not in sub:
+            continue
+        out.append({
+            "arch": f"{rec['arch']}:{name}",
+            "shape": rec["shape"],
+            "mesh": rec["mesh"],
+            "n_chips": rec.get("n_chips"),
+            "kind": kind,
+            "compile_seconds": sub.get("compile_seconds"),
+            "memory": sub["memory"],
+            "cost": sub["cost"],
+            "collectives": sub["collectives"],
+            "sharding_fallbacks": rec.get("sharding_fallbacks", []),
+        })
+    return out
+
+
 def load_records(directory: str, mesh: str = "16x16") -> list[dict]:
     recs = []
     for path in sorted(glob.glob(os.path.join(directory, f"*__{mesh}.json"))):
@@ -99,7 +137,8 @@ def load_records(directory: str, mesh: str = "16x16") -> list[dict]:
 
 
 def table(directory: str, mesh: str = "16x16") -> str:
-    rows = [analyse(r) for r in load_records(directory, mesh)]
+    rows = [analyse(r) for rec in load_records(directory, mesh)
+            for r in expand(rec)]
     hdr = ("| arch | shape | compute s | memory s | collective s | bottleneck "
            "| MODEL/HLO flops | roofline MFU | HBM GiB/dev |\n"
            "|---|---|---|---|---|---|---|---|---|")
@@ -122,7 +161,8 @@ def main():
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
     if args.json:
-        rows = [analyse(r) for r in load_records(args.dir, args.mesh)]
+        rows = [analyse(r) for rec in load_records(args.dir, args.mesh)
+                for r in expand(rec)]
         print(json.dumps(rows, indent=1))
     else:
         print(table(args.dir, args.mesh))

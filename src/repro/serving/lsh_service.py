@@ -19,12 +19,17 @@ the index's ``max_deltas``). ``ServiceStats`` tracks the mutation traffic
 next to the query traffic.
 
 ``LSHService(..., shards=S)`` serves through the mesh-sharded
-``ShardedLSHIndex``: the base segment is partitioned into S per-shard
-sorted tables (placed over a mesh axis when one is available, see
-``repro.distributed.index_sharding``), queries fan out to every shard and
-the per-shard top-k results merge globally with the replicated delta
-segments. Effective-id bookkeeping is automatic — callers always see ids
-into the current live corpus regardless of shard or segment count.
+``ShardedLSHIndex``, whose mutation plane is shard-native: the base
+segment is partitioned into S per-shard sorted tables (placed over a mesh
+axis when one is available, see ``repro.distributed.index_sharding``),
+``insert`` routes each batch to the least-loaded shards as one sharded
+delta slab (no replication), ``compact()`` is shard-local, and the
+explicit ``rebalance()`` endpoint re-partitions the live corpus when
+occupancy skews (``ServiceStats.shard_occupancy`` / ``rebalances`` track
+it). Queries fan out to every shard, probe base + delta slabs per shard,
+and merge globally. Effective-id bookkeeping is automatic — callers
+always see ids into the current live corpus regardless of shard or
+segment count.
 
 ``LSHService(..., device=False)`` serves through ``HostLSHIndex`` (the
 dict-of-buckets build kept as the membership reference); queries run
@@ -60,6 +65,18 @@ class ServiceStats:
     delete_batches: int = 0
     compactions: int = 0       # explicit + automatic (max_deltas) compactions
     compact_ms: float = 0.0    # explicit compact() wall time only
+    rebalances: int = 0        # explicit cross-shard re-partitions
+    rebalance_ms: float = 0.0
+    shard_occupancy: tuple[int, ...] = ()  # live items per shard (sharded
+                                           # index only; updated per mutation)
+
+    @property
+    def occupancy_skew(self) -> float:
+        """max/mean live items per shard (1.0 = perfectly balanced)."""
+        occ = self.shard_occupancy
+        if not occ or not sum(occ):
+            return 1.0
+        return max(occ) * len(occ) / sum(occ)
 
     @property
     def mean_latency_ms(self):
@@ -115,6 +132,7 @@ class LSHService:
         t0 = time.perf_counter()
         self.index.build(corpus, batch_size=batch_size)
         self.stats.build_s = time.perf_counter() - t0
+        self._track_shards()
         return self
 
     # -- queries ------------------------------------------------------------
@@ -158,8 +176,15 @@ class LSHService:
                 "the device or sharded index (device=True)")
         return self.index
 
+    def _track_shards(self) -> None:
+        if isinstance(self.index, ShardedLSHIndex):
+            self.stats.shard_occupancy = tuple(
+                int(c) for c in self.index.occupancy())
+            self.stats.rebalances = self.index.rebalances
+
     def insert(self, batch, batch_size: int = 2048) -> "LSHService":
-        """Append a batch of items (one delta segment, served immediately)."""
+        """Append a batch of items (one delta segment — a routed sharded
+        slab on the sharded index — served immediately)."""
         index = self._mutable_index()
         n = jax.tree.leaves(batch)[0].shape[0]
         t0 = time.perf_counter()
@@ -171,6 +196,7 @@ class LSHService:
         self.stats.inserted += n
         self.stats.insert_batches += 1
         self.stats.compactions = index.compactions
+        self._track_shards()
         return self
 
     def delete(self, ids) -> int:
@@ -178,16 +204,34 @@ class LSHService:
         n = self._mutable_index().delete(ids)
         self.stats.deleted += n
         self.stats.delete_batches += 1
+        self._track_shards()
         return n
 
     def compact(self) -> "LSHService":
-        """Fold deltas + tombstones back into one base segment."""
+        """Fold deltas + tombstones back into the base (shard-local on the
+        sharded index — shards keep their item mix, see ``rebalance``)."""
         index = self._mutable_index()
         t0 = time.perf_counter()
         index.compact()
         jax.block_until_ready(index.sorted_keys)
         self.stats.compact_ms += (time.perf_counter() - t0) * 1e3
         self.stats.compactions = index.compactions
+        self._track_shards()
+        return self
+
+    def rebalance(self) -> "LSHService":
+        """Re-partition the live corpus into contiguous, evenly-sized
+        shards (the explicit cross-shard move; sharded index only)."""
+        index = self._mutable_index()
+        if not isinstance(index, ShardedLSHIndex):
+            raise TypeError("rebalance applies to the sharded index only "
+                            "(pass shards=S)")
+        t0 = time.perf_counter()
+        index.rebalance()
+        jax.block_until_ready(index.sorted_keys)
+        self.stats.rebalance_ms += (time.perf_counter() - t0) * 1e3
+        self.stats.compactions = index.compactions
+        self._track_shards()
         return self
 
 

@@ -1,23 +1,31 @@
 """Streaming mutations vs fresh rebuild: after any interleaving of
 ``insert`` / ``delete`` batches, ``query_batch`` must equal an index
-freshly built over the same effective corpus — both while delta segments
-and tombstones are outstanding and after ``compact()`` folds them back into
-one base segment — for every hash family kind, both metrics, the device and
-the sharded layout, and S in {1, 2, 4} shards. Tombstoned items must never
-surface in any top-k.
+freshly built over the same effective corpus — while delta segments and
+tombstones are outstanding, after the (shard-local) ``compact()``, and
+after ``rebalance()`` — for every hash family kind, both metrics, the
+device and the sharded layout, and S in {1, 2, 4} shards. On the sharded
+layout the mutation plane is shard-native: every insert batch becomes one
+sharded delta slab routed least-loaded-first, and ``compact()`` folds each
+shard locally. Tombstoned items must never surface in any top-k.
 
 Equality granularity: ids, candidate counts, and candidate sets are
-bit-identical in every cell. Scores are bit-identical after ``compact()``
-— the compacted store rebuilds the exact arrays a fresh build produces, so
-the query programs coincide — and reproduce to float-reassociation noise
-(asserted at <= 16 ulp) while deltas are outstanding: the mutated program
-ranks per segment at different candidate widths than the fresh single-table
-program, and XLA may re-vectorize the score reductions per shape (the same
+bit-identical in every cell. Scores are bit-identical whenever the stored
+arrays coincide with a fresh build's — after the device index's
+``compact()`` and after the sharded index's ``rebalance()`` (both rebuild
+the exact fresh-build layout) — and reproduce to float-reassociation noise
+(asserted at <= 16 ulp) while deltas are outstanding or while a
+shard-locally compacted base partitions shards differently from the
+contiguous fresh build: the programs then rank at different candidate
+widths and XLA may re-vectorize the score reductions per shape (the same
 cross-program wobble tests/test_index_sharded.py documents for the vmap
-fallback, here three orders of magnitude tighter). A subprocess leg forces
-the 4-device host platform so the shard_map path of the mutated store is
-exercised in every tier-1 run; the CI 4-device leg runs this whole file
-in-process.
+fallback, here three orders of magnitude tighter).
+
+Shard-native coverage must fail loudly: every sharded cell asserts
+``ShardedLSHIndex.query_path`` — on a multi-device platform (the CI
+4-device leg runs this whole file in-process) a silent fallback from
+shard_map to the vmapped program is an assertion error, not a quiet loss
+of coverage. A subprocess leg forces the 4-device host platform so the
+shard_map path of the mutated store is exercised in every tier-1 run.
 """
 
 import os
@@ -31,8 +39,10 @@ import numpy as np
 import pytest
 
 from repro.core import (CPTensor, DeviceLSHIndex, HostLSHIndex,
-                        ShardedLSHIndex, cp_random_data, make_family)
+                        ShardedLSHIndex, ShardedSegment, cp_random_data,
+                        make_family)
 from repro.core.lsh import ALL_KINDS
+from repro.core.segments import route_balanced
 from repro.serving.lsh_service import LSHService
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -96,6 +106,16 @@ def _assert_bit_identical(got, want, msg=None, scores_exact=True):
         np.testing.assert_array_max_ulp(g_sc[fin], w_sc[fin], maxulp=16)
 
 
+def _assert_query_path(index):
+    """Shard-native coverage must fail loudly: whenever the platform has
+    enough devices for every shard, the shard_map program MUST be the one
+    that executes — a silent vmap fallback is a bug, not a degradation."""
+    want = "shard_map" if len(jax.devices()) >= index.shards else "vmap"
+    assert index.query_path == want, (
+        f"expected the {want} query path on {len(jax.devices())} devices "
+        f"with S={index.shards}, got {index.query_path}")
+
+
 @pytest.mark.parametrize("metric", ["euclidean", "cosine"])
 @pytest.mark.parametrize("kind", ALL_KINDS)
 class TestStreamingParityDevice:
@@ -121,50 +141,179 @@ class TestStreamingParityDevice:
                 mutated.query_batch(queries[:batch], topk=TOPK), want,
                 (kind, metric, batch, "compacted"))
 
-    def test_sharded_mutated_equals_fresh_rebuild(self, kind, metric):
+
+@pytest.mark.parametrize("shards", SHARD_COUNTS)
+@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+@pytest.mark.parametrize("kind", ALL_KINDS)
+class TestStreamingParitySharded:
+    """The acceptance matrix: 6 kinds x 2 metrics x S in {1, 2, 4} x
+    {uncompacted, shard-locally compacted, rebalanced}. Ids, counts, and
+    candidate sets are bit-identical to a fresh rebuild in every cell;
+    scores are <= 16 ulp while the shard partition differs from the
+    contiguous fresh build and bit-identical after ``rebalance()``."""
+
+    def test_sharded_mutated_equals_fresh_rebuild(self, kind, metric,
+                                                  shards):
         corpus, queries = _data()
         fam = _family(kind)
-        mutated = ShardedLSHIndex(fam, metric=metric, shards=2,
+        mutated = ShardedLSHIndex(fam, metric=metric, shards=shards,
                                   max_deltas=8).build(corpus)
+        _assert_query_path(mutated)
         eff = _mutate(mutated, corpus)
-        fresh = ShardedLSHIndex(fam, metric=metric, shards=2).build(
+        assert all(isinstance(d, ShardedSegment)
+                   for d in mutated.store.deltas)
+        fresh = ShardedLSHIndex(fam, metric=metric, shards=shards).build(
             jnp.asarray(eff))
         want = fresh.query_batch(queries, topk=TOPK)
         _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
-                              want, (kind, metric, "uncompacted"),
-                              scores_exact=False)
-        mutated.compact()
-        _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
-                              want, (kind, metric, "compacted"))
-
-
-class TestStreamingParityShardCounts:
-    """The acceptance sweep: S in {1, 2, 4}, before and after compact()."""
-
-    @pytest.mark.parametrize("shards", SHARD_COUNTS)
-    def test_all_shard_counts(self, shards):
-        corpus, queries = _data(1)
-        fam = _family("cp-e2lsh")
-        mutated = ShardedLSHIndex(fam, metric="euclidean", shards=shards,
-                                  max_deltas=8).build(corpus)
-        eff = _mutate(mutated, corpus)
-        fresh = ShardedLSHIndex(fam, metric="euclidean",
-                                shards=shards).build(jnp.asarray(eff))
-        want = fresh.query_batch(queries, topk=TOPK)
-        _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
-                              want, (shards, "uncompacted"),
+                              want, (kind, metric, shards, "uncompacted"),
                               scores_exact=False)
         # candidate sets (effective ids) also match the fresh rebuild
         for i in range(N_QUERIES):
             np.testing.assert_array_equal(mutated.candidates(queries[i]),
                                           fresh.candidates(queries[i]))
         mutated.compact()
+        assert not mutated.store.mutated and not mutated.store.deltas
+        _assert_query_path(mutated)
         _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
-                              want, (shards, "compacted"))
+                              want, (kind, metric, shards, "compacted"),
+                              scores_exact=False)
+        mutated.rebalance()
+        _assert_query_path(mutated)
+        _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
+                              want, (kind, metric, shards, "rebalanced"))
 
+
+class TestShardOccupancy:
+    """Invariants of the routed mutation plane: occupancy always sums to
+    the live count, the balance policy fills least-loaded shards first,
+    and rebalance restores the contiguous even split."""
+
+    def test_route_balanced_waterfill(self):
+        alloc, offsets = route_balanced(10, np.array([5, 0, 3, 9]))
+        assert alloc.sum() == 10
+        # shard 1 (emptiest) gets the first, largest slab
+        assert offsets[1] == 0 and alloc[1] == alloc.max()
+        after = np.array([5, 0, 3, 9]) + alloc
+        assert after[:3].max() - after[:3].min() <= 1  # filled shards level
+        assert alloc[3] == 0                           # heaviest untouched
+        # contiguous slabs tile the batch exactly
+        spans = sorted((int(o), int(o + a)) for o, a in zip(offsets, alloc))
+        covered = [s for s in spans if s[0] != s[1]]
+        assert covered[0][0] == 0 and covered[-1][1] == 10
+        for (_, e), (b, _) in zip(covered, covered[1:]):
+            assert e == b
+        # deterministic
+        alloc2, offsets2 = route_balanced(10, np.array([5, 0, 3, 9]))
+        np.testing.assert_array_equal(alloc, alloc2)
+        np.testing.assert_array_equal(offsets, offsets2)
+
+    def test_occupancy_tracks_mutations(self):
+        corpus, _ = _data(12)
+        idx = ShardedLSHIndex(_family("cp-e2lsh"), metric="euclidean",
+                              shards=4).build(corpus)
+        assert idx.occupancy().sum() == idx.size == N_CORPUS
+        eff = _mutate(idx, corpus)
+        occ = idx.occupancy()
+        assert occ.sum() == idx.size == eff.shape[0]
+        # routed inserts keep shards within a few items of even
+        assert occ.max() - occ.min() <= DEL1.size + DEL2.size
+        idx.compact()                      # shard-local: occupancy unchanged
+        np.testing.assert_array_equal(idx.occupancy(), occ)
+        assert idx.store.base.counts == tuple(int(c) for c in occ)
+        idx.rebalance()                    # contiguous even split restored
+        occ2 = idx.occupancy()
+        assert occ2.sum() == eff.shape[0]
+        assert occ2.max() - occ2.min() <= 4  # ceil split of n over 4 shards
+        n_s = -(-eff.shape[0] // 4)
+        assert idx.store.base.counts == tuple(
+            int(np.clip(eff.shape[0] - s * n_s, 0, n_s)) for s in range(4))
+
+    def test_sharded_delta_is_sharded_segment(self):
+        """Inserts land as routed slabs — one ShardedSegment per batch,
+        luts carrying the leading shard dim — never replicated flats."""
+        corpus, _ = _data(13)
+        idx = ShardedLSHIndex(_family("tt-srp"), metric="cosine",
+                              shards=2).build(corpus)
+        ins1, _ = _inserts()
+        idx.insert(ins1)
+        (delta,) = idx.store.deltas
+        assert isinstance(delta, ShardedSegment)
+        assert delta.shards == 2 and sum(delta.counts) == N_INS1
+        live, eff = idx.store._luts[1]
+        assert live.shape == (2, delta.shard_size + 1)
+        assert eff.shape == (2, delta.shard_size)
+        assert not np.asarray(live[:, -1]).any()   # pad sentinel column
+        # slab effective ids continue the sequence numbering in batch order
+        got = np.sort(np.asarray(eff)[np.asarray(live[:, :-1])])
+        np.testing.assert_array_equal(
+            got, np.arange(N_CORPUS, N_CORPUS + N_INS1))
+
+
+class TestCappedLiveWindow:
+    """The PR 3 wart, fixed: explicit bucket_cap probe windows prefer live
+    slots, so tombstones stop consuming truncation-window space."""
+
+    def test_delete_heavy_capped_equals_fresh_capped_rebuild(self):
+        """After heavy deletes, a capped device index returns exactly what
+        a fresh capped build over the live corpus returns (same window
+        membership — under the old dense windows, buckets whose first
+        ``cap`` slots were tombstoned went empty until compaction)."""
+        corpus, queries = _data(5)
+        cap = 3
+        fam = make_family(jax.random.PRNGKey(11), "srp", DIMS, num_codes=1,
+                          num_tables=2, rank=2)   # 1-bit keys: huge buckets
+        idx = DeviceLSHIndex(fam, metric="cosine", bucket_cap=cap).build(
+            corpus)
+        dead = np.arange(0, 40, 2)                # 20 of 48 items die
+        idx.delete(dead)
+        eff = np.delete(np.asarray(corpus), dead, axis=0)
+        fresh = DeviceLSHIndex(fam, metric="cosine", bucket_cap=cap).build(
+            jnp.asarray(eff))
+        want = fresh.query_batch(queries, topk=TOPK)
+        _assert_bit_identical(idx.query_batch(queries, topk=TOPK), want,
+                              "capped live window", scores_exact=False)
+        for i in range(N_QUERIES):
+            np.testing.assert_array_equal(idx.candidates(queries[i]),
+                                          fresh.candidates(queries[i]))
+        # deletes must not starve the window: every probe still fills its
+        # cap from live items while live bucket members remain
+        n_cand = np.asarray(idx.query_batch(queries, topk=TOPK)[2])
+        assert (n_cand > 0).all()
+
+    def test_sharded_capped_live_window(self):
+        """Same fix on the sharded layout (S=1 pins the fresh-build
+        window equality; the live-window lookups carry the shard dim)."""
+        corpus, queries = _data(5)
+        fam = make_family(jax.random.PRNGKey(11), "srp", DIMS, num_codes=1,
+                          num_tables=2, rank=2)
+        idx = ShardedLSHIndex(fam, metric="cosine", bucket_cap=3,
+                              shards=1).build(corpus)
+        assert idx.store._wins[0] is not None
+        assert idx.store._wins[0][0].shape[0] == 1   # leading shard dim
+        dead = np.arange(0, 40, 2)
+        idx.delete(dead)
+        eff = np.delete(np.asarray(corpus), dead, axis=0)
+        fresh = ShardedLSHIndex(fam, metric="cosine", bucket_cap=3,
+                                shards=1).build(jnp.asarray(eff))
+        _assert_bit_identical(idx.query_batch(queries, topk=TOPK),
+                              fresh.query_batch(queries, topk=TOPK),
+                              "sharded capped live window",
+                              scores_exact=False)
+
+    def test_default_cap_keeps_no_window_luts(self):
+        corpus, _ = _data(6)
+        idx = DeviceLSHIndex(_family("cp-e2lsh"),
+                             metric="euclidean").build(corpus)
+        assert idx.store._wins == [None]
+        idx.delete([1])
+        assert idx.store._wins == [None]
+
+
+class TestStreamingParityShardCounts:
     def test_cp_format_corpus_mutations(self):
         """Pytree (CP factor) corpora stream through insert/delete/compact
-        leaf-wise, like the build path."""
+        leaf-wise, like the build path — on both layouts."""
         n = 30
         keys = jax.random.split(jax.random.PRNGKey(7), n + 8)
         stack = lambda ks: CPTensor(
@@ -173,20 +322,28 @@ class TestStreamingParityShardCounts:
                            for k in ks]) for m in range(3)), scale=1.0)
         corpus, batch = stack(keys[:n]), stack(keys[n:])
         fam = _family("cp-e2lsh")
-        mutated = DeviceLSHIndex(fam, metric="euclidean").build(corpus)
-        mutated.insert(batch)
-        mutated.delete([5, n + 2])
+        queries = jax.tree.map(lambda a: a[:3], corpus)
         eff_ids = np.delete(np.arange(n + 8), [5, n + 2])
         eff = jax.tree.map(lambda *xs: jnp.concatenate(xs)[eff_ids],
                            corpus, batch)
-        fresh = DeviceLSHIndex(fam, metric="euclidean").build(eff)
-        queries = jax.tree.map(lambda a: a[:3], corpus)
-        _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
-                              fresh.query_batch(queries, topk=TOPK),
-                              scores_exact=False)
-        mutated.compact()
-        _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
-                              fresh.query_batch(queries, topk=TOPK))
+        for make, compact_exact in (
+                (lambda: DeviceLSHIndex(fam, metric="euclidean"), True),
+                (lambda: ShardedLSHIndex(fam, metric="euclidean",
+                                         shards=2), False)):
+            mutated = make().build(corpus)
+            mutated.insert(batch)
+            mutated.delete([5, n + 2])
+            fresh = make().build(eff)
+            _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
+                                  fresh.query_batch(queries, topk=TOPK),
+                                  scores_exact=False)
+            mutated.compact()
+            # the flat compact rebuilds the exact fresh-build arrays ->
+            # scores bit-equal; the shard-local fold keeps routing's
+            # partition -> <= 16 ulp until rebalance()
+            _assert_bit_identical(mutated.query_batch(queries, topk=TOPK),
+                                  fresh.query_batch(queries, topk=TOPK),
+                                  scores_exact=compact_exact)
 
 
 class TestTombstones:
@@ -252,6 +409,24 @@ class TestMutationContract:
         _assert_bit_identical(idx.query_batch(queries, topk=TOPK),
                               fresh.query_batch(queries, topk=TOPK))
 
+    def test_sharded_auto_compact_is_shard_local(self):
+        corpus, queries = _data(5)
+        fam = _family("cp-e2lsh")
+        idx = ShardedLSHIndex(fam, metric="euclidean", shards=2,
+                              max_deltas=1).build(corpus)
+        ins1, ins2 = _inserts()
+        occ_before = idx.insert(ins1).occupancy()
+        idx.insert(ins2)                   # 2 > max_deltas -> auto-compact
+        assert len(idx.store.deltas) == 0 and idx.compactions == 1
+        assert idx.rebalances == 0         # compaction never moved items
+        full = jnp.concatenate([corpus, ins1, ins2])
+        fresh = ShardedLSHIndex(fam, metric="euclidean", shards=2).build(
+            full)
+        _assert_bit_identical(idx.query_batch(queries, topk=TOPK),
+                              fresh.query_batch(queries, topk=TOPK),
+                              scores_exact=False)
+        assert idx.occupancy().sum() == occ_before.sum() + N_INS2
+
     def test_compact_pristine_is_noop(self):
         corpus, _ = _data(6)
         idx = DeviceLSHIndex(_family("e2lsh"), metric="euclidean").build(
@@ -278,8 +453,10 @@ class TestMutationContract:
         np.testing.assert_array_equal(np.asarray(idx.effective_corpus()), eff)
 
     def test_sharded_corpus_tracks_mutations(self):
-        """ShardedLSHIndex.corpus follows the live corpus after mutations,
-        same contract as DeviceLSHIndex.corpus."""
+        """ShardedLSHIndex.corpus follows the live corpus after mutations
+        (in effective-id order even though routed slabs and shard-local
+        compaction interleave shards), same contract as
+        DeviceLSHIndex.corpus."""
         corpus, _ = _data(8)
         idx = ShardedLSHIndex(_family("cp-srp"), metric="cosine",
                               shards=2).build(corpus)
@@ -289,15 +466,28 @@ class TestMutationContract:
         np.testing.assert_array_equal(np.asarray(idx.corpus), eff)
         idx.compact()
         np.testing.assert_array_equal(np.asarray(idx.corpus), eff)
+        idx.rebalance()
+        np.testing.assert_array_equal(np.asarray(idx.corpus), eff)
 
     def test_insert_empty_batch_is_noop(self):
         corpus, queries = _data(6)
-        idx = DeviceLSHIndex(_family("e2lsh"), metric="euclidean").build(
-            corpus)
-        before = idx.query_batch(queries, topk=TOPK)
-        idx.insert(jnp.zeros((0,) + DIMS))
-        assert len(idx.store.deltas) == 0 and idx.size == N_CORPUS
-        _assert_bit_identical(idx.query_batch(queries, topk=TOPK), before)
+        for idx in (DeviceLSHIndex(_family("e2lsh"),
+                                   metric="euclidean").build(corpus),
+                    ShardedLSHIndex(_family("e2lsh"), metric="euclidean",
+                                    shards=2).build(corpus)):
+            before = idx.query_batch(queries, topk=TOPK)
+            idx.insert(jnp.zeros((0,) + DIMS))
+            assert len(idx.store.deltas) == 0 and idx.size == N_CORPUS
+            _assert_bit_identical(idx.query_batch(queries, topk=TOPK),
+                                  before)
+
+    def test_rebalance_empty_raises(self):
+        corpus, _ = _data(7)
+        idx = ShardedLSHIndex(_family("srp"), metric="cosine",
+                              shards=2).build(corpus)
+        idx.delete(np.arange(N_CORPUS))
+        with pytest.raises(ValueError):
+            idx.rebalance()
 
 
 class TestServiceMutations:
@@ -313,14 +503,24 @@ class TestServiceMutations:
         assert st.inserted == N_INS1 + N_INS2 and st.insert_batches == 2
         assert st.deleted == DEL1.size and st.delete_batches == 1
         assert st.insert_ms > 0 and st.insert_items_per_s > 0
+        assert len(st.shard_occupancy) == 2
+        assert sum(st.shard_occupancy) == svc.index.size
+        assert st.occupancy_skew >= 1.0
         out = svc.query_batch(queries, topk=TOPK)
         assert len(out) == N_QUERIES
         svc.compact()
         assert st.compactions == 1 and st.compact_ms > 0
+        assert st.rebalances == 0
         assert not svc.index.store.mutated
-        # endpoints mirror direct index mutations
         fresh = ShardedLSHIndex(fam, metric="euclidean", shards=2).build(
             svc.index.effective_corpus())
+        _assert_bit_identical(svc.index.query_batch(queries, topk=TOPK),
+                              fresh.query_batch(queries, topk=TOPK),
+                              scores_exact=False)
+        svc.rebalance()
+        assert st.rebalances == 1 and st.rebalance_ms > 0
+        assert sum(st.shard_occupancy) == svc.index.size
+        # after the explicit re-partition the layout IS the fresh build's
         _assert_bit_identical(svc.index.query_batch(queries, topk=TOPK),
                               fresh.query_batch(queries, topk=TOPK))
 
@@ -335,6 +535,14 @@ class TestServiceMutations:
             svc.delete([0])
         with pytest.raises(TypeError):
             svc.compact()
+        with pytest.raises(TypeError):
+            svc.rebalance()
+
+    def test_device_service_rejects_rebalance(self):
+        corpus, _ = _data(10)
+        svc = LSHService(_family("srp"), metric="cosine").build(corpus)
+        with pytest.raises(TypeError):
+            svc.rebalance()
 
     def test_recall_against_effective_corpus(self):
         from repro.core import recall_at_k
@@ -349,8 +557,11 @@ class TestServiceMutations:
 
 class TestShardMapStreamingMultiDevice:
     """Force a 4-device host platform in a subprocess so the shard_map path
-    of the mutated store runs in every tier-1 invocation (the flag must be
-    set before jax initialises — same pattern as test_index_sharded.py)."""
+    of the shard-native mutated store runs in every tier-1 invocation (the
+    flag must be set before jax initialises — same pattern as
+    test_index_sharded.py). The CI 4-device leg runs this whole file
+    in-process, where ``_assert_query_path`` makes any silent vmap
+    fallback a loud failure."""
 
     def test_shard_map_mutation_parity_bit_identical(self):
         code = """
@@ -368,6 +579,20 @@ class TestShardMapStreamingMultiDevice:
         eff = np.delete(eff, dels1, axis=0)
         eff = np.concatenate([eff, np.asarray(ins2)])
         eff = np.delete(eff, dels2, axis=0)
+
+        def check(g, w, msg, scores_exact):
+            np.testing.assert_array_equal(np.asarray(g[0]), np.asarray(w[0]),
+                                          err_msg=msg)
+            np.testing.assert_array_equal(np.asarray(g[2]), np.asarray(w[2]),
+                                          err_msg=msg)
+            gs, ws = np.asarray(g[1]), np.asarray(w[1])
+            if scores_exact:
+                np.testing.assert_array_equal(gs, ws, err_msg=msg)
+            else:
+                fin = np.isfinite(ws)
+                np.testing.assert_array_equal(np.isfinite(gs), fin)
+                np.testing.assert_array_max_ulp(gs[fin], ws[fin], maxulp=16)
+
         for kind, metric in (("cp-e2lsh", "euclidean"), ("tt-srp", "cosine")):
             k, w = (3, 6.0) if "e2lsh" in kind else (6, 0.0)
             fam = make_family(jax.random.PRNGKey(42), kind, DIMS,
@@ -381,22 +606,25 @@ class TestShardMapStreamingMultiDevice:
                 sharded = ShardedLSHIndex(fam, metric=metric,
                                           shards=s).build(corpus)
                 assert sharded.mesh is not None, (kind, s)
+                assert sharded.query_path == "shard_map", (kind, s)
                 sharded.insert(ins1); sharded.delete(dels1)
                 sharded.insert(ins2); sharded.delete(dels2)
+                # routed slabs live on the mesh, exactly like the base
+                for seg in [sharded.store.base] + sharded.store.deltas:
+                    assert seg.sorted_keys.sharding.spec[0] == "shard"
                 fresh = ShardedLSHIndex(fam, metric=metric,
                                         shards=s).build(jnp.asarray(eff))
-                for mutated in (sharded, sharded.compact()):
-                    assert mutated.sorted_keys.sharding.spec[0] == "shard"
-                    g = mutated.query_batch(queries, topk=5)
-                    f = fresh.query_batch(queries, topk=5)
-                    for a, b in zip(g, f):   # vs fresh rebuild: bit-equal
-                        np.testing.assert_array_equal(
-                            np.asarray(a), np.asarray(b),
-                            err_msg=(kind, metric, s, "fresh"))
-                    for a, b in zip(g, d):   # vs single device: bit-equal
-                        np.testing.assert_array_equal(
-                            np.asarray(a), np.asarray(b),
-                            err_msg=(kind, metric, s, "device"))
+                g = sharded.query_batch(queries, topk=5)
+                f = fresh.query_batch(queries, topk=5)
+                check(g, f, (kind, metric, s, "uncompacted"), False)
+                check(g, d, (kind, metric, s, "vs-device"), False)
+                sharded.compact()          # shard-local fold
+                assert sharded.query_path == "shard_map"
+                g = sharded.query_batch(queries, topk=5)
+                check(g, f, (kind, metric, s, "compacted"), False)
+                sharded.rebalance()        # contiguous split: bit-exact
+                g = sharded.query_batch(queries, topk=5)
+                check(g, f, (kind, metric, s, "rebalanced"), True)
         print("shard_map streaming parity ok")
         """
         assert "shard_map streaming parity ok" in _run_sub(code)

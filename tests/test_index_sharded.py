@@ -294,15 +294,35 @@ class TestShardMapPathMultiDevice:
             assert hp["backend"] == "xla"
             assert hp["batch"] == 64
             assert hp["cost"]["flops_per_device"] > 0
+            # the shard-local mutation programs profiled alongside: the
+            # routed slab insert (hash included) and the per-shard compact
+            # fold — and neither may schedule a collective (shard-local
+            # by construction)
+            ip, cp = rec["insert_program"], rec["compact_program"]
+            assert ip["slab_size"] == rec["insert_program"]["insert_n"] // 2
+            assert ip["cost"]["flops_per_device"] > 0
+            assert cp["folded_slots_per_shard"] > 0
+            assert all(v["count"] == 0
+                       for v in cp["collectives"].values()), cp["collectives"]
             row = roofline.analyse(rec)
             assert row["bottleneck"] in ("compute", "memory", "collective")
             assert row["roofline_mfu"] is None  # no model-flops notion
+            # every sub-program expands to its own analysable record
+            subs = roofline.expand(rec)
+            assert [r["arch"] for r in subs[1:]] == [
+                "lsh-index:delta_probe", "lsh-index:hash_program",
+                "lsh-index:insert_program", "lsh-index:compact_program"]
+            for r in subs[1:]:
+                assert roofline.analyse(r)["roofline_mfu"] is None
         with tempfile.TemporaryDirectory() as d:
             with open(os.path.join(d, "lsh_index__16x16.json"), "w") as f:
                 json.dump(rec | {"mesh": "16x16"}, f)
             assert "lsh-index" in roofline.table(d)
-            assert "lsh-index" in report.dryrun_table(d)
+            assert "lsh-index:insert_program" in roofline.table(d)
+            assert "lsh-index:compact_program" in report.dryrun_table(d)
             assert "fewer probe bytes" in report.roofline_table(d)
+            assert "fewer mutation" in report.roofline_table(d) or \
+                "shard-local" in report.roofline_table(d)
         print("lsh dryrun ok")
         """
         assert "lsh dryrun ok" in _run_sub(code, devices=8)
