@@ -5,7 +5,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test bench bench-index bench-index-sharded bench-index-mut \
-	bench-ingest bench-hash bench-kernels
+	bench-multiprobe bench-ingest bench-hash bench-kernels
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -21,6 +21,9 @@ bench-index-sharded:
 
 bench-index-mut:
 	$(PYTHON) -m benchmarks.index_mutation
+
+bench-multiprobe:
+	$(PYTHON) -m benchmarks.index_multiprobe
 
 bench-ingest:
 	$(PYTHON) -m benchmarks.index_ingest

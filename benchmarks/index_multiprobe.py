@@ -1,0 +1,93 @@
+"""The (L, T) trade-off of query-directed multi-probe: recall@10 and QPS
+over a num_tables x probes grid on a clustered corpus.
+
+Multi-probe exists to shrink L — the dominant per-chip memory cost (each
+table stores a full sorted key/permutation copy of the corpus) — by
+probing the T most promising buckets per remaining table
+(``repro.core.probing``). This bench sweeps L in {2, 4, 8} x T in
+{1, 4, 8} with the same cp-e2lsh family seed and reports, per cell,
+recall@10 against brute force, mean candidates per query, and batched
+QPS, plus the headline comparison the tier-1 recall pin
+(tests/test_multiprobe.py::TestRecallTradeoff) enforces: (L=2, T=8) vs
+(L=8, T=1).
+
+CSV rows (name,us_per_call,derived):
+
+  index_mp/recall_L{l}_T{t}   derived = recall@10 | mean candidates
+  index_mp/qps_L{l}_T{t}      us = per-query latency, derived = QPS
+  index_mp/headline           derived = recall(L2,T8) - recall(L8,T1)
+
+``run()`` appends a trajectory entry to BENCH_index.json (tagged
+``"bench": "index_multiprobe"``). BENCH_MP_N shrinks the corpus for smoke
+runs.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import append_trajectory, emit, time_fn
+from repro.core import DeviceLSHIndex, make_family, recall_at_k
+
+DIMS = (8, 8, 8)
+PER_CLUSTER = 8
+N_CORPUS = int(os.environ.get("BENCH_MP_N", 4096))
+N_CLUSTERS = max(N_CORPUS // PER_CLUSTER, 1)
+NOISE = 0.15
+N_RECALL_QUERIES = 128
+QUERY_BATCH = 1024
+TABLE_COUNTS = (2, 4, 8)
+PROBE_COUNTS = (1, 4, 8)
+
+
+def run() -> list[str]:
+    rows = []
+    kc, kn, kq, kf = jax.random.split(jax.random.PRNGKey(7), 4)
+    centers = jax.random.normal(kc, (N_CLUSTERS,) + DIMS)
+    corpus = (jnp.repeat(centers, PER_CLUSTER, axis=0)
+              + NOISE * jax.random.normal(
+                  kn, (N_CLUSTERS * PER_CLUSTER,) + DIMS))
+    queries = (jnp.tile(centers, (QUERY_BATCH // N_CLUSTERS + 1,)
+                        + (1,) * len(DIMS))[:QUERY_BATCH]
+               + NOISE * jax.random.normal(kq, (QUERY_BATCH,) + DIMS))
+
+    recall = {}
+    for num_tables in TABLE_COUNTS:
+        fam = make_family(kf, "cp-e2lsh", DIMS, num_codes=4,
+                          num_tables=num_tables, rank=2, bucket_width=16.0)
+        index = DeviceLSHIndex(fam, metric="euclidean").build(corpus)
+        for probes in PROBE_COUNTS:
+            stats = recall_at_k(index, queries[:N_RECALL_QUERIES],
+                                topk=10, probes=probes)
+            recall[num_tables, probes] = stats["recall"]
+            rows.append(emit(
+                f"index_mp/recall_L{num_tables}_T{probes}", 0.0,
+                f"{stats['recall']:.3f}|{stats['mean_candidates']:.0f}"))
+            us = time_fn(
+                lambda qb, p=probes: index.query_batch(qb, topk=10,
+                                                       probes=p),
+                queries, warmup=1, iters=5)
+            rows.append(emit(f"index_mp/qps_L{num_tables}_T{probes}",
+                             us / QUERY_BATCH,
+                             f"{QUERY_BATCH / (us / 1e6):.0f}"))
+
+    headline = recall[2, 8] - recall[8, 1]
+    rows.append(emit("index_mp/headline", 0.0, f"{headline:+.3f}"))
+
+    append_trajectory({
+        "bench": "index_multiprobe",
+        "n_devices": len(jax.devices()),
+        "corpus_n": N_CLUSTERS * PER_CLUSTER,
+        "kind": "cp-e2lsh",
+        "grid": {f"L{l}_T{t}": round(r, 4)
+                 for (l, t), r in sorted(recall.items())},
+        "headline_L2T8_minus_L8T1": round(headline, 4),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    run()

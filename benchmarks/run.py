@@ -8,8 +8,9 @@ import sys
 
 def main() -> None:
     from benchmarks import (collision, hash_throughput, index_ingest,
-                            index_mutation, index_qps, index_sharded,
-                            kernels, recall, table1_e2lsh, table2_srp)
+                            index_multiprobe, index_mutation, index_qps,
+                            index_sharded, kernels, recall, table1_e2lsh,
+                            table2_srp)
     print("name,us_per_call,derived")
     rows = []
     rows += table1_e2lsh.run()
@@ -17,6 +18,7 @@ def main() -> None:
     rows += collision.run()
     rows += recall.run()
     rows += index_qps.run()
+    rows += index_multiprobe.run()
     rows += index_sharded.run()
     rows += index_mutation.run()
     rows += index_ingest.run()

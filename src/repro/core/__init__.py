@@ -7,6 +7,8 @@
 - index:          multi-table (K, L) ANN indexes with exact in-format re-rank
                   (device-resident batched DeviceLSHIndex, mesh-sharded
                   ShardedLSHIndex + host-dict HostLSHIndex reference)
+- probing:        query-directed multi-probe key expansion (T ranked bucket
+                  keys per table) + the uniform/weighted sampling query modes
 - theory:         closed-form collision probabilities, rank conditions
 """
 
@@ -29,5 +31,6 @@ from repro.core.lsh import (LSHFamily, make_family, e2lsh_discretize,
 from repro.core.index import (LSHIndex, DeviceLSHIndex, HostLSHIndex,
                               ShardedLSHIndex, brute_force,
                               brute_force_batch, recall_at_k)
+from repro.core.probing import QUERY_MODES, expansion_size, probe_keys
 from repro.core.segments import SegmentStore, ShardedSegment, TableSegment
 from repro.core import theory

@@ -68,8 +68,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import segments
+from repro.core import probing, segments
 from repro.core.lsh import LSHFamily
+from repro.core.probing import QUERY_MODES
 from repro.core.segments import (SegmentStore, bucket_keys, build_segment,
                                  build_sharded_segment, make_mults,
                                  tree_index)
@@ -84,6 +85,22 @@ _max_run_length = segments._max_run_length
 def _check_metric(metric: str) -> None:
     if metric not in ("euclidean", "cosine"):
         raise ValueError(metric)
+
+
+def _check_mode(mode: str, rng) -> None:
+    """Shared query-mode validation: sampling modes need an explicit PRNG
+    key per request (no hidden state — reusing a key replays the draw),
+    and the deterministic top-k mode must not be handed one silently."""
+    if mode not in QUERY_MODES:
+        raise ValueError(
+            f"unknown query mode {mode!r}; expected one of {QUERY_MODES}")
+    if mode == "topk" and rng is not None:
+        raise ValueError("rng applies to the sampling modes only; "
+                         "mode='topk' is deterministic")
+    if mode != "topk" and rng is None:
+        raise ValueError(
+            f"mode={mode!r} samples from the probed bucket union and needs "
+            "an explicit PRNG key (pass rng=jax.random.PRNGKey(seed))")
 
 
 def _score_fn(metric: str):
@@ -109,20 +126,27 @@ class _LSHIndexBase:
     ``(ids, scores, n_candidates)`` numpy contract.
     """
 
-    def candidates(self, x) -> np.ndarray:
-        """Union of live bucket members over all tables/segments (sorted)."""
-        cand, valid = self.candidates_batch(tree_index(x, None))
+    def candidates(self, x, probes: int = 1) -> np.ndarray:
+        """Union of live bucket members over all tables/segments (sorted);
+        ``probes`` = T > 1 widens each table to its T ranked buckets."""
+        cand, valid = self.candidates_batch(tree_index(x, None),
+                                            probes=probes)
         cand = np.asarray(cand[0])
         return np.sort(cand[np.asarray(valid[0])]).astype(np.int64)
 
-    def query(self, x, topk: int = 10) -> tuple[np.ndarray, np.ndarray, int]:
+    def query(self, x, topk: int = 10, *, probes: int = 1,
+              mode: str = "topk", rng=None
+              ) -> tuple[np.ndarray, np.ndarray, int]:
         """-> (ids, scores, n_candidates). Exact re-rank of the candidates.
 
         scores are distances (ascending) for 'euclidean', similarities
         (descending) for 'cosine'; rows with fewer than ``topk`` candidates
-        are trimmed of the -1 fill.
+        are trimmed of the -1 fill. ``probes``/``mode``/``rng`` follow the
+        ``query_batch`` contract (multi-probe expansion + sampling modes).
         """
-        ids, scores, n_cand = self.query_batch(tree_index(x, None), topk)
+        ids, scores, n_cand = self.query_batch(tree_index(x, None), topk,
+                                               probes=probes, mode=mode,
+                                               rng=rng)
         ids = np.asarray(ids[0])
         mask = ids >= 0
         return (ids[mask].astype(np.int64), np.asarray(scores[0])[mask],
@@ -255,22 +279,40 @@ class DeviceLSHIndex(_SegmentedIndex):
 
     # -- query --------------------------------------------------------------
 
-    def candidates_batch(self, queries) -> tuple[jax.Array, jax.Array]:
+    def candidates_batch(self, queries, *, probes: int = 1
+                         ) -> tuple[jax.Array, jax.Array]:
         """-> (cand (B, W) effective ids with -1 fill, valid (B, W) bool)."""
         return segments.segmented_candidates(
             self.family, self.store.all_arrays, jnp.asarray(self._mults),
-            queries, caps=self.store.all_caps)
+            queries, caps=self.store.all_caps, probes=int(probes))
 
-    def query_batch(self, queries, topk: int = 10):
+    def query_batch(self, queries, topk: int = 10, *, probes: int = 1,
+                    mode: str = "topk", rng=None):
         """-> (ids (B, topk), scores (B, topk), n_candidates (B,)) jax arrays.
 
         Rows with fewer than topk candidates are filled with id -1 and
         +inf distance / -inf similarity. One jit-compiled program end-to-end
         over every segment (base + outstanding deltas, tombstones filtered).
+
+        ``probes`` = T > 1 turns on query-directed multi-probe: each table
+        probes its T most promising buckets (``repro.core.probing``), so
+        fewer tables reach the same recall; T=1 is bit-identical to the
+        single-probe program. ``mode`` selects the result semantics:
+        ``"topk"`` (default) is the exact re-ranked top-k; ``"uniform"`` /
+        ``"weighted"`` instead *sample* ``topk`` distinct members from the
+        probed bucket union (uniformly / proportional to bucket size) and
+        need an explicit per-request PRNG key via ``rng``.
         """
+        _check_mode(mode, rng)
+        args = (self.family, self.store.all_arrays,
+                jnp.asarray(self._mults), queries)
+        if mode != "topk":
+            return segments.segmented_sample(
+                *args, rng, metric=self.metric, topk=topk,
+                caps=self.store.all_caps, probes=int(probes), mode=mode)
         return segments.segmented_query(
-            self.family, self.store.all_arrays, jnp.asarray(self._mults),
-            queries, metric=self.metric, topk=topk, caps=self.store.all_caps)
+            *args, metric=self.metric, topk=topk, caps=self.store.all_caps,
+            probes=int(probes))
 
 
 LSHIndex = DeviceLSHIndex  # default deployment
@@ -510,19 +552,29 @@ class ShardedLSHIndex(_SegmentedIndex):
 
     # -- query --------------------------------------------------------------
 
-    def candidates_batch(self, queries) -> tuple[jax.Array, jax.Array]:
+    def candidates_batch(self, queries, *, probes: int = 1
+                         ) -> tuple[jax.Array, jax.Array]:
         """-> (cand (B, W) effective ids with -1 fill, valid bool)."""
         return segments.sharded_candidates(
             self.family, self.store.seg_arrays(0), self.store.delta_arrays,
             jnp.asarray(self._mults), queries, cap=self.store.base.cap,
-            delta_caps=self.store.delta_caps)
+            delta_caps=self.store.delta_caps, probes=int(probes))
 
-    def query_batch(self, queries, topk: int = 10):
-        """Same contract as DeviceLSHIndex.query_batch (effective ids)."""
+    def query_batch(self, queries, topk: int = 10, *, probes: int = 1,
+                    mode: str = "topk", rng=None):
+        """Same contract as DeviceLSHIndex.query_batch (effective ids,
+        multi-probe ``probes``, sampling ``mode``/``rng``). A sampling
+        query is one global draw over the cross-shard union, so it always
+        runs the single-program vmap path regardless of the mesh
+        (``query_path`` describes the ``"topk"`` program)."""
+        _check_mode(mode, rng)
         args = (self.family, self.store.seg_arrays(0),
                 self.store.delta_arrays, jnp.asarray(self._mults), queries)
         kwargs = dict(metric=self.metric, topk=topk, cap=self.store.base.cap,
-                      delta_caps=self.store.delta_caps)
+                      delta_caps=self.store.delta_caps, probes=int(probes))
+        if mode != "topk":
+            return segments.sharded_sample_vmap(*args, rng, mode=mode,
+                                                **kwargs)
         if self.mesh is not None:
             from repro.distributed import index_sharding
             return index_sharding.shard_map_query(
@@ -580,20 +632,40 @@ class HostLSHIndex(_LSHIndexBase):
 
     # -- query --------------------------------------------------------------
 
-    def candidates(self, x) -> np.ndarray:
-        """Union of bucket members over the L tables, via the host dicts."""
-        codes = np.asarray(_hash_one(self.family, x))[None]  # (1, L, K)
-        keys = _combine_codes(codes, self._mults)[0]  # (L,)
+    def candidates(self, x, probes: int = 1) -> np.ndarray:
+        """Union of bucket members over the L tables, via the host dicts.
+
+        ``probes`` = T > 1 looks up each table's T ranked candidate keys
+        (``repro.core.probing``) in the same dicts — membership stays
+        dict-defined, so this is the reference the device multi-probe dedup
+        (distinct members across overlapping probed buckets) is pinned to.
+        """
+        if probes == 1:
+            codes = np.asarray(_hash_one(self.family, x))[None]  # (1, L, K)
+            keys = _combine_codes(codes, self._mults)[:, :, None]  # (1, L, 1)
+        else:
+            keys = np.asarray(probing.probe_keys(
+                self.family, jnp.asarray(self._mults), tree_index(x, None),
+                probes=int(probes)))                      # (1, L, T)
         cand: set[int] = set()
         for t in range(self.family.num_tables):
-            cand.update(self._tables[t].get(int(keys[t]), ()))
+            for key in keys[0, t]:
+                cand.update(self._tables[t].get(int(key), ()))
         return np.fromiter(cand, dtype=np.int64, count=len(cand))
 
-    def query_batch(self, queries, topk: int = 10):
+    def query_batch(self, queries, topk: int = 10, *, probes: int = 1,
+                    mode: str = "topk", rng=None):
         """Same contract as DeviceLSHIndex.query_batch."""
+        _check_mode(mode, rng)
+        args = (self.family, self.store.all_arrays,
+                jnp.asarray(self._mults), queries)
+        if mode != "topk":
+            return segments.segmented_sample(
+                *args, rng, metric=self.metric, topk=topk,
+                caps=self.store.all_caps, probes=int(probes), mode=mode)
         return segments.segmented_query(
-            self.family, self.store.all_arrays, jnp.asarray(self._mults),
-            queries, metric=self.metric, topk=topk, caps=self.store.all_caps)
+            *args, metric=self.metric, topk=topk, caps=self.store.all_caps,
+            probes=int(probes))
 
 
 # ---------------------------------------------------------------------------
@@ -632,17 +704,20 @@ def brute_force(metric: str, x, corpus, topk: int = 10):
     return ids[0], scores[0]
 
 
-def recall_at_k(index, queries, topk: int = 10) -> dict[str, float]:
+def recall_at_k(index, queries, topk: int = 10,
+                probes: int = 1) -> dict[str, float]:
     """Mean recall@k of index.query_batch vs. brute force over a query batch.
 
     Works for every index deployment (anything with the batched
     ``query_batch`` contract plus ``metric`` / ``effective_corpus`` /
     ``size``); the ground truth is one batched score matrix over the
-    effective (live) corpus.
+    effective (live) corpus. ``probes`` = T > 1 measures the multi-probe
+    query path (the (L, T) trade-off ``benchmarks/index_multiprobe``
+    sweeps).
     """
     corpus = index.effective_corpus()
     truth, _ = brute_force_batch(index.metric, queries, corpus, topk)
-    ids, _, n_cand = index.query_batch(queries, topk=topk)
+    ids, _, n_cand = index.query_batch(queries, topk=topk, probes=probes)
     ids = np.asarray(ids)
     n_q = truth.shape[0]
     hits = sum(len(set(t) & set(row[row >= 0].tolist()))

@@ -177,6 +177,26 @@ class LSHFamily:
         """(L*K,) raw <P_k, X> values."""
         return proj_lib.project(self.projection, x)
 
+    def hash_batch_aux(self, xs) -> tuple[jax.Array, jax.Array]:
+        """(codes (B, L, K) int32, aux (B, L, K) float32) for multi-probe.
+
+        ``aux`` is the per-code perturbation evidence the query-directed
+        expansion in ``repro.core.probing`` ranks by: the floor residual
+        (v + b) / w - floor((v + b) / w) in [0, 1) for E2LSH kinds, and the
+        raw projection value v (sign = the bit, |v| = the margin) for SRP
+        kinds. Always evaluated through the XLA projection path — codes are
+        pinned bit-identical across hash backends (tests/test_hash_backends
+        .py), so the expansion composes with any ``hash_backend``.
+        """
+        values = proj_lib.project_batch(self.projection, xs)
+        codes = self._discretize(values)
+        if self.kind in E2LSH_KINDS:
+            t = (values + self.offsets) / self.bucket_width
+            aux = t.reshape(codes.shape) - codes.astype(values.dtype)
+        else:
+            aux = values.reshape(codes.shape)
+        return codes, aux
+
     def hash_batch(self, xs) -> jax.Array:
         """(B, L, K) int32 codes for a batch of tensors, as one fused
         projection -> discretize program (no per-example vmap)."""

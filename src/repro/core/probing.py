@@ -1,0 +1,121 @@
+"""Query-directed multi-probe key expansion for the segment indexes.
+
+Single-probe queries visit one bucket per table; recall then scales with
+the number of tables L — the dominant per-chip memory cost. Query-directed
+multi-probe (Lv et al., "Multi-Probe LSH") instead visits, per table, the
+T bucket keys most likely to hold near neighbours, so L can shrink several
+fold at equal recall:
+
+  * E2LSH kinds rank perturbations of the floor quantization by the
+    residual r_k = (v_k + b_k) / w - floor(...): shifting code k by +1 has
+    squared boundary distance (1 - r_k)^2, by -1 has r_k^2. The classic
+    formulation expands perturbation sets with a min-heap; here the set is
+    static — the 2K single-coordinate deltas plus every pair on distinct
+    coordinates (score = sum of the singles) — and the ranking is one
+    vectorized stable top-T, which covers the heap's reachable set up to
+    pair depth (ample for the T <= 16 regime the indexes probe).
+  * SRP kinds rank single bit flips by the projection margin |v_k| and
+    pair flips by the margin sum — flip the lowest-margin bits first.
+
+The expansion never re-hashes: the universal bucket key is linear in the
+codes (key = sum_k codes[k] * mults[k] in uint32), so perturbing code k by
++/-1 shifts the key by exactly +/-mults[k] (mod 2^32) and every candidate
+key is ``base_key + delta`` for a per-candidate delta. Slot 0 of the
+emitted (B, L, T) tensor is always the base key; slots beyond the
+expansion's reach (T - 1 > the candidate count) repeat the base key, which
+the planner's global candidate dedup collapses for free.
+
+Scores are ranked with a stable ascending sort, so ties break to the
+lower candidate index — singles before pairs, +1 before -1, low coords
+first — deterministically on every backend; the host-side reference
+enumeration in tests/test_multiprobe.py mirrors the order exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lsh import E2LSH_KINDS, _combine_codes
+
+QUERY_MODES = ("topk", "uniform", "weighted")
+
+
+def expansion_size(kind: str, num_codes: int) -> int:
+    """Number of distinct perturbation candidates the expansion ranks
+    (excluding the base bucket): 2K singles + 2K(K-1) distinct-coordinate
+    pairs for E2LSH, K single flips + C(K, 2) pair flips for SRP."""
+    k = num_codes
+    if kind in E2LSH_KINDS:
+        return 2 * k * k
+    return k + k * (k - 1) // 2
+
+
+def _pair_indices(coord: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Static (a, b) index pairs over the single-perturbation axis: every
+    a < b whose perturbations touch distinct code coordinates (a +1/-1
+    pair on one E2LSH coordinate is the identity, never a candidate)."""
+    n = coord.size
+    pa, pb = np.triu_indices(n, k=1)
+    keep = coord[pa] != coord[pb]
+    return pa[keep], pb[keep]
+
+
+def scores_and_deltas(family, mults, aux):
+    """Perturbation candidates of a hashed batch, in the static candidate
+    order (2K / K singles first, then distinct-coordinate pairs).
+
+    ``aux`` is the (B, L, K) tensor from ``family.hash_batch_aux``. Returns
+    (scores (B, L, C) float32 — lower probes earlier, deltas (B, L, C)
+    uint32 key shifts), C = ``expansion_size``.
+    """
+    k = family.num_codes
+    mults = jnp.asarray(mults, jnp.uint32)
+    if family.kind in E2LSH_KINDS:
+        r = aux                                           # floor residuals
+        s1 = jnp.concatenate([(1.0 - r) ** 2, r ** 2], axis=-1)  # (B, L, 2K)
+        d1 = jnp.concatenate([mults, jnp.uint32(0) - mults])     # (2K,)
+        d1 = jnp.broadcast_to(d1, s1.shape)
+        coord = np.concatenate([np.arange(k), np.arange(k)])
+    else:
+        s1 = jnp.abs(aux)                                 # |margin|, (B, L, K)
+        # flipping a set bit (v > 0, code 1 -> 0) subtracts mults[k]
+        d1 = jnp.where(aux > 0, jnp.uint32(0) - mults, mults)
+        coord = np.arange(k)
+    pa, pb = _pair_indices(coord)
+    scores = jnp.concatenate([s1, s1[..., pa] + s1[..., pb]], axis=-1)
+    deltas = jnp.concatenate([d1, d1[..., pa] + d1[..., pb]], axis=-1)
+    return scores, deltas
+
+
+@functools.partial(jax.jit, static_argnames=("probes",))
+def probe_keys(family, mults, queries, *, probes: int) -> jax.Array:
+    """-> (B, L, T) uint32 ranked candidate bucket keys, T = ``probes``.
+
+    Slot 0 is the base bucket key (bit-identical to ``hash_keys``); slots
+    1..T-1 are the top-(T-1) perturbation keys by ascending score (stable —
+    ties break to the static candidate order); slots past the expansion
+    size repeat the base key. One fused program: projection -> discretize ->
+    combine -> expansion ranking.
+    """
+    t = int(probes)
+    if t < 1:
+        raise ValueError(f"probes must be >= 1, got {probes}")
+    mults = jnp.asarray(mults)
+    codes, aux = family.hash_batch_aux(queries)
+    base = _combine_codes(codes, mults)                   # (B, L)
+    if t == 1:
+        return base[..., None]
+    scores, deltas = scores_and_deltas(family, mults, aux)
+    n = min(t - 1, scores.shape[-1])
+    order = jnp.argsort(scores, axis=-1, stable=True)[..., :n]
+    keys = base[..., None] + jnp.take_along_axis(deltas, order, axis=-1)
+    keys = jnp.concatenate([base[..., None], keys], axis=-1)
+    if 1 + n < t:
+        pad = jnp.broadcast_to(base[..., None],
+                               base.shape + (t - 1 - n,))
+        keys = jnp.concatenate([keys, pad], axis=-1)
+    return keys

@@ -57,12 +57,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import contractions
+from repro.core import contractions, probing
 # The universal bucket hash lives with the families (lsh.hash_keys fuses it
 # into the hashing program); re-exported here for the host/table builders.
 from repro.core.lsh import _combine_codes, make_mults
 
 _PAD_KEY = np.uint32(0xFFFFFFFF)  # bucket key of shard-padding slots
+_NO_ID = np.int32(0x7FFFFFFF)     # effective-id sentinel of probe misses
+                                  # (sorts after every real effective id)
 
 
 def tree_index(tree, idx):
@@ -102,9 +104,18 @@ def bucket_keys(family, mults, corpus, batch_size: int) -> jax.Array:
     return jnp.concatenate(keys, axis=0)
 
 
-def query_keys(family, mults, queries) -> jax.Array:
-    """Hash a query batch once -> (L, B) uint32 bucket keys (fused)."""
-    return family.hash_keys(queries, jnp.asarray(mults)).T
+def query_keys(family, mults, queries, probes: int = 1) -> jax.Array:
+    """Hash a query batch once -> (L, B) uint32 bucket keys (fused).
+
+    With ``probes`` = T > 1 the multi-probe expansion of
+    ``repro.core.probing`` widens each (query, table) cell to its T ranked
+    candidate bucket keys -> (L, T, B); slot 0 along T is the base key,
+    bit-identical to the single-probe tensor.
+    """
+    if probes == 1:
+        return family.hash_keys(queries, jnp.asarray(mults)).T
+    keys = probing.probe_keys(family, mults, queries, probes=probes)
+    return jnp.moveaxis(keys, 0, -1)                      # (B,L,T) -> (L,T,B)
 
 
 def _max_run_length(sorted_keys: jax.Array) -> jax.Array:
@@ -417,16 +428,20 @@ def _slab_gather_sort(keys_cat, corpus_cat, idx, counts, *, shard_size):
 # ---------------------------------------------------------------------------
 
 
-def probe_tables(sorted_keys, perm, keys, cap, live, win=None):
-    """-> (cand (B, L*cap) int32 with -1 for invalid, valid (B, L*cap) bool).
+def _probe_windows(sorted_keys, perm, keys, cap, live, win=None):
+    """Raw probe windows, pre-dedup -> (ids (B, W) local ids, hit (B, W)).
 
-    keys: (L, B) uint32 query bucket keys (already hashed + combined). For
-    each query and table: searchsorted into the sorted key array, gather
-    the next ``cap`` positions, keep those still inside the bucket (same
-    key) whose slot is live, then sort + mask duplicates so each local id
-    appears at most once. ``live`` is an (m+1,) lookup — entry m covers the
-    sharded pad sentinel, tombstoned slots are False — so dead slots are
-    filtered exactly like bucket misses, before ranking or counting.
+    ``keys`` is (L, B) single-probe or (L, T, B) multi-probe; every op
+    broadcasts over the optional probe axis, which is then folded into the
+    flattened window axis W = L[*T]*cap (query-major, table-major, probe-
+    major, window-minor — the exact (L, B) flattening order extended by T).
+    One (query, table, probe, window-slot) cell per output column: the same
+    local id recurs once per probed bucket that holds it, which is what the
+    weighted sampling mode counts; ``probe_tables`` sorts + masks the
+    recurrences away for the top-k path. ``hit`` is True only for in-range
+    slots of the probed bucket whose slot is live (``live`` is the (m+1,)
+    lookup — entry m covers the sharded pad sentinel, tombstoned slots are
+    False — so dead slots are filtered exactly like bucket misses).
 
     ``win`` (stores built with an explicit ``bucket_cap``) is the
     (live_rank (L, m+1), live_pos (L, m)) live-window lookup: the probe
@@ -439,23 +454,43 @@ def probe_tables(sorted_keys, perm, keys, cap, live, win=None):
     starts = jax.vmap(
         lambda sk, q: jnp.searchsorted(sk, q, side="left"))(sorted_keys, keys)
     if win is None:
-        pos = starts[:, :, None] + jnp.arange(cap, dtype=starts.dtype)
-        in_range = pos < m                                # (L, B, cap)
+        pos = starts[..., None] + jnp.arange(cap, dtype=starts.dtype)
+        in_range = pos < m                                # (L[, T], B, cap)
     else:
         live_rank, live_pos = win
-        rank0 = jax.vmap(lambda lr, st: lr[st])(live_rank, starts)  # (L, B)
-        j = rank0[:, :, None] + jnp.arange(cap, dtype=rank0.dtype)
+        rank0 = jax.vmap(lambda lr, st: lr[st])(live_rank, starts)
+        j = rank0[..., None] + jnp.arange(cap, dtype=rank0.dtype)
         in_range = j < m
         pos = jax.vmap(lambda lp, p: lp[p])(
-            live_pos, jnp.minimum(j, max(m - 1, 0)))      # (L, B, cap)
+            live_pos, jnp.minimum(j, max(m - 1, 0)))      # (L[, T], B, cap)
     posc = jnp.minimum(pos, max(m - 1, 0))
     key_at = jax.vmap(lambda sk, p: sk[p])(sorted_keys, posc)
-    hit = in_range & (key_at == keys[:, :, None])
-    ids = jax.vmap(lambda pm, p: pm[p])(perm, posc)       # (L, B, cap)
+    hit = in_range & (key_at == keys[..., None])
+    ids = jax.vmap(lambda pm, p: pm[p])(perm, posc)       # (L[, T], B, cap)
     hit &= live[ids]                                      # tombstones + pads
-    b = keys.shape[1]
-    cand = jnp.where(hit, ids, m).transpose(1, 0, 2).reshape(b, -1)
-    cand = jnp.sort(cand, axis=1)                         # invalid (>=m) last
+    b = keys.shape[-1]
+    ids = jnp.moveaxis(ids, -2, 0).reshape(b, -1)
+    hit = jnp.moveaxis(hit, -2, 0).reshape(b, -1)
+    return ids, hit
+
+
+def probe_tables(sorted_keys, perm, keys, cap, live, win=None):
+    """-> (cand (B, W) int32 with -1 for invalid, valid (B, W) bool),
+    W = L[*T]*cap.
+
+    keys: (L, B) uint32 query bucket keys (already hashed + combined), or
+    (L, T, B) ranked multi-probe keys. For each query and table (and probe):
+    searchsorted into the sorted key array, gather the next ``cap``
+    positions, keep those still inside the bucket (same key) whose slot is
+    live, then sort + mask duplicates so each local id appears at most
+    once — including across the T probed buckets of one table, whose
+    windows overlap whenever probes collide (padded expansions repeat the
+    base key), so ``n_cand`` counts distinct members at any T.
+    """
+    m = sorted_keys.shape[1]
+    ids, hit = _probe_windows(sorted_keys, perm, keys, cap, live, win)
+    b = ids.shape[0]
+    cand = jnp.sort(jnp.where(hit, ids, m), axis=1)       # invalid (>=m) last
     dup = jnp.concatenate(
         [jnp.zeros((b, 1), bool), cand[:, 1:] == cand[:, :-1]], axis=1)
     valid = (cand < m) & ~dup
@@ -580,13 +615,16 @@ def shard_topk_with_deltas(metric, topk, cap, delta_caps, queries, base_s,
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "topk", "caps"))
-def segmented_query(family, segs, mults, queries, *, metric, topk, caps):
-    """One program from query batch to top-k over every segment: hash once,
+@functools.partial(jax.jit, static_argnames=("metric", "topk", "caps",
+                                             "probes"))
+def segmented_query(family, segs, mults, queries, *, metric, topk, caps,
+                    probes=1):
+    """One program from query batch to top-k over every segment: hash once
+    (expanding to T ranked bucket keys per table when ``probes`` > 1),
     probe + re-rank each segment, merge. ``segs`` is a tuple of per-segment
     array tuples ordered by slot offset (base first, deltas in insert
     order); ``caps`` the matching static probe widths."""
-    keys = query_keys(family, mults, queries)
+    keys = query_keys(family, mults, queries, probes)
     outs = [segment_topk(metric, topk, cap, queries, sa, keys)
             for sa, cap in zip(segs, caps)]
     return merge_topk(metric, topk,
@@ -596,9 +634,9 @@ def segmented_query(family, segs, mults, queries, *, metric, topk, caps):
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "topk", "cap",
-                                             "delta_caps"))
+                                             "delta_caps", "probes"))
 def sharded_query_vmap(family, base, deltas, mults, queries, *, metric, topk,
-                       cap, delta_caps):
+                       cap, delta_caps, probes=1):
     """Single-program sharded query without a mesh: vmap the per-shard
     base + delta-slab body over the S axis, then the global S-way merge.
 
@@ -607,7 +645,7 @@ def sharded_query_vmap(family, base, deltas, mults, queries, *, metric, topk,
     repro.distributed.index_sharding — both call
     ``shard_topk_with_deltas`` per shard.
     """
-    keys = query_keys(family, mults, queries)
+    keys = query_keys(family, mults, queries, probes)
     per_shard = jax.vmap(
         lambda base_s, deltas_s: shard_topk_with_deltas(
             metric, topk, cap, delta_caps, queries, base_s, deltas_s, keys),
@@ -615,10 +653,10 @@ def sharded_query_vmap(family, base, deltas, mults, queries, *, metric, topk,
     return merge_topk(metric, topk, *per_shard)
 
 
-@functools.partial(jax.jit, static_argnames=("caps",))
-def segmented_candidates(family, segs, mults, queries, *, caps):
-    """-> (cand (B, sum L*cap_g) effective ids with -1 fill, valid mask)."""
-    keys = query_keys(family, mults, queries)
+@functools.partial(jax.jit, static_argnames=("caps", "probes"))
+def segmented_candidates(family, segs, mults, queries, *, caps, probes=1):
+    """-> (cand (B, sum L[*T]*cap_g) effective ids with -1 fill, valid)."""
+    keys = query_keys(family, mults, queries, probes)
     cands, valids = [], []
     for seg_arrays, cap in zip(segs, caps):
         cand, valid = segment_candidates(seg_arrays, keys, cap)
@@ -627,12 +665,12 @@ def segmented_candidates(family, segs, mults, queries, *, caps):
     return jnp.concatenate(cands, axis=1), jnp.concatenate(valids, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("cap", "delta_caps"))
+@functools.partial(jax.jit, static_argnames=("cap", "delta_caps", "probes"))
 def sharded_candidates(family, base, deltas, mults, queries, *, cap,
-                       delta_caps):
+                       delta_caps, probes=1):
     """Sharded-base + sharded-delta-slab variant of
     ``segmented_candidates`` (vmap over shards for every segment)."""
-    keys = query_keys(family, mults, queries)
+    keys = query_keys(family, mults, queries, probes)
     parts = [jax.vmap(lambda b_s: segment_candidates(b_s, keys, cap))(base)]
     for seg_arrays, dcap in zip(deltas, delta_caps):
         parts.append(jax.vmap(
@@ -644,6 +682,131 @@ def sharded_candidates(family, base, deltas, mults, queries, *, cap,
         cands.append(cand.transpose(1, 0, 2).reshape(b, s * w))
         valids.append(valid.transpose(1, 0, 2).reshape(b, s * w))
     return jnp.concatenate(cands, axis=1), jnp.concatenate(valids, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Sampling query modes (uniform / weighted over the probed bucket union)
+# ---------------------------------------------------------------------------
+
+
+def _segment_scored_hits(metric, cap, queries, seg_arrays, keys):
+    """One segment's raw probe windows, scored and mapped to effective ids.
+
+    -> (eid (B, W) int32 — the effective id of each raw window hit,
+    ``_NO_ID`` for misses; scores (B, W) exact metric scores, bad-fill for
+    misses), W = L[*T]*cap. Pre-dedup on purpose: the same item recurs once
+    per (table, probe, segment-window) hit, and that multiplicity is the
+    ``weighted`` sampling weight. Recurrences of one item gather the same
+    corpus row, so their scores are bit-identical — any run member can
+    represent the item after the id sort in ``_sample_topk``.
+    """
+    corpus, sorted_keys, perm, live, eff, win = seg_arrays
+    ids, hit = _probe_windows(sorted_keys, perm, keys, cap, live, win)
+    safe = jnp.where(hit, ids, 0)
+    eid = jnp.where(hit, eff[safe], _NO_ID)
+    sub = tree_index(corpus, safe)                        # leaves (B, W, ...)
+    score = _score_fn(metric)
+    scores = jax.vmap(
+        lambda q, ys: jax.vmap(lambda y: score(q, y))(ys))(queries, sub)
+    return eid, jnp.where(hit, scores, _bad_score(metric))
+
+
+def _sample_topk(metric, topk, mode, rng, eid, scores):
+    """Gumbel-top-k sample of ``topk`` distinct members from the probed
+    union -> (ids (B, topk) with -1 fill, scores (B, topk), n_cand (B,)).
+
+    ``eid``/``scores`` are the concatenated raw window hits of every
+    segment ((B, W), misses = ``_NO_ID``/bad-fill). The rows are sorted by
+    effective id (scores ride along), so each distinct member forms one
+    run; the run length is its raw hit multiplicity. Per-run logits are 0
+    for ``uniform`` (every distinct live member equally likely) and
+    log(multiplicity) for ``weighted`` (a member is drawn with probability
+    proportional to how many probed buckets hold it — equivalently,
+    uniform over raw (bucket, member) tickets, so bigger probed buckets
+    contribute proportionally more draws); non-run slots get -inf. Adding
+    one Gumbel(0, 1) draw per slot and taking the top ``topk`` perturbed
+    logits is then an exact without-replacement sample of ``topk`` distinct
+    members from that distribution (the marginal of the first draw is the
+    exact softmax categorical — what the seeded chi-square tests pin).
+    Rows with fewer than ``topk`` distinct members sample them all.
+    ``n_cand`` counts the distinct members, matching the top-k path at the
+    same (L, T). The sampled subset is presented through ``select_topk``
+    (score order, -1 fill), so the output contract matches ``query_batch``.
+    """
+    b, w = eid.shape
+    s_eid, s_scores = jax.lax.sort((eid, scores), dimension=1, is_stable=True,
+                                   num_keys=1)
+    prev = jnp.concatenate(
+        [jnp.full((b, 1), -1, s_eid.dtype), s_eid[:, :-1]], axis=1)
+    newrun = s_eid != prev                   # first slot of each id run (the
+    isfirst = newrun & (s_eid != _NO_ID)     # _NO_ID tail forms its own run)
+    idx = jnp.arange(w, dtype=jnp.int32)
+    bound = jnp.where(newrun, idx, w)
+    nxt = jax.lax.cummin(bound[:, ::-1], axis=1)[:, ::-1]  # next boundary >= i
+    nxt = jnp.concatenate(
+        [nxt[:, 1:], jnp.full((b, 1), w, jnp.int32)], axis=1)  # strictly > i
+    mult = jnp.where(isfirst, nxt - idx, 0)  # raw hit multiplicity of the run
+    n_cand = isfirst.sum(axis=1, dtype=jnp.int32)
+    if mode == "uniform":
+        logits = jnp.where(isfirst, 0.0, -jnp.inf)
+    elif mode == "weighted":
+        logits = jnp.where(isfirst,
+                           jnp.log(jnp.maximum(mult, 1).astype(jnp.float32)),
+                           -jnp.inf)
+    else:
+        raise ValueError(f"unknown sampling mode {mode!r}")
+    pert = logits + jax.random.gumbel(rng, (b, w), dtype=jnp.float32)
+    k = min(topk, w)
+    _, sel = jax.lax.top_k(pert, k)
+    cand = jnp.take_along_axis(s_eid, sel, axis=1).astype(jnp.int32)
+    cscores = jnp.take_along_axis(s_scores, sel, axis=1)
+    cvalid = jnp.take_along_axis(isfirst, sel, axis=1)
+    ids, out_scores = select_topk(metric, topk, cand, cscores, cvalid)
+    return ids, out_scores, n_cand
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "topk", "caps",
+                                             "probes", "mode"))
+def segmented_sample(family, segs, mults, queries, rng, *, metric, topk,
+                     caps, probes, mode):
+    """Sampling-mode variant of ``segmented_query``: hash once (expanding
+    to T probes), collect every segment's raw scored window hits, and draw
+    ``topk`` distinct members per query from the probed union — uniform or
+    bucket-size-weighted — with one explicit PRNG key per call (each query
+    row consumes independent Gumbel noise from it)."""
+    keys = query_keys(family, mults, queries, probes)
+    parts = [_segment_scored_hits(metric, cap, queries, sa, keys)
+             for sa, cap in zip(segs, caps)]
+    return _sample_topk(metric, topk, mode, rng,
+                        jnp.concatenate([p[0] for p in parts], axis=1),
+                        jnp.concatenate([p[1] for p in parts], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "topk", "cap",
+                                             "delta_caps", "probes", "mode"))
+def sharded_sample_vmap(family, base, deltas, mults, queries, rng, *, metric,
+                        topk, cap, delta_caps, probes, mode):
+    """Sharded-base + sharded-delta-slab variant of ``segmented_sample``
+    (vmap over shards for every segment, then one global draw over the
+    cross-shard union — sampling is a global decision, so the sharded
+    index always runs this single-program path, mesh or not)."""
+    keys = query_keys(family, mults, queries, probes)
+    parts = [jax.vmap(
+        lambda b_s: _segment_scored_hits(metric, cap, queries, b_s, keys)
+    )(base)]
+    for seg_arrays, dcap in zip(deltas, delta_caps):
+        parts.append(jax.vmap(
+            lambda d_s, dcap=dcap: _segment_scored_hits(metric, dcap,
+                                                        queries, d_s, keys)
+        )(seg_arrays))                                    # (S, B, W) each
+    eids, scoreses = [], []
+    for eid, sc in parts:
+        s, b, w = eid.shape
+        eids.append(eid.transpose(1, 0, 2).reshape(b, s * w))
+        scoreses.append(sc.transpose(1, 0, 2).reshape(b, s * w))
+    return _sample_topk(metric, topk, mode, rng,
+                        jnp.concatenate(eids, axis=1),
+                        jnp.concatenate(scoreses, axis=1))
 
 
 # ---------------------------------------------------------------------------

@@ -67,9 +67,10 @@ def place_sharded(tree, mesh: Mesh, axis: str):
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "topk", "cap",
-                                             "delta_caps", "mesh", "axis"))
+                                             "delta_caps", "probes", "mesh",
+                                             "axis"))
 def shard_map_query(family, base, deltas, mults, queries, *, metric, topk,
-                    cap, delta_caps, mesh, axis):
+                    cap, delta_caps, mesh, axis, probes=1):
     """One jit program: hash (replicated) -> per-shard top-k over the base
     block + every delta slab (shard_map) -> global S-way merge.
     Bit-identical to core.segments.sharded_query_vmap — both run
@@ -78,10 +79,14 @@ def shard_map_query(family, base, deltas, mults, queries, *, metric, topk,
     ``base`` and each element of ``deltas`` is a (corpus, sorted_keys,
     perm, live, eff, win) tuple whose array leaves carry a leading shard
     dim laid over ``axis``; each device sees its (1, ...) blocks.
+    ``probes`` = T > 1 replicates the (L, T, B) multi-probe key tensor
+    instead of the (L, B) single-probe one — the shard body is
+    shape-agnostic, so every device probes all T buckets of its blocks.
     """
     from repro.core import segments
 
-    keys = segments.query_keys(family, mults, queries)   # (L, B), replicated
+    # (L, B) / (L, T, B), replicated
+    keys = segments.query_keys(family, mults, queries, probes)
 
     def body(base_blk, deltas_blk, keys_r, queries_r):
         # blocks carry a leading shard dim of 1 on the sharded operands

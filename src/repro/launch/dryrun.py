@@ -237,7 +237,8 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
                          dims: tuple = (8, 8, 8), batch: int = 1024,
                          topk: int = 10, num_codes: int = 4,
                          num_tables: int = 8, bucket_cap: int = 64,
-                         delta_n: int = 4096, delta_cap: int = 64) -> dict:
+                         delta_n: int = 4096, delta_cap: int = 64,
+                         probes: int = 8) -> dict:
     """AOT-lower + compile the sharded LSH index query + mutation programs.
 
     One corpus shard per device along the mesh's data axis (the
@@ -249,10 +250,13 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
     model workloads. Four programs are compiled: the compacted store (base
     segment only), the post-insert store (base + one sharded
     ``delta_n``-item delta slab probed inside the same shard_map body —
-    ``delta_probe``), the fused hash pipeline (``hash_program``), and the
-    two shard-local mutation programs — the routed slab scatter + sort
-    behind ``insert`` (``insert_program``, hash included) and the
-    per-shard survivor fold behind ``compact()`` (``compact_program``).
+    ``delta_probe``), the query-directed multi-probe query at T=``probes``
+    candidate buckets per table (``multiprobe_program`` — prices the key
+    expansion + the T-times-wider probe windows of the (L, T) trade-off),
+    the fused hash pipeline (``hash_program``), and the two shard-local
+    mutation programs — the routed slab scatter + sort behind ``insert``
+    (``insert_program``, hash included) and the per-shard survivor fold
+    behind ``compact()`` (``compact_program``).
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -301,12 +305,13 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         fam_sh = jax.tree.map(lambda _: rep, fam_sds)
         seg_sh = lambda t: jax.tree.map(shard_of, t)
 
-        def compile_one(deltas_sds, delta_caps):
+        def compile_one(deltas_sds, delta_caps, t=1):
             def step(fam, base, deltas, mults, queries):
                 return index_sharding.shard_map_query(
                     fam, base, deltas, mults, queries,
                     metric="euclidean", topk=topk, cap=bucket_cap,
-                    delta_caps=delta_caps, mesh=shard_mesh, axis=shard_axis)
+                    delta_caps=delta_caps, mesh=shard_mesh, axis=shard_axis,
+                    probes=t)
 
             deltas_sh = tuple(seg_sh(d) for d in deltas_sds)
             jitted = jax.jit(step, in_shardings=(
@@ -318,6 +323,11 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         t1 = time.time()
         delta_rec = _analyze(
             compile_one((delta_sds,), (min(delta_cap, d_ns),)), t1)
+
+        # the multi-probe query on the compacted store: the T-wide key
+        # expansion (repro.core.probing) + T probe windows per table
+        t_mp = time.time()
+        multiprobe_rec = _analyze(compile_one((), (), t=probes), t_mp)
 
         # the fused hash program (projection -> discretize -> bucket keys,
         # one jit program; the build/insert/query-hash hot path) profiled
@@ -384,6 +394,7 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         **base_rec,
         "delta_probe": {"delta_n": delta_n, "delta_cap": delta_cap,
                         **delta_rec},
+        "multiprobe_program": {"probes": probes, **multiprobe_rec},
         # the backend that actually executes for this cell's (dense) corpus:
         # CP/TT projections over dense inputs have no kernel, so the pallas
         # backend serves them through XLA — report the executed path, not

@@ -48,6 +48,7 @@ import numpy as np
 from repro.core.index import (DeviceLSHIndex, HostLSHIndex, ShardedLSHIndex,
                               _SegmentedIndex)
 from repro.core.lsh import LSHFamily, make_family
+from repro.core.probing import QUERY_MODES
 
 
 @dataclasses.dataclass
@@ -57,6 +58,10 @@ class ServiceStats:
     total_ms: float = 0.0
     total_candidates: int = 0
     build_s: float = 0.0
+    # per-mode query counters (topk + uniform + weighted == queries)
+    topk_queries: int = 0
+    uniform_queries: int = 0
+    weighted_queries: int = 0
     # mutation counters
     inserted: int = 0          # items appended via insert()
     insert_batches: int = 0
@@ -98,6 +103,7 @@ class ServiceStats:
         """Zero the query counters (e.g. after jit warmup); keeps build_s
         and the mutation counters."""
         self.queries = self.batches = 0
+        self.topk_queries = self.uniform_queries = self.weighted_queries = 0
         self.total_ms = 0.0
         self.total_candidates = 0
 
@@ -107,7 +113,15 @@ class LSHService:
 
     def __init__(self, family: LSHFamily, metric: str = "euclidean",
                  device: bool = True, bucket_cap: int | None = None,
-                 shards: int | None = None, max_deltas: int = 8):
+                 shards: int | None = None, max_deltas: int = 8,
+                 probes: int = 1, query_mode: str = "topk"):
+        if int(probes) < 1:
+            raise ValueError(f"probes must be >= 1, got {probes}")
+        if query_mode not in QUERY_MODES:
+            raise ValueError(f"unknown query_mode {query_mode!r}; expected "
+                             f"one of {QUERY_MODES}")
+        self.probes = int(probes)
+        self.query_mode = query_mode
         if shards is not None:
             if not device:
                 raise ValueError(
@@ -137,29 +151,60 @@ class LSHService:
 
     # -- queries ------------------------------------------------------------
 
-    def query_arrays(self, queries, topk: int = 10):
+    def query_arrays(self, queries, topk: int = 10, *,
+                     probes: int | None = None, mode: str | None = None,
+                     seed: int | None = None):
         """Batched raw results: (ids (B, topk), scores (B, topk), n_cand (B,)).
 
         ids are effective (live-corpus) ids, -1-filled where a row has fewer
         than topk candidates. One jit-compiled call through the shared
         segment planner for every index deployment.
+
+        ``probes``/``mode`` override the service defaults per request; the
+        sampling modes (``"uniform"``/``"weighted"``) draw ``topk`` distinct
+        members from the probed bucket union and require an explicit
+        per-request ``seed`` (the PRNG key is derived from it and nothing
+        else — the same seed on the same index state replays the exact
+        draw; the service keeps no hidden sampling state).
         """
+        probes = self.probes if probes is None else int(probes)
+        mode = self.query_mode if mode is None else mode
+        if mode not in QUERY_MODES:
+            raise ValueError(f"unknown query mode {mode!r}; expected one "
+                             f"of {QUERY_MODES}")
+        rng = None
+        if mode in ("uniform", "weighted"):
+            if seed is None:
+                raise ValueError(
+                    f"mode={mode!r} needs an explicit per-request seed "
+                    "(sampling draws are seeded, never implicit)")
+            rng = jax.random.PRNGKey(int(seed))
+        elif seed is not None:
+            raise ValueError("seed applies to the sampling modes only; "
+                             "mode='topk' is deterministic")
         n = jax.tree.leaves(queries)[0].shape[0]
         t0 = time.perf_counter()
         ids, scores, n_cand = jax.block_until_ready(
-            self.index.query_batch(queries, topk=topk))
+            self.index.query_batch(queries, topk=topk, probes=probes,
+                                   mode=mode, rng=rng))
         ids, scores, n_cand = (np.asarray(ids), np.asarray(scores),
                                np.asarray(n_cand))
         dt = (time.perf_counter() - t0) * 1e3
         self.stats.queries += n
+        setattr(self.stats, f"{mode}_queries",
+                getattr(self.stats, f"{mode}_queries") + n)
         self.stats.batches += 1
         self.stats.total_ms += dt
         self.stats.total_candidates += int(n_cand.sum())
         return ids, scores, n_cand
 
-    def query_batch(self, queries, topk: int = 10) -> list[dict[str, Any]]:
+    def query_batch(self, queries, topk: int = 10, *,
+                    probes: int | None = None, mode: str | None = None,
+                    seed: int | None = None) -> list[dict[str, Any]]:
         """Per-query result dicts (ids/scores trimmed of -1 fill)."""
-        ids, scores, n_cand = self.query_arrays(queries, topk=topk)
+        ids, scores, n_cand = self.query_arrays(queries, topk=topk,
+                                                probes=probes, mode=mode,
+                                                seed=seed)
         out = []
         for row_ids, row_scores, nc in zip(ids, scores, n_cand):
             mask = row_ids >= 0
@@ -242,11 +287,14 @@ def build_service(key, kind: str, dims: Sequence[int], corpus, *,
                   bucket_cap: int | None = None,
                   shards: int | None = None,
                   max_deltas: int = 8,
-                  hash_backend: str = "auto") -> LSHService:
+                  hash_backend: str = "auto",
+                  probes: int = 1,
+                  query_mode: str = "topk") -> LSHService:
     metric = metric or ("cosine" if kind.endswith("srp") else "euclidean")
     fam = make_family(key, kind, dims, num_codes=num_codes,
                       num_tables=num_tables, rank=rank,
                       bucket_width=bucket_width, hash_backend=hash_backend)
     return LSHService(fam, metric=metric, device=device,
                       bucket_cap=bucket_cap, shards=shards,
-                      max_deltas=max_deltas).build(corpus)
+                      max_deltas=max_deltas, probes=probes,
+                      query_mode=query_mode).build(corpus)

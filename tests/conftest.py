@@ -1,0 +1,8 @@
+"""Shared pytest configuration for the tier-1 suites."""
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: statistically heavy tier-1 tests (bigger corpora / many "
+        "sampling draws); run by default, deselect with -m 'not slow'")

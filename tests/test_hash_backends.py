@@ -17,6 +17,7 @@ import os
 import subprocess
 import sys
 
+import grids
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -126,7 +127,7 @@ class TestIndexLevelParity:
         corpus = _batch(kind, 48, fmt, seed=5)
         queries = _batch(kind, 6, fmt, seed=6)
         fam_x, fam_p = _families(kind, seed=7)
-        metric = "cosine" if kind.endswith("srp") else "euclidean"
+        metric = grids.metric_for(kind)
         ix = DeviceLSHIndex(fam_x, metric=metric).build(corpus)
         ip = DeviceLSHIndex(fam_p, metric=metric).build(corpus)
         np.testing.assert_array_equal(np.asarray(ix.sorted_keys),

@@ -9,38 +9,32 @@ contract, plus the segment-store shape of a fresh build. Streaming
 mutations are covered in tests/test_index_mutation.py.
 """
 
+import grids
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from grids import ALL_KINDS, DIMS
 from repro.core import (DeviceLSHIndex, HostLSHIndex, TableSegment,
                         make_family)
 from repro.core.index import _combine_codes, _hash_one, _max_run_length
-from repro.core.lsh import ALL_KINDS
 
-DIMS = (4, 4, 4)
 N_CORPUS, N_QUERIES, TOPK = 64, 4, 5
 
 
 def _data(seed=0):
-    kc, kq = jax.random.split(jax.random.PRNGKey(seed))
-    corpus = jax.random.normal(kc, (N_CORPUS,) + DIMS)
-    queries = corpus[:N_QUERIES] + 0.1 * jax.random.normal(
-        kq, (N_QUERIES,) + DIMS)
-    return corpus, queries
+    return grids.corpus_and_queries(N_CORPUS, N_QUERIES, seed=seed)
 
 
 def _build_pair(kind, metric, corpus):
-    k, w = (3, 6.0) if "e2lsh" in kind else (6, 0.0)
-    fam = make_family(jax.random.PRNGKey(42), kind, DIMS, num_codes=k,
-                      num_tables=4, rank=2, bucket_width=max(w, 1.0))
+    fam = grids.grid_family(kind)
     host = HostLSHIndex(fam, metric=metric).build(corpus)
     device = DeviceLSHIndex(fam, metric=metric).build(corpus)
     return host, device
 
 
-@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+@pytest.mark.parametrize("metric", grids.METRICS)
 @pytest.mark.parametrize("kind", ALL_KINDS)
 class TestDeviceMatchesHost:
     def test_bucket_membership(self, kind, metric):

@@ -33,22 +33,21 @@ import subprocess
 import sys
 import textwrap
 
+import grids
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from grids import ALL_KINDS, DIMS, SHARD_COUNTS
 from repro.core import (CPTensor, DeviceLSHIndex, HostLSHIndex,
                         ShardedLSHIndex, ShardedSegment, cp_random_data,
                         make_family)
-from repro.core.lsh import ALL_KINDS
 from repro.core.segments import route_balanced
 from repro.serving.lsh_service import LSHService
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-DIMS = (4, 4, 4)
 N_CORPUS, N_QUERIES, TOPK = 48, 4, 5
-SHARD_COUNTS = (1, 2, 4)
 # two insert batches and two delete batches, interleaved; delete ids are
 # effective ids at the time of the call and span base + delta segments
 N_INS1, N_INS2 = 12, 9
@@ -57,11 +56,7 @@ DEL2 = np.array([0, 33, 64])       # valid in [0, 65): post-DEL1 numbering
 
 
 def _data(seed=0):
-    kc, kq = jax.random.split(jax.random.PRNGKey(seed))
-    corpus = jax.random.normal(kc, (N_CORPUS,) + DIMS)
-    queries = corpus[:N_QUERIES] + 0.1 * jax.random.normal(
-        kq, (N_QUERIES,) + DIMS)
-    return corpus, queries
+    return grids.corpus_and_queries(N_CORPUS, N_QUERIES, seed=seed)
 
 
 def _inserts(seed=100):
@@ -71,9 +66,7 @@ def _inserts(seed=100):
 
 
 def _family(kind):
-    k, w = (3, 6.0) if "e2lsh" in kind else (6, 0.0)
-    return make_family(jax.random.PRNGKey(42), kind, DIMS, num_codes=k,
-                       num_tables=4, rank=2, bucket_width=max(w, 1.0))
+    return grids.grid_family(kind)
 
 
 def _mutate(index, corpus):
@@ -106,17 +99,11 @@ def _assert_bit_identical(got, want, msg=None, scores_exact=True):
         np.testing.assert_array_max_ulp(g_sc[fin], w_sc[fin], maxulp=16)
 
 
-def _assert_query_path(index):
-    """Shard-native coverage must fail loudly: whenever the platform has
-    enough devices for every shard, the shard_map program MUST be the one
-    that executes — a silent vmap fallback is a bug, not a degradation."""
-    want = "shard_map" if len(jax.devices()) >= index.shards else "vmap"
-    assert index.query_path == want, (
-        f"expected the {want} query path on {len(jax.devices())} devices "
-        f"with S={index.shards}, got {index.query_path}")
+# shared with the other layout suites (tests/grids.py)
+_assert_query_path = grids.assert_query_path
 
 
-@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+@pytest.mark.parametrize("metric", grids.METRICS)
 @pytest.mark.parametrize("kind", ALL_KINDS)
 class TestStreamingParityDevice:
     def test_mutated_equals_fresh_rebuild(self, kind, metric):
@@ -143,7 +130,7 @@ class TestStreamingParityDevice:
 
 
 @pytest.mark.parametrize("shards", SHARD_COUNTS)
-@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+@pytest.mark.parametrize("metric", grids.METRICS)
 @pytest.mark.parametrize("kind", ALL_KINDS)
 class TestStreamingParitySharded:
     """The acceptance matrix: 6 kinds x 2 metrics x S in {1, 2, 4} x

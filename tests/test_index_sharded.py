@@ -23,34 +23,27 @@ import subprocess
 import sys
 import textwrap
 
+import grids
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from grids import ALL_KINDS, DIMS, SHARD_COUNTS
 from repro.core import (CPTensor, DeviceLSHIndex, ShardedLSHIndex,
                         ShardedSegment, cp_random_data, make_family)
-from repro.core.lsh import ALL_KINDS
 from repro.serving.lsh_service import LSHService, build_service
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-DIMS = (4, 4, 4)
 N_CORPUS, N_QUERIES, TOPK = 67, 4, 5   # 67: coprime to 2 and 4 -> padding
-SHARD_COUNTS = (1, 2, 4)
 
 
 def _data(seed=0):
-    kc, kq = jax.random.split(jax.random.PRNGKey(seed))
-    corpus = jax.random.normal(kc, (N_CORPUS,) + DIMS)
-    queries = corpus[:N_QUERIES] + 0.1 * jax.random.normal(
-        kq, (N_QUERIES,) + DIMS)
-    return corpus, queries
+    return grids.corpus_and_queries(N_CORPUS, N_QUERIES, seed=seed)
 
 
 def _family(kind):
-    k, w = (3, 6.0) if "e2lsh" in kind else (6, 0.0)
-    return make_family(jax.random.PRNGKey(42), kind, DIMS, num_codes=k,
-                       num_tables=4, rank=2, bucket_width=max(w, 1.0))
+    return grids.grid_family(kind)
 
 
 def _assert_parity(single, sharded, queries, topk=TOPK):
@@ -68,7 +61,7 @@ def _assert_parity(single, sharded, queries, topk=TOPK):
         np.testing.assert_allclose(d_sc, s_sc, rtol=3e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+@pytest.mark.parametrize("metric", grids.METRICS)
 @pytest.mark.parametrize("kind", ALL_KINDS)
 class TestShardCountInvariance:
     def test_topk_and_candidates_match_device(self, kind, metric):
@@ -294,6 +287,13 @@ class TestShardMapPathMultiDevice:
             assert hp["backend"] == "xla"
             assert hp["batch"] == 64
             assert hp["cost"]["flops_per_device"] > 0
+            # the T-wide multi-probe query profiled alongside: it prices
+            # the key expansion + T probe windows per table, so it must
+            # read strictly more probe bytes than the single-probe cell
+            mp_rec = rec["multiprobe_program"]
+            assert mp_rec["probes"] == 8
+            assert (mp_rec["cost"]["flops_per_device"]
+                    > rec["cost"]["flops_per_device"])
             # the shard-local mutation programs profiled alongside: the
             # routed slab insert (hash included) and the per-shard compact
             # fold — and neither may schedule a collective (shard-local
@@ -310,8 +310,9 @@ class TestShardMapPathMultiDevice:
             # every sub-program expands to its own analysable record
             subs = roofline.expand(rec)
             assert [r["arch"] for r in subs[1:]] == [
-                "lsh-index:delta_probe", "lsh-index:hash_program",
-                "lsh-index:insert_program", "lsh-index:compact_program"]
+                "lsh-index:delta_probe", "lsh-index:multiprobe_program",
+                "lsh-index:hash_program", "lsh-index:insert_program",
+                "lsh-index:compact_program"]
             for r in subs[1:]:
                 assert roofline.analyse(r)["roofline_mfu"] is None
         with tempfile.TemporaryDirectory() as d:

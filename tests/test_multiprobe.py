@@ -1,0 +1,559 @@
+"""Query-directed multi-probe + bucket-sampling query modes, pinned by a
+seeded cross-layout parity/statistics matrix.
+
+Four contracts, each failing loudly rather than degrading:
+
+  1. **T=1 bit-identity.** ``probes=1`` must execute the exact single-probe
+     program: for every kind x metric x layout (device, sharded S in
+     {1, 2, 4}) x {fresh, mutated} cell, ``query_batch(..., probes=1)`` is
+     bit-identical (ids, scores, counts) to the probes-less call, and
+     ``probe_keys`` slot 0 is bit-identical to ``hash_keys``.
+  2. **Expansion correctness.** The (B, L, T) candidate keys match an
+     independent host-side enumeration of the perturbation set (numpy
+     float32 scoring, Python stable sort, uint32 wraparound) exactly; T>1
+     candidate sets are supersets of T=1 and equal the host dict reference
+     (``HostLSHIndex.candidates(probes=T)``).
+  3. **Planner dedup.** ``n_candidates`` equals the *distinct* member count
+     across the T probed buckets per table — pinned against the host dict
+     union at T in {1, 4} and through the pad-repeat regime (T - 1 > the
+     expansion size), where naive per-window counting would overcount.
+  4. **Sampling statistics.** ``mode="uniform"`` / ``"weighted"`` draw
+     distinct members of the probed union with the advertised frequencies:
+     seeded chi-square checks with generous bounds (fixed PRNG keys, fully
+     deterministic — no flakiness), replay determinism per seed, and the
+     explicit-seed error contract on index and service.
+
+Sharded cells assert ``grids.assert_query_path`` so the CI 4-device leg
+(which runs this file in-process) fails on a silent shard_map -> vmap
+fallback instead of silently testing the wrong program.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import grids
+from grids import ALL_KINDS, DIMS, SHARD_COUNTS
+from repro.core import (DeviceLSHIndex, HostLSHIndex, ShardedLSHIndex,
+                        make_family)
+from repro.core import probing
+from repro.core.index import recall_at_k
+from repro.core.lsh import E2LSH_KINDS, _combine_codes, make_mults
+from repro.serving.lsh_service import LSHService
+
+N_CORPUS, N_QUERIES, TOPK = 67, 4, 5   # 67 coprime to every shard count
+
+
+def _data(seed=0):
+    return grids.corpus_and_queries(N_CORPUS, N_QUERIES, seed=seed)
+
+
+def _family(kind):
+    return grids.grid_family(kind)
+
+
+def _mutate(index, corpus):
+    """A small insert + delete interleaving (delta segment + tombstones
+    outstanding) so the multi-probe path is exercised over a mutated
+    store, not just the contiguous fresh build."""
+    ins = jax.random.normal(jax.random.PRNGKey(100), (11,) + DIMS)
+    index.insert(ins)
+    index.delete(np.array([3, 40, 50, 70]))
+    return index
+
+
+def _assert_bit_identical(got, want, msg=None):
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Host-side reference enumeration (independent of repro.core.probing's
+# vectorized ranking: numpy float32 scores, Python stable sort, explicit
+# uint32 delta arithmetic)
+# ---------------------------------------------------------------------------
+
+
+_M32 = 1 << 32
+
+
+def _reference_probe_keys(fam, mults, queries, probes):
+    """(B, L, T) uint32 via per-(query, table) Python enumeration: delta
+    arithmetic in Python ints mod 2^32, scores in numpy float32 (matching
+    the device program's dtype so the ranking ties out exactly), Python's
+    stable ``sorted`` mirroring the stable argsort tie-break."""
+    codes, aux = (np.asarray(a) for a in fam.hash_batch_aux(queries))
+    base = _combine_codes(codes, np.asarray(mults, np.uint32))    # (B, L)
+    k = fam.num_codes
+    m_int = [int(m) for m in np.asarray(mults, np.uint32)]
+    b, el = base.shape
+    out = np.empty((b, el, probes), np.uint32)
+    for i in range(b):
+        for t in range(el):
+            if fam.kind in E2LSH_KINDS:
+                r = aux[i, t].astype(np.float32)
+                s1 = list((np.float32(1.0) - r) ** 2) + list(r ** 2)
+                d1 = m_int + [(-m) % _M32 for m in m_int]
+                coord = list(range(k)) * 2
+            else:
+                v = aux[i, t].astype(np.float32)
+                s1 = list(np.abs(v))
+                d1 = [(-m) % _M32 if x > 0 else m
+                      for x, m in zip(v, m_int)]
+                coord = list(range(k))
+            cand = [(s1[a], d1[a]) for a in range(len(s1))]
+            cand += [(np.float32(s1[a] + s1[p]), (d1[a] + d1[p]) % _M32)
+                     for a in range(len(s1)) for p in range(a + 1, len(s1))
+                     if coord[a] != coord[p]]
+            ranked = sorted(range(len(cand)), key=lambda j: cand[j][0])
+            keys = [int(base[i, t])]
+            keys += [(int(base[i, t]) + cand[j][1]) % _M32
+                     for j in ranked[:probes - 1]]
+            keys += [int(base[i, t])] * (probes - len(keys))  # pad regime
+            out[i, t] = keys
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 1. T=1 bit-identity across the full layout matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", grids.METRICS)
+@pytest.mark.parametrize("kind", ALL_KINDS)
+class TestSingleProbeBitIdentity:
+    @pytest.mark.parametrize("mutated", [False, True],
+                             ids=["fresh", "mutated"])
+    def test_device_probes1_bit_identical(self, kind, metric, mutated):
+        corpus, queries = _data()
+        index = DeviceLSHIndex(_family(kind), metric=metric).build(corpus)
+        if mutated:
+            _mutate(index, corpus)
+        _assert_bit_identical(
+            index.query_batch(queries, topk=TOPK, probes=1),
+            index.query_batch(queries, topk=TOPK),
+            (kind, metric, "device", "mutated" if mutated else "fresh"))
+
+    @pytest.mark.parametrize("mutated", [False, True],
+                             ids=["fresh", "mutated"])
+    @pytest.mark.parametrize("shards", SHARD_COUNTS)
+    def test_sharded_probes1_bit_identical(self, kind, metric, shards,
+                                           mutated):
+        corpus, queries = _data()
+        index = ShardedLSHIndex(_family(kind), metric=metric,
+                                shards=shards).build(corpus)
+        if mutated:
+            _mutate(index, corpus)
+        grids.assert_query_path(index)
+        _assert_bit_identical(
+            index.query_batch(queries, topk=TOPK, probes=1),
+            index.query_batch(queries, topk=TOPK),
+            (kind, metric, shards, "mutated" if mutated else "fresh"))
+
+
+# ---------------------------------------------------------------------------
+# 2. Expansion correctness vs the host reference
+# ---------------------------------------------------------------------------
+
+
+def make_mults_for(fam):
+    return make_mults(0, fam.num_codes)   # the index default (seed=0)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+class TestExpansion:
+    def test_probe_keys_slot0_is_hash_keys(self, kind):
+        _, queries = _data()
+        fam = _family(kind)
+        mults = jnp.asarray(make_mults_for(fam))
+        keys = probing.probe_keys(fam, mults, queries, probes=1)
+        assert keys.shape == (N_QUERIES, fam.num_tables, 1)
+        np.testing.assert_array_equal(
+            np.asarray(keys[..., 0]),
+            np.asarray(fam.hash_keys(queries, mults)))
+        # slot 0 of a wide expansion is the same base key
+        wide = probing.probe_keys(fam, mults, queries, probes=6)
+        np.testing.assert_array_equal(np.asarray(wide[..., 0]),
+                                      np.asarray(keys[..., 0]))
+
+    @pytest.mark.parametrize("probes", [2, 8])
+    def test_probe_keys_match_reference_enumeration(self, kind, probes):
+        _, queries = _data()
+        fam = _family(kind)
+        mults = make_mults_for(fam)
+        got = np.asarray(probing.probe_keys(
+            fam, jnp.asarray(mults), queries, probes=probes))
+        want = _reference_probe_keys(fam, mults, queries, probes)
+        np.testing.assert_array_equal(got, want, err_msg=(kind, probes))
+
+    def test_first_keys_distinct(self, kind):
+        _, queries = _data()
+        fam = _family(kind)
+        c = probing.expansion_size(kind, fam.num_codes)
+        t = min(8, c + 1)
+        keys = np.asarray(probing.probe_keys(
+            fam, jnp.asarray(make_mults_for(fam)), queries, probes=t))
+        for i in range(N_QUERIES):
+            for tb in range(fam.num_tables):
+                assert len(set(keys[i, tb].tolist())) == t, (kind, i, tb)
+
+    def test_candidates_superset_and_match_host(self, kind):
+        corpus, queries = _data()
+        fam = _family(kind)
+        metric = grids.metric_for(kind)
+        host = HostLSHIndex(fam, metric=metric).build(corpus)
+        device = DeviceLSHIndex(fam, metric=metric).build(corpus)
+        for i in range(N_QUERIES):
+            x = queries[i]
+            one = set(host.candidates(x, probes=1).tolist())
+            four = set(host.candidates(x, probes=4).tolist())
+            assert one <= four, (kind, i)
+            cand, valid = device.candidates_batch(queries[i:i + 1], probes=4)
+            dev = set(np.asarray(cand)[0][np.asarray(valid)[0]].tolist())
+            assert dev == four, (kind, i)
+
+    def test_expansion_size_values(self, kind):
+        fam = _family(kind)
+        k = fam.num_codes
+        want = 2 * k * k if kind in E2LSH_KINDS else k + k * (k - 1) // 2
+        assert probing.expansion_size(kind, k) == want
+
+    def test_probes_validation(self, kind):
+        _, queries = _data()
+        fam = _family(kind)
+        with pytest.raises(ValueError, match="probes"):
+            probing.probe_keys(fam, jnp.asarray(make_mults_for(fam)),
+                               queries, probes=0)
+
+
+# ---------------------------------------------------------------------------
+# 3. Planner dedup: n_candidates is the distinct probed-union size
+# ---------------------------------------------------------------------------
+
+
+class TestPlannerDedup:
+    @pytest.mark.parametrize("probes", [1, 4])
+    @pytest.mark.parametrize("kind", ["tt-e2lsh", "cp-srp"])
+    def test_n_candidates_is_distinct_union(self, kind, probes):
+        corpus, queries = _data()
+        fam = _family(kind)
+        metric = grids.metric_for(kind)
+        host = HostLSHIndex(fam, metric=metric).build(corpus)
+        device = DeviceLSHIndex(fam, metric=metric).build(corpus)
+        _, _, n_cand = device.query_batch(queries, topk=TOPK, probes=probes)
+        want = [host.candidates(queries[i], probes=probes).size
+                for i in range(N_QUERIES)]
+        np.testing.assert_array_equal(np.asarray(n_cand), want,
+                                      err_msg=(kind, probes))
+
+    def test_pad_repeats_collapse(self):
+        """T - 1 > expansion size: the pad slots repeat the base key per
+        table, so every member of the base bucket enters the window T - C
+        extra times — the dedup must still count it once."""
+        corpus, queries = _data()
+        fam = make_family(jax.random.PRNGKey(3), "srp", DIMS, num_codes=2,
+                          num_tables=3, rank=2, bucket_width=1.0)
+        c = probing.expansion_size("srp", 2)
+        assert c == 3  # 2 singles + 1 pair; probes=8 pads 4 repeat slots
+        host = HostLSHIndex(fam, metric="cosine").build(corpus)
+        device = DeviceLSHIndex(fam, metric="cosine").build(corpus)
+        _, _, n_cand = device.query_batch(queries, topk=TOPK, probes=8)
+        want = [host.candidates(queries[i], probes=8).size
+                for i in range(N_QUERIES)]
+        np.testing.assert_array_equal(np.asarray(n_cand), want)
+
+    @pytest.mark.parametrize("shards", SHARD_COUNTS)
+    def test_sharded_n_candidates_matches_device(self, shards):
+        corpus, queries = _data()
+        fam = _family("tt-e2lsh")
+        device = DeviceLSHIndex(fam, metric="euclidean").build(corpus)
+        sharded = ShardedLSHIndex(fam, metric="euclidean",
+                                  shards=shards).build(corpus)
+        grids.assert_query_path(sharded)
+        for probes in (1, 4):
+            d = device.query_batch(queries, topk=TOPK, probes=probes)
+            s = sharded.query_batch(queries, topk=TOPK, probes=probes)
+            np.testing.assert_array_equal(np.asarray(s[0]),
+                                          np.asarray(d[0]))
+            np.testing.assert_array_equal(np.asarray(s[2]),
+                                          np.asarray(d[2]))
+
+
+# ---------------------------------------------------------------------------
+# 4. Sampling query modes
+# ---------------------------------------------------------------------------
+
+
+def _host_union_and_weights(host, x, probes):
+    """(union set, multiplicity dict) counting every (table, probe-slot)
+    window ticket — including repeated probe keys in the pad regime —
+    exactly as the device's raw pre-dedup window does."""
+    mults = host._mults
+    keys = np.asarray(probing.probe_keys(
+        host.family, jnp.asarray(mults),
+        jax.tree.map(lambda a: a[None], x), probes=int(probes)))
+    weights: dict[int, int] = {}
+    for t in range(host.family.num_tables):
+        for key in keys[0, t]:
+            for member in host._tables[t].get(int(key), ()):
+                weights[member] = weights.get(member, 0) + 1
+    return set(weights), weights
+
+
+class TestSamplingModes:
+    KIND, PROBES = "e2lsh", 4
+
+    def _build(self, metric="euclidean"):
+        corpus, queries = _data()
+        fam = _family(self.KIND)
+        host = HostLSHIndex(fam, metric=metric).build(corpus)
+        device = DeviceLSHIndex(fam, metric=metric).build(corpus)
+        return corpus, queries, host, device
+
+    @pytest.mark.parametrize("mode", ["uniform", "weighted"])
+    def test_samples_are_distinct_members_of_probed_union(self, mode):
+        _, queries, host, device = self._build()
+        rng = jax.random.PRNGKey(17)
+        ids, scores, n_cand = device.query_batch(
+            queries, topk=TOPK, probes=self.PROBES, mode=mode, rng=rng)
+        t_ids, _, t_n = device.query_batch(queries, topk=TOPK,
+                                           probes=self.PROBES)
+        # n_candidates agrees with the exact top-k path (same dedup)
+        np.testing.assert_array_equal(np.asarray(n_cand), np.asarray(t_n))
+        for i in range(N_QUERIES):
+            union, _ = _host_union_and_weights(host, queries[i], self.PROBES)
+            row = np.asarray(ids)[i]
+            valid = row[row >= 0].tolist()
+            assert len(valid) == min(TOPK, len(union))
+            assert len(set(valid)) == len(valid)          # distinct
+            assert set(valid) <= union, (mode, i)
+
+    @pytest.mark.parametrize("mode", ["uniform", "weighted"])
+    def test_topk_at_least_union_returns_whole_union(self, mode):
+        _, queries, host, device = self._build()
+        big = N_CORPUS + 1
+        ids, _, _ = device.query_batch(queries, topk=big, probes=self.PROBES,
+                                       mode=mode, rng=jax.random.PRNGKey(5))
+        for i in range(N_QUERIES):
+            union, _ = _host_union_and_weights(host, queries[i], self.PROBES)
+            row = np.asarray(ids)[i]
+            assert set(row[row >= 0].tolist()) == union, (mode, i)
+
+    @pytest.mark.parametrize("mode", ["uniform", "weighted"])
+    def test_seed_replay_determinism(self, mode):
+        _, queries, _, device = self._build()
+        a = device.query_batch(queries, topk=TOPK, probes=self.PROBES,
+                               mode=mode, rng=jax.random.PRNGKey(23))
+        b = device.query_batch(queries, topk=TOPK, probes=self.PROBES,
+                               mode=mode, rng=jax.random.PRNGKey(23))
+        _assert_bit_identical(a, b, mode)
+        # different seeds give different draws: 64 independent single-item
+        # draws of the same query cannot coincide across seeds (the fixture
+        # union has >= 5 members; checked deterministic for these seeds)
+        batch = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[:1], (64,) + x.shape[1:]), queries)
+        c = device.query_batch(batch, topk=1, probes=self.PROBES,
+                               mode=mode, rng=jax.random.PRNGKey(23))
+        d = device.query_batch(batch, topk=1, probes=self.PROBES,
+                               mode=mode, rng=jax.random.PRNGKey(24))
+        assert not np.array_equal(np.asarray(c[0]), np.asarray(d[0])), (
+            "different seeds drew identical samples across 64 draws")
+
+    @pytest.mark.parametrize("shards", SHARD_COUNTS)
+    @pytest.mark.parametrize("mode", ["uniform", "weighted"])
+    def test_sharded_sampling_membership(self, mode, shards):
+        corpus, queries, host, device = self._build()
+        sharded = ShardedLSHIndex(_family(self.KIND), metric="euclidean",
+                                  shards=shards).build(corpus)
+        rng = jax.random.PRNGKey(31)
+        ids, _, n_cand = sharded.query_batch(
+            queries, topk=TOPK, probes=self.PROBES, mode=mode, rng=rng)
+        _, _, t_n = device.query_batch(queries, topk=TOPK,
+                                       probes=self.PROBES)
+        np.testing.assert_array_equal(np.asarray(n_cand), np.asarray(t_n))
+        for i in range(N_QUERIES):
+            union, _ = _host_union_and_weights(host, queries[i], self.PROBES)
+            row = np.asarray(ids)[i]
+            valid = row[row >= 0].tolist()
+            assert len(set(valid)) == len(valid) and set(valid) <= union
+
+    def test_sampling_skips_tombstones(self):
+        corpus, queries, _, device = self._build()
+        _mutate(device, corpus)
+        eff = device.effective_corpus()
+        n = jax.tree.leaves(eff)[0].shape[0]
+        for mode in ("uniform", "weighted"):
+            ids, _, _ = device.query_batch(
+                queries, topk=TOPK, probes=self.PROBES, mode=mode,
+                rng=jax.random.PRNGKey(41))
+            row = np.asarray(ids)
+            assert row.max() < n
+            # ids are effective (live) ids: parity with the topk path's
+            # candidate universe
+            t_ids, _, _ = device.query_batch(queries, topk=N_CORPUS,
+                                             probes=self.PROBES)
+            universe = set(np.asarray(t_ids)[np.asarray(t_ids) >= 0]
+                           .tolist())
+            assert set(row[row >= 0].tolist()) <= universe
+
+
+class TestSamplingStatistics:
+    """Seeded chi-square checks: one query replicated B times in a single
+    batch (independent per-row draws), topk=1, so each row contributes one
+    categorical sample. Bounds are ~6 sigma above the chi-square mean plus
+    a flat margin — fixed seeds make the test fully deterministic; the
+    bound only documents how far from the advertised distribution a broken
+    sampler would land."""
+
+    B = 2048
+    PROBES = 8   # the wide expansion: unions of ~10-30 members with raw
+                 # window multiplicities spread 1..4 on the grid fixture
+
+    def _freqs(self, kind, mode, seed):
+        corpus, queries = _data()
+        fam = _family(kind)
+        metric = grids.metric_for(kind)
+        host = HostLSHIndex(fam, metric=metric).build(corpus)
+        device = DeviceLSHIndex(fam, metric=metric).build(corpus)
+        x = queries[1]
+        batch = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (self.B,) + a.shape), x)
+        ids, _, _ = device.query_batch(batch, topk=1, probes=self.PROBES,
+                                       mode=mode, rng=jax.random.PRNGKey(seed))
+        drawn = np.asarray(ids)[:, 0]
+        assert (drawn >= 0).all()
+        union, weights = _host_union_and_weights(host, x, self.PROBES)
+        assert len(union) >= 5, "fixture bucket structure collapsed"
+        counts = {m: int((drawn == m).sum()) for m in union}
+        assert sum(counts.values()) == self.B   # every draw is a member
+        return counts, union, weights
+
+    @staticmethod
+    def _chi2(counts, expected):
+        return sum((counts[m] - e) ** 2 / e for m, e in expected.items())
+
+    @staticmethod
+    def _bound(df):
+        return 2 * df + 6 * (2 * df) ** 0.5 + 20
+
+    @pytest.mark.parametrize("kind", ["e2lsh", "tt-srp"])
+    def test_uniform_frequencies(self, kind):
+        counts, union, _ = self._freqs(kind, "uniform", seed=101)
+        expected = {m: self.B / len(union) for m in union}
+        df = len(union) - 1
+        assert self._chi2(counts, expected) < self._bound(df), (
+            kind, counts, expected)
+
+    @pytest.mark.parametrize("kind", ["e2lsh", "tt-srp"])
+    def test_weighted_frequencies(self, kind):
+        counts, union, weights = self._freqs(kind, "weighted", seed=202)
+        total = sum(weights.values())
+        expected = {m: self.B * weights[m] / total for m in union}
+        df = len(union) - 1
+        assert max(weights.values()) > min(weights.values()), (
+            "fixture has no weight spread; the test cannot distinguish "
+            "weighted from uniform")
+        assert self._chi2(counts, expected) < self._bound(df), (
+            kind, counts, expected)
+
+    def test_weighted_differs_from_uniform(self):
+        """The weighted draw must NOT fit the uniform null: with the pad /
+        overlap multiplicities of the fixture, the uniform-expected chi2 of
+        the weighted draw exceeds the bound that the correctly-matched
+        expectation stays under."""
+        counts, union, weights = self._freqs("e2lsh", "weighted", seed=202)
+        uniform_expected = {m: self.B / len(union) for m in union}
+        df = len(union) - 1
+        assert self._chi2(counts, uniform_expected) > self._bound(df)
+
+
+class TestModeContracts:
+    def _index(self):
+        corpus, queries = _data()
+        return (DeviceLSHIndex(_family("e2lsh"),
+                               metric="euclidean").build(corpus), queries)
+
+    def test_unknown_mode_rejected(self):
+        index, queries = self._index()
+        with pytest.raises(ValueError, match="unknown query mode"):
+            index.query_batch(queries, mode="nearest")
+
+    def test_topk_mode_rejects_rng(self):
+        index, queries = self._index()
+        with pytest.raises(ValueError, match="sampling modes only"):
+            index.query_batch(queries, mode="topk",
+                              rng=jax.random.PRNGKey(0))
+
+    @pytest.mark.parametrize("mode", ["uniform", "weighted"])
+    def test_sampling_requires_rng(self, mode):
+        index, queries = self._index()
+        with pytest.raises(ValueError, match="PRNGKey"):
+            index.query_batch(queries, mode=mode)
+
+    def test_service_contracts(self):
+        corpus, queries = _data()
+        fam = _family("e2lsh")
+        with pytest.raises(ValueError, match="probes"):
+            LSHService(fam, probes=0)
+        with pytest.raises(ValueError, match="query_mode"):
+            LSHService(fam, query_mode="nearest")
+        svc = LSHService(fam, metric="euclidean")
+        svc.build(corpus)
+        with pytest.raises(ValueError, match="seed"):
+            svc.query_arrays(queries, mode="uniform")       # no seed
+        with pytest.raises(ValueError, match="seed"):
+            svc.query_arrays(queries, mode="topk", seed=1)  # spurious seed
+        with pytest.raises(ValueError, match="unknown query mode"):
+            svc.query_arrays(queries, mode="nearest")
+
+    def test_service_mode_counters_and_replay(self):
+        corpus, queries = _data()
+        svc = LSHService(_family("e2lsh"), metric="euclidean", probes=4)
+        svc.build(corpus)
+        svc.query_arrays(queries, topk=TOPK)
+        a = svc.query_arrays(queries, topk=TOPK, mode="uniform", seed=99)
+        b = svc.query_arrays(queries, topk=TOPK, mode="uniform", seed=99)
+        svc.query_arrays(queries, topk=TOPK, mode="weighted", seed=7)
+        _assert_bit_identical(a, b, "same seed must replay the same draw")
+        assert svc.stats.topk_queries == N_QUERIES
+        assert svc.stats.uniform_queries == 2 * N_QUERIES
+        assert svc.stats.weighted_queries == N_QUERIES
+        assert svc.stats.queries == 4 * N_QUERIES
+
+
+# ---------------------------------------------------------------------------
+# 5. Recall pin: the (L, T) trade-off the multi-probe expansion exists for
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestRecallTradeoff:
+    """A quarter of the tables at T=8 must not lose more than 0.02
+    recall@10 vs the full-L single-probe index on a seeded clustered 4k
+    corpus (benchmarks/index_multiprobe sweeps the same grid; measured
+    slack at this seed is ~ +0.03 — multi-probe at L/4 *beats* L)."""
+
+    def test_quarter_tables_t8_holds_recall(self):
+        dims = (8, 8, 8)
+        n_clusters, per_cluster, noise = 512, 8, 0.15
+        kc, kn, kq, kf = jax.random.split(jax.random.PRNGKey(7), 4)
+        centers = jax.random.normal(kc, (n_clusters,) + dims)
+        corpus = (jnp.repeat(centers, per_cluster, axis=0)
+                  + noise * jax.random.normal(
+                      kn, (n_clusters * per_cluster,) + dims))
+        queries = centers[:128] + noise * jax.random.normal(
+            kq, (128,) + dims)
+
+        def build(num_tables):
+            fam = make_family(kf, "cp-e2lsh", dims, num_codes=4,
+                              num_tables=num_tables, rank=2,
+                              bucket_width=16.0)
+            return DeviceLSHIndex(fam, metric="euclidean").build(corpus)
+
+        full = recall_at_k(build(8), queries, topk=10, probes=1)
+        quarter = recall_at_k(build(2), queries, topk=10, probes=8)
+        assert quarter["recall"] >= full["recall"] - 0.02, (quarter, full)
+        # and multi-probe actually probes more than it keeps tables
+        assert quarter["mean_candidates"] > 0
