@@ -4,11 +4,17 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-index bench-index-sharded bench-index-mut \
-	bench-multiprobe bench-ingest bench-hash bench-kernels
+.PHONY: test test-fast bench bench-index bench-index-sharded \
+	bench-index-mut bench-multiprobe bench-ingest bench-slo bench-hash \
+	bench-kernels
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+# The CI default leg: skips the slow-marked redundant grid cells
+# (tests/grids.py) — full coverage stays on `make test` / the full CI leg.
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
 
 bench:
 	$(PYTHON) -m benchmarks.run
@@ -27,6 +33,9 @@ bench-multiprobe:
 
 bench-ingest:
 	$(PYTHON) -m benchmarks.index_ingest
+
+bench-slo:
+	$(PYTHON) -m benchmarks.serving_slo
 
 bench-hash:
 	$(PYTHON) -m benchmarks.hash_throughput

@@ -1,0 +1,392 @@
+"""p99 SLO harness for the serving plane: open-loop arrivals against the
+micro-batch scheduler, with and without background compaction.
+
+The question this bench answers is the PR's acceptance gate: does a
+``compact()``/``rebalance()`` running behind the double-buffered swap stall
+concurrently-arriving queries? An open-loop Poisson arrival process (the
+offered load never waits for responses, so queueing delay is *measured*,
+not hidden) drives single-query requests through ``ServingScheduler``;
+each request's latency is completion minus its scheduled arrival. The
+offered rate is calibrated per shard count to ``UTILIZATION`` of the
+measured warmed dispatch capacity (capped at ``BENCH_SLO_RATE``): on CPU a
+sharded vmap query program costs several times its single-shard
+equivalent, and an offered load past saturation measures queueing
+collapse, not swap stalls. ``max_batch`` shrinks with S for the same
+reason — a 32-wide sharded batch is one multi-hundred-ms program, so
+coalescing that deep *adds* latency at S > 1. Two phases per shard count
+S in {1, 2, 4}:
+
+  quiet      — queries only.
+  compacting — the same arrival process while the ingest lane continuously
+               inserts delta batches and runs prepare-compact/apply-swap
+               cycles, so every query races a shadow-store build.
+
+The phases run *interleaved* as ``N_BLOCKS`` alternating quiet/compacting
+blocks (same per-block arrival seeds, latencies pooled per phase) rather
+than as two long monolithic windows: single-core container environments
+throw sporadic hundred-ms hiccups (host scheduling, page cache) that a
+monolithic design lands entirely inside one phase, corrupting the ratio
+in either direction — blocking spreads them evenly across both pools.
+
+CSV rows (name,us_per_call,derived), per shard count S:
+
+  serving_slo/build_s{S}        us = service build, derived = n
+  serving_slo/quiet_s{S}        us = p50 latency, derived =
+                                p99 ms | p99.9 ms | goodput req/s
+  serving_slo/compacting_s{S}   same, measured against background swaps,
+                                + swap builds completed
+  serving_slo/p99_ratio_s{S}    derived = compacting p99 / quiet p99 on
+                                the median-of-block-p99s estimator (the
+                                acceptance gate is <= 1.5), + the pooled
+                                single-distribution ratio
+  serving_slo/stall_s{S}        us = worst compacting-phase latency,
+                                derived = mean build-to-build interval ms
+                                | ratio | within-budget flag (a query
+                                stalling out a whole swap interval means
+                                the build ran ON the query path, not
+                                beside it)
+  serving_slo/coalesce_s{S}     us = deadline, derived = mean coalesced
+                                batch | lane batches
+
+``run()`` appends one trajectory entry to BENCH_index.json (tagged
+``"bench": "serving_slo"``). BENCH_SLO_N / BENCH_SLO_REQS / BENCH_SLO_RATE
+shrink it for smoke runs.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import append_trajectory, emit
+from repro.core import make_family
+from repro.serving.lsh_service import LSHService
+from repro.serving.scheduler import ServingScheduler
+
+DIMS = (8, 8, 8)
+N_CORPUS = int(os.environ.get("BENCH_SLO_N", 20_000))
+N_REQS = int(os.environ.get("BENCH_SLO_REQS", 400))     # per phase
+RATE_QPS = float(os.environ.get("BENCH_SLO_RATE", 150.0))  # offered-rate cap
+PER_CLUSTER = 8
+NOISE = 0.15
+SHARD_COUNTS = (1, 2, 4)
+TOPK = 10
+BUCKET_CAP = 64
+MAX_BATCH = 32                # query-lane size flush at S=1 (shrinks with S)
+DEADLINE_MS = 25.0            # query-lane coalescing window: sized to the
+                              # per-program service time of the sharded CPU
+                              # query (tens of ms), so the lane actually
+                              # coalesces at the calibrated rates instead of
+                              # dispatching singletons
+INSERT_BATCH = 512            # ingest-lane churn per swap cycle
+GATE_RATIO = 1.5              # acceptance: compacting p99 <= 1.5x quiet p99
+N_BLOCKS = 6                  # alternating quiet/compacting blocks per phase
+UTILIZATION = 0.2             # offered rate as a fraction of measured
+                              # warmed dispatch capacity per shard count.
+                              # Capacity is measured closed-loop through
+                              # the scheduler, but the open loop coalesces
+                              # shallower than the closed burst, so real
+                              # sustainable capacity is below the measured
+                              # cap; the rest is headroom for churn
+                              # programs, which share the same CPU cores.
+PAUSE_FRAC = 3.0              # churn duty cycle: sleep this fraction of
+                              # each cycle's wall between swap cycles
+                              # (compaction is periodic, not a busy loop)
+
+
+def _data():
+    kc, kn, kq, ki, kf = jax.random.split(jax.random.PRNGKey(41), 5)
+    n_clusters = max(N_CORPUS // PER_CLUSTER, 1)
+    centers = jax.random.normal(kc, (n_clusters,) + DIMS)
+    corpus = (jnp.repeat(centers, PER_CLUSTER, axis=0)[:N_CORPUS]
+              + NOISE * jax.random.normal(kn, (N_CORPUS,) + DIMS))
+    queries = np.asarray(
+        jnp.tile(centers, (256 // n_clusters + 1,) + (1,) * len(DIMS))[:256]
+        + NOISE * jax.random.normal(kq, (256,) + DIMS))
+    inserts = np.asarray(
+        jnp.tile(centers, (INSERT_BATCH // n_clusters + 1,)
+                 + (1,) * len(DIMS))[:INSERT_BATCH]
+        + NOISE * jax.random.normal(ki, (INSERT_BATCH,) + DIMS))
+    fam = make_family(kf, "cp-e2lsh", DIMS, num_codes=4, num_tables=8,
+                      rank=2, bucket_width=16.0)
+    return corpus, queries, inserts, fam
+
+
+def _percentiles(lat_ms: np.ndarray) -> dict:
+    return {"p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99)),
+            "p999_ms": float(np.percentile(lat_ms, 99.9)),
+            "max_ms": float(lat_ms.max())}
+
+
+def _open_loop(sched: ServingScheduler, queries: np.ndarray, *,
+               n_reqs: int, rate_qps: float, seed: int) -> dict:
+    """Drive ``n_reqs`` Poisson arrivals at ``rate_qps``; latency is
+    completion minus *scheduled* arrival (open loop: a response that
+    queues behind a stall keeps accruing latency)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n_reqs))
+    done = np.zeros(n_reqs)
+    futures = []
+    t0 = time.perf_counter()
+    for i in range(n_reqs):
+        wait = arrivals[i] - (time.perf_counter() - t0)
+        if wait > 0:
+            time.sleep(wait)
+        fut = sched.query(queries[i % len(queries)], topk=TOPK)
+        fut.add_done_callback(
+            lambda f, i=i: done.__setitem__(i, time.perf_counter() - t0))
+        futures.append(fut)
+    for fut in futures:
+        fut.result(timeout=120)
+    lat_ms = (done - arrivals) * 1e3
+    wall = done.max() - arrivals[0]
+    return {**_percentiles(lat_ms),
+            "goodput_rps": float(n_reqs / max(wall, 1e-9)),
+            "offered_rps": rate_qps, "n_reqs": n_reqs,
+            "wall_s": float(wall), "lat_ms": lat_ms}
+
+
+def _phase(blocks: list[dict], rate_qps: float) -> dict:
+    """Pool the per-block latency samples of one phase into its summary.
+
+    ``p99_ms`` (and the other pooled percentiles) describe the phase as
+    one distribution; ``p99_med_ms`` — the *median of the per-block
+    p99s* — is what the acceptance ratio uses. The pooled p99 of a few
+    hundred samples is an extreme order statistic: one ~0.5 s host freeze
+    (observed sporadically on single-core containers) lands in exactly
+    one block and drags it arbitrarily, in whichever phase it happens to
+    hit. The median across blocks ignores any minority of corrupted
+    blocks while still being an honest per-block tail measurement."""
+    lat_ms = np.concatenate([b["lat_ms"] for b in blocks])
+    wall = float(sum(b["wall_s"] for b in blocks))
+    block_p99s = [b["p99_ms"] for b in blocks]
+    return {**_percentiles(lat_ms),
+            "p99_med_ms": float(np.median(block_p99s)),
+            "block_p99s_ms": [float(p) for p in block_p99s],
+            "goodput_rps": float(len(lat_ms) / max(wall, 1e-9)),
+            "offered_rps": rate_qps, "n_reqs": int(len(lat_ms)),
+            "wall_s": wall}
+
+
+class _Churn:
+    """Ingest-lane churn: keep swap builds racing the query lane — insert
+    a delta batch, tombstone it, then prepare+flip — while enabled. Each
+    cycle returns the store to its pre-cycle size, so the swaps exercise
+    the flip (not fresh jit compiles of ever-growing shapes: production
+    stores cycle through warmed program shapes, and so does the bench).
+    ``PAUSE_FRAC`` of each cycle's wall is slept between cycles —
+    compaction is a periodic background job, not a busy loop.
+
+    ``enable()``/``disable()`` gate the cycles so the interleaved block
+    design can alternate quiet and compacting blocks on one churn thread;
+    ``disable()`` blocks until the in-flight cycle (if any) completes, so
+    a quiet block never overlaps a swap build."""
+
+    def __init__(self, sched: ServingScheduler, svc: LSHService, inserts):
+        self.sched, self.svc, self.inserts = sched, svc, inserts
+        self.builds = 0
+        self.build_ms: list[float] = []
+        self._stop = False
+        import threading
+        self._go = threading.Event()
+        self._idle = threading.Event()
+        self._idle.set()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self):
+        n0 = self.svc.index.size
+        n_ins = len(self.inserts)
+        while not self._stop:
+            if not self._go.wait(timeout=0.05):
+                continue
+            if self._stop:
+                return
+            self._idle.clear()
+            try:
+                t0 = time.perf_counter()
+                self.sched.insert(self.inserts).result(timeout=120)
+                self.sched.delete(
+                    np.arange(n0, n0 + n_ins)).result(timeout=120)
+                t1 = time.perf_counter()
+                self.sched.compact().result(timeout=120)
+                t2 = time.perf_counter()
+                self.build_ms.append((t2 - t1) * 1e3)
+                self.builds += 1
+            finally:
+                self._idle.set()
+            pause_until = time.perf_counter() + PAUSE_FRAC * (t2 - t0)
+            while time.perf_counter() < pause_until and not self._stop:
+                time.sleep(0.01)
+
+    def enable(self) -> None:
+        self._go.set()
+
+    def disable(self, timeout_s: float = 120.0) -> None:
+        self._go.clear()
+        self._idle.wait(timeout_s)
+
+    def settle(self, timeout_s: float = 120.0) -> None:
+        """Run exactly one unrecorded cycle, then zero the counters: the
+        first build through a fresh scheduler pays one-time
+        allocator/arena warm-up (measured ~1.5x the steady-state build),
+        which is start-up transient, not swap behavior — the measured
+        blocks see steady-state cycles only, matching the quiet settle
+        pass."""
+        self.enable()
+        deadline = time.perf_counter() + timeout_s
+        while self.builds < 1 and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        self.disable(timeout_s)
+        self.builds = 0
+        self.build_ms = []
+
+    def stop(self) -> float:
+        self._stop = True
+        self._go.set()
+        self._thread.join()
+        return float(np.mean(self.build_ms)) if self.build_ms else 0.0
+
+
+def _capacity_rps(sched: ServingScheduler, queries: np.ndarray,
+                  n: int = 96) -> float:
+    """Closed-loop throughput ceiling THROUGH the scheduler: submit ``n``
+    queries back-to-back and measure the drain rate. Unlike a direct
+    warmed-dispatch estimate this includes every serving-path cost the
+    open loop will pay — lane threads, GIL, stacking, future resolution,
+    coalescing efficiency — so a fraction of it is a rate the scheduler
+    can actually sustain (a direct estimate overshoots by 2-3x and the
+    open loop then measures queueing collapse, not swap behavior)."""
+    t0 = time.perf_counter()
+    futures = [sched.query(queries[i % len(queries)], topk=TOPK)
+               for i in range(n)]
+    for fut in futures:
+        fut.result(timeout=120)
+    return n / (time.perf_counter() - t0)
+
+
+def run() -> list[str]:
+    corpus, queries, inserts, fam = _data()
+    rows = []
+    traj: dict = {"bench": "serving_slo", "n": N_CORPUS, "reqs": N_REQS,
+                  "n_blocks": N_BLOCKS, "rate_cap_rps": RATE_QPS,
+                  "utilization": UTILIZATION, "deadline_ms": DEADLINE_MS,
+                  "gate_ratio": GATE_RATIO, "shards": {}}
+    for s in SHARD_COUNTS:
+        max_batch = max(MAX_BATCH // (s * s), 4)
+        # every pow2 shape the lane can flush — all must be pre-warmed
+        batch_grid = [1 << p for p in range(max_batch.bit_length())
+                      if 1 << p <= max_batch]
+        t0 = time.perf_counter()
+        svc = LSHService(fam, metric="euclidean", shards=s,
+                         bucket_cap=BUCKET_CAP, max_deltas=64).build(corpus)
+        build_us = (time.perf_counter() - t0) * 1e6
+        rows.append(emit(f"serving_slo/build_s{s}", build_us, N_CORPUS))
+        with ServingScheduler(svc, max_batch=max_batch,
+                              deadline_ms=DEADLINE_MS) as sched:
+            # warm the jit cache across the pow2 batch shapes the lane
+            # will dispatch — against the pristine store, the one-delta
+            # store the churn cycles through, and the compacted store —
+            # so neither phase pays first-compile cost
+            n0 = svc.index.size
+            for b in batch_grid:
+                svc.query_arrays(queries[:b], topk=TOPK)
+            svc.insert(inserts)
+            for b in batch_grid:
+                svc.query_arrays(queries[:b], topk=TOPK)
+            svc.delete(np.arange(n0, n0 + len(inserts)))
+            svc.compact()
+            for b in batch_grid:
+                svc.query_arrays(queries[:b], topk=TOPK)
+            svc.stats.reset()
+            # offered load: UTILIZATION of the scheduler's own measured
+            # closed-loop capacity, capped at RATE_QPS — saturating a
+            # slow sharded CPU program measures queueing collapse, not
+            # swap stalls
+            _capacity_rps(sched, queries)          # warm the burst path
+            cap_rps = _capacity_rps(sched, queries)
+            rate = min(RATE_QPS, UTILIZATION * cap_rps)
+
+            # unrecorded settle pass: let the lane, allocator, and OS
+            # scheduler reach steady state so the quiet blocks' tail
+            # measures serving, not start-up transients
+            _open_loop(sched, queries, n_reqs=max(N_REQS // 8, 16),
+                       rate_qps=rate, seed=11)
+            churn = _Churn(sched, svc, inserts)
+            churn.settle()
+            sched.stats.reset()   # coalesce row: measured blocks only
+            # interleaved blocks: quiet block k and compacting block k
+            # replay the SAME arrival process (seed) with churn as the
+            # only difference, and alternating spreads environment hiccups
+            # evenly across both latency pools
+            block_reqs = max(N_REQS // N_BLOCKS, 16)
+            quiet_blocks, comp_blocks = [], []
+            for k in range(N_BLOCKS):
+                quiet_blocks.append(_open_loop(
+                    sched, queries, n_reqs=block_reqs, rate_qps=rate,
+                    seed=3 + k))
+                churn.enable()
+                comp_blocks.append(_open_loop(
+                    sched, queries, n_reqs=block_reqs, rate_qps=rate,
+                    seed=3 + k))
+                churn.disable()
+            quiet = _phase(quiet_blocks, rate)
+            rows.append(emit(
+                f"serving_slo/quiet_s{s}", quiet["p50_ms"] * 1e3,
+                f"p99={quiet['p99_ms']:.2f}ms|p99.9={quiet['p999_ms']:.2f}"
+                f"ms|offered={rate:.0f}/s|goodput="
+                f"{quiet['goodput_rps']:.0f}/s"))
+
+            compacting = _phase(comp_blocks, rate)
+            mean_build_ms = churn.stop()
+            compacting["swap_builds"] = churn.builds
+            rows.append(emit(
+                f"serving_slo/compacting_s{s}", compacting["p50_ms"] * 1e3,
+                f"p99={compacting['p99_ms']:.2f}ms|p99.9="
+                f"{compacting['p999_ms']:.2f}ms|goodput="
+                f"{compacting['goodput_rps']:.0f}/s|builds={churn.builds}"))
+
+            # gate on the median of per-block p99s (see _phase): robust
+            # to a container freeze corrupting one block of either phase
+            ratio = (compacting["p99_med_ms"]
+                     / max(quiet["p99_med_ms"], 1e-9))
+            pooled = compacting["p99_ms"] / max(quiet["p99_ms"], 1e-9)
+            rows.append(emit(f"serving_slo/p99_ratio_s{s}", 0.0,
+                             f"{ratio:.2f}|pooled={pooled:.2f}"))
+            # stall gate: no query may wait out a whole build-to-build
+            # interval — if one did, a swap build blocked the query lane
+            # instead of running beside it
+            interval_ms = compacting["wall_s"] * 1e3 / max(churn.builds, 1)
+            stall_ratio = compacting["max_ms"] / max(interval_ms, 1e-9)
+            within = compacting["max_ms"] <= max(interval_ms, 1.0)
+            rows.append(emit(
+                f"serving_slo/stall_s{s}", compacting["max_ms"] * 1e3,
+                f"interval={interval_ms:.1f}ms|build={mean_build_ms:.1f}ms|"
+                f"ratio={stall_ratio:.2f}|{'ok' if within else 'STALL'}"))
+            st = sched.stats
+            rows.append(emit(
+                f"serving_slo/coalesce_s{s}", DEADLINE_MS * 1e3,
+                f"mean_batch={st.mean_batch:.1f}|batches={st.batches}"))
+            traj["shards"][str(s)] = {
+                "build_us": build_us, "max_batch": max_batch,
+                "offered_rps": rate, "capacity_rps": cap_rps,
+                "quiet": quiet, "compacting": compacting,
+                "p99_ratio": ratio,
+                "mean_swap_build_ms": mean_build_ms,
+                "swap_interval_ms": interval_ms,
+                "max_stall_ms": compacting["max_ms"],
+                "stall_within_interval": bool(within),
+                "coalesce_mean_batch": st.mean_batch,
+            }
+    append_trajectory(traj)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

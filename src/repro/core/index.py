@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any
 
 import jax
@@ -157,9 +158,29 @@ class _LSHIndexBase:
         return self.corpus
 
 
+@dataclasses.dataclass(frozen=True)
+class PendingSwap:
+    """A fully-built shadow store awaiting publication (the second buffer
+    of the double-buffered swap).
+
+    ``prepare_compact()`` / ``prepare_rebalance()`` build the replacement
+    store off the query path — every device array materialized and placed —
+    and hand back one of these; ``apply_swap()`` publishes it as a pointer
+    flip. ``source``/``generation`` pin the store state the shadow was
+    derived from, so a swap can never silently discard mutations that
+    landed while the shadow was building."""
+
+    store: SegmentStore
+    kind: str                 # "compact" | "rebalance"
+    source: SegmentStore
+    generation: int
+    corpus_cache: Any = None  # sharded: the ``_corpus`` value post-flip
+
+
 class _SegmentedIndex(_LSHIndexBase):
     """Store-backed mutation + introspection API shared by the device and
-    sharded deployments. Subclasses implement ``_new_store``."""
+    sharded deployments. Subclasses implement ``_new_store`` and
+    ``_build_compact_store``."""
 
     store: SegmentStore | None
 
@@ -199,8 +220,7 @@ class _SegmentedIndex(_LSHIndexBase):
         keys = bucket_keys(self.family, self._mults, batch, batch_size)
         self.store.append_delta(
             build_segment(keys, batch, bucket_cap=self.bucket_cap))
-        if len(self.store.deltas) > self.max_deltas:
-            self.compact()
+        self._maybe_auto_compact()
         return self
 
     def delete(self, ids) -> int:
@@ -209,25 +229,93 @@ class _SegmentedIndex(_LSHIndexBase):
         as in a fresh rebuild without them. Returns the number deleted."""
         return self.store.delete_effective(np.asarray(ids))
 
+    def _maybe_auto_compact(self) -> None:
+        """Compact when the delta count exceeds ``max_deltas``, accounting
+        the fold's wall time separately (``auto_compact_s`` /
+        ``auto_compactions``) so callers timing an ``insert`` can split the
+        mutation cost from the compaction cost it occasionally triggers."""
+        if len(self.store.deltas) <= self.max_deltas:
+            return
+        t0 = time.perf_counter()
+        self.compact()
+        jax.block_until_ready(self.store.base.sorted_keys)
+        self.auto_compact_s += time.perf_counter() - t0
+        self.auto_compactions += 1
+
+    def _reset_mutation_state(self) -> None:
+        """Rebuilding (``build()`` on a live index) starts a fresh mutation
+        history — stale compaction/rebalance counters would otherwise
+        describe the previous corpus."""
+        self.compactions = 0
+        self.auto_compactions = 0
+        self.auto_compact_s = 0.0
+
+    # -- double-buffered swap -----------------------------------------------
+
+    def prepare_compact(self) -> PendingSwap | None:
+        """Build the compacted replacement store OFF the query path.
+
+        Gathers the stored corpus-order keys of every surviving item (no
+        re-hashing), rebuilds the sorted tables, places every array, and
+        blocks until all of it has landed — the live store is untouched and
+        queries keep serving it throughout. Returns the pending shadow
+        store for ``apply_swap`` (None when the store is pristine and there
+        is nothing to fold)."""
+        store = self.store
+        if not store.mutated:
+            return None
+        if store.n_live == 0:
+            raise ValueError("cannot compact an index with no live items")
+        shadow = self._build_compact_store(store)
+        jax.block_until_ready(jax.tree.leaves(shadow.view.all_arrays))
+        return PendingSwap(store=shadow, kind="compact", source=store,
+                           generation=store.generation)
+
+    def apply_swap(self, pending: PendingSwap | None):
+        """Publish a prepared shadow store: one pointer flip, no device
+        work. Queries in flight finish on whichever store they pinned at
+        dispatch (results are bit-identical to that store's answers);
+        queries dispatched after the flip serve the new store. Raises
+        RuntimeError if the live store mutated after ``pending`` was
+        prepared — the shadow would silently drop those mutations —
+        so callers (the serving scheduler's ingest lane) must serialize
+        mutations with the prepare/apply pair."""
+        if pending is None:
+            return self
+        store = self.store
+        if (store is not pending.source
+                or store.generation != pending.generation):
+            raise RuntimeError(
+                "store mutated since this swap was prepared; the shadow "
+                "store is stale — call prepare again (serialize mutations "
+                "with the prepare/apply pair, e.g. on the serving "
+                "scheduler's ingest lane)")
+        self._pre_publish(pending)
+        self.store = pending.store      # the flip
+        if pending.kind == "compact":
+            self.compactions += 1
+        else:
+            self.rebalances += 1
+        return self
+
+    def _pre_publish(self, pending: PendingSwap) -> None:
+        """Subclass hook: index-side cache updates that must ride the flip."""
+
     def compact(self):
         """Merge base + deltas minus tombstones into one fresh base segment.
 
-        Gathers the stored corpus-order keys of every surviving item (no
-        re-hashing) and rebuilds the sorted tables; afterwards effective and
-        physical ids coincide and query programs return to the single-base
-        shape. With the default exact cap results are unchanged by
-        construction; with an explicit ``bucket_cap`` compaction reclaims
-        the probe-window slots tombstones were consuming, so truncated
-        buckets can regain candidates.
+        Runs as a synchronous double-buffered swap: the replacement store
+        is fully built first (``prepare_compact`` — stored keys only, no
+        re-hash), then published as a pointer flip, so even a caller
+        interleaving queries from another thread never observes a
+        half-built store. Afterwards effective and physical ids coincide
+        and query programs return to the single-base shape. With the
+        default exact cap results are unchanged by construction; with an
+        explicit ``bucket_cap`` compaction reclaims the probe-window slots
+        tombstones were consuming, so truncated buckets can regain
+        candidates.
         """
-        if not self.store.mutated:
-            return self
-        keys, corpus = self.store.effective_arrays()
-        if keys.shape[0] == 0:
-            raise ValueError("cannot compact an index with no live items")
-        self.store = self._new_store(keys, corpus)
-        self.compactions += 1
-        return self
+        return self.apply_swap(self.prepare_compact())
 
 
 # ---------------------------------------------------------------------------
@@ -250,9 +338,13 @@ class DeviceLSHIndex(_SegmentedIndex):
     seed: int = 0
     bucket_cap: int | None = None  # None -> exact (largest build-time bucket)
     max_deltas: int = 8            # outstanding deltas before auto-compact
+    swap_chunk_rows: int | None = 4096  # shadow-build copy chunk (None ->
+                                        # one store-sized program per fold)
 
     store: SegmentStore | None = None
     compactions: int = 0
+    auto_compactions: int = 0
+    auto_compact_s: float = 0.0
     _mults: np.ndarray | None = None
 
     def __post_init__(self):
@@ -269,22 +361,37 @@ class DeviceLSHIndex(_SegmentedIndex):
     def build(self, corpus, batch_size: int = 1024) -> "DeviceLSHIndex":
         keys = bucket_keys(self.family, self._mults, corpus, batch_size)
         self.store = self._new_store(keys, corpus)
+        self._reset_mutation_state()
         return self
 
-    def _new_store(self, keys, corpus) -> SegmentStore:
+    def _new_store(self, keys, corpus,
+                   sort_throttled: bool = False) -> SegmentStore:
         return SegmentStore(
             build_segment(keys, corpus, bucket_cap=self.bucket_cap,
-                          warn_layout=type(self).__name__),
+                          warn_layout=type(self).__name__,
+                          sort_throttled=sort_throttled),
             live_window=self.bucket_cap is not None)
+
+    def _build_compact_store(self, store: SegmentStore) -> SegmentStore:
+        # chunked assembly (the default) keeps every fold program bounded
+        # so concurrently dispatched queries interleave with the build —
+        # values are bit-identical to the one-program gather
+        if self.swap_chunk_rows is None:
+            keys, corpus = store.effective_arrays()
+            return self._new_store(keys, corpus)
+        keys, corpus = store.effective_arrays_chunked(
+            int(self.swap_chunk_rows))
+        return self._new_store(keys, corpus, sort_throttled=True)
 
     # -- query --------------------------------------------------------------
 
     def candidates_batch(self, queries, *, probes: int = 1
                          ) -> tuple[jax.Array, jax.Array]:
         """-> (cand (B, W) effective ids with -1 fill, valid (B, W) bool)."""
+        view = self.store.view
         return segments.segmented_candidates(
-            self.family, self.store.all_arrays, jnp.asarray(self._mults),
-            queries, caps=self.store.all_caps, probes=int(probes))
+            self.family, view.all_arrays, jnp.asarray(self._mults),
+            queries, caps=view.all_caps, probes=int(probes))
 
     def query_batch(self, queries, topk: int = 10, *, probes: int = 1,
                     mode: str = "topk", rng=None):
@@ -304,14 +411,15 @@ class DeviceLSHIndex(_SegmentedIndex):
         need an explicit per-request PRNG key via ``rng``.
         """
         _check_mode(mode, rng)
-        args = (self.family, self.store.all_arrays,
+        view = self.store.view
+        args = (self.family, view.all_arrays,
                 jnp.asarray(self._mults), queries)
         if mode != "topk":
             return segments.segmented_sample(
                 *args, rng, metric=self.metric, topk=topk,
-                caps=self.store.all_caps, probes=int(probes), mode=mode)
+                caps=view.all_caps, probes=int(probes), mode=mode)
         return segments.segmented_query(
-            *args, metric=self.metric, topk=topk, caps=self.store.all_caps,
+            *args, metric=self.metric, topk=topk, caps=view.all_caps,
             probes=int(probes))
 
 
@@ -359,6 +467,8 @@ class ShardedLSHIndex(_SegmentedIndex):
     shards: int = 1
     bucket_cap: int | None = None  # None -> exact (largest per-shard bucket)
     max_deltas: int = 8
+    swap_chunk_rows: int | None = 4096  # shadow-build copy chunk (None ->
+                                        # one store-sized program per fold)
     keep_corpus: bool = True   # False drops the unsharded build-time copy
                                # (at real multi-host scale it won't fit;
                                # effective_corpus() regathers from shards)
@@ -367,6 +477,8 @@ class ShardedLSHIndex(_SegmentedIndex):
     store: SegmentStore | None = None
     compactions: int = 0
     rebalances: int = 0
+    auto_compactions: int = 0
+    auto_compact_s: float = 0.0
     mesh: Any = None               # jax Mesh carrying the shard axis, or None
     mesh_axis: str | None = None
     _mults: np.ndarray | None = None
@@ -423,33 +535,37 @@ class ShardedLSHIndex(_SegmentedIndex):
         self.mesh, self.mesh_axis = index_sharding.resolve_mesh(
             int(self.shards))
         self.store = self._new_store(keys, corpus)
+        self._corpus = corpus if self.keep_corpus else None
+        self._reset_mutation_state()
         return self
 
-    def _place(self):
+    def _reset_mutation_state(self) -> None:
+        super()._reset_mutation_state()
+        self.rebalances = 0
+
+    def _place(self, shadow: bool = False):
         if self.mesh is None:
             return lambda t: t
         from repro.distributed import index_sharding
-        return functools.partial(index_sharding.place_sharded,
-                                 mesh=self.mesh, axis=self.mesh_axis)
+        fn = (index_sharding.place_shadow if shadow
+              else index_sharding.place_sharded)
+        return functools.partial(fn, mesh=self.mesh, axis=self.mesh_axis)
 
-    def _place_segment(self, seg):
-        place = self._place()
+    def _place_segment(self, seg, shadow: bool = False):
+        place = self._place(shadow)
         return dataclasses.replace(
             seg, keys=place(seg.keys), sorted_keys=place(seg.sorted_keys),
             perm=place(seg.perm), corpus=place(seg.corpus))
 
-    def _new_store(self, keys, corpus) -> SegmentStore:
-        # rebalance() re-bases onto the effective corpus; keep the pristine
-        # fallback of the ``corpus`` property in sync with it
-        self._corpus = corpus if self.keep_corpus else None
+    def _new_store(self, keys, corpus, shadow: bool = False) -> SegmentStore:
         seg = build_sharded_segment(
             keys, corpus, int(self.shards), bucket_cap=self.bucket_cap,
             warn_layout=type(self).__name__)
         live_window = self.bucket_cap is not None
         if self.mesh is None:
             return SegmentStore(seg, live_window=live_window)
-        return SegmentStore(self._place_segment(seg), place=self._place(),
-                            live_window=live_window)
+        return SegmentStore(self._place_segment(seg, shadow),
+                            place=self._place(), live_window=live_window)
 
     # -- mutations (shard-native) -------------------------------------------
 
@@ -472,8 +588,7 @@ class ShardedLSHIndex(_SegmentedIndex):
         if self.mesh is not None:
             seg = self._place_segment(seg)
         self.store.append_delta(seg, positions)
-        if len(self.store.deltas) > self.max_deltas:
-            self.compact()
+        self._maybe_auto_compact()
         return self
 
     def compact(self):
@@ -483,13 +598,17 @@ class ShardedLSHIndex(_SegmentedIndex):
         steady-state compaction costs O(n/S) per shard. Shards keep the
         item mix routing gave them — their sequence ranges stay
         non-contiguous until an explicit ``rebalance()``; effective ids
-        (and so query results) are unchanged by construction."""
-        store = self.store
-        if not store.mutated:
-            return self
-        if store.n_live == 0:
-            raise ValueError("cannot compact an index with no live items")
-        s = self.store.base.shards
+        (and so query results) are unchanged by construction. Runs as a
+        synchronous double-buffered swap (build shadow, flip pointer), the
+        same machinery ``prepare_compact``/``apply_swap`` expose to the
+        serving plane."""
+        return self.apply_swap(self.prepare_compact())
+
+    def _build_compact_store(self, store: SegmentStore) -> SegmentStore:
+        """The shard-local fold, pure with respect to ``self``: builds and
+        returns the replacement store; the live store (and every query
+        pinned to its view) is untouched."""
+        s = store.base.shards
         segs = store._segments()
         live2d = np.concatenate(
             [store.live_host[off:off + g.slots].reshape(s, g.shard_size)
@@ -509,13 +628,53 @@ class ShardedLSHIndex(_SegmentedIndex):
             idx[sh, :sel.size] = sel
             new_pos[sh, :sel.size] = eff_seq[pos2d[sh, sel]]
         keys_cat = jnp.concatenate([g.keys for g in segs], axis=1)
-        corpus_cat = jax.tree.map(
-            lambda *xs: jnp.concatenate(xs, axis=1),
-            *[g.corpus for g in segs])
-        keys_n, sorted_keys, perm, corpus_n, max_runs = \
-            segments._slab_gather_sort(
-                keys_cat, corpus_cat, jnp.asarray(idx, jnp.int32),
-                jnp.asarray(counts, jnp.int32), shard_size=new_ns)
+        if self.swap_chunk_rows is None:
+            corpus_cat = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=1),
+                *[g.corpus for g in segs])
+            keys_n, sorted_keys, perm, corpus_n, max_runs = \
+                segments._slab_gather_sort(
+                    keys_cat, corpus_cat, jnp.asarray(idx, jnp.int32),
+                    jnp.asarray(counts, jnp.int32), shard_size=new_ns)
+        else:
+            # chunked fold (the default): same values as the monolithic
+            # fold, issued as bounded programs — a small keys gather, one
+            # sort per table, and per-chunk corpus copies in flat
+            # (shard * slot) row space — with blocking between them, so
+            # concurrent queries interleave with the build instead of
+            # queueing behind one store-sized program
+            keys_n = segments._slab_gather_keys(
+                keys_cat, jnp.asarray(idx, jnp.int32))
+            jax.block_until_ready(keys_n)
+            segments._yield_slot()
+            counts_j = jnp.asarray(counts, jnp.int32)
+            tables = []
+            for table in range(keys_n.shape[-1]):
+                out = segments._sort_shard_table(
+                    keys_n[:, :, table], counts_j, shard_size=new_ns)
+                jax.block_until_ready(out)
+                segments._yield_slot()
+                tables.append(out)
+            perm = jnp.stack([t[0] for t in tables], axis=1)
+            sorted_keys = jnp.stack([t[1] for t in tables], axis=1)
+            max_runs = jnp.stack([t[2] for t in tables])
+            valid = idx < w          # sentinel w marks pad rows
+            sh_i, col_i = np.nonzero(valid)
+            srcs, src_idxs, dst_idxs = [], [], []
+            off = 0
+            for g in segs:
+                wg = g.shard_size
+                m = (idx[sh_i, col_i] >= off) & (idx[sh_i, col_i] < off + wg)
+                srcs.append(jax.tree.map(
+                    lambda a: a.reshape((s * wg,) + a.shape[2:]), g.corpus))
+                src_idxs.append(sh_i[m] * wg + (idx[sh_i[m], col_i[m]] - off))
+                dst_idxs.append(sh_i[m] * new_ns + col_i[m])
+                off += wg
+            flat = segments.gather_rows_chunked(
+                srcs[0], srcs, src_idxs, dst_idxs, s * new_ns,
+                chunk=int(self.swap_chunk_rows))
+            corpus_n = jax.tree.map(
+                lambda a: a.reshape((s, new_ns) + a.shape[1:]), flat)
         if self.bucket_cap is None:
             cap = max(int(np.asarray(max_runs).max()), 1)
             segments._warn_coarse(type(self).__name__, cap,
@@ -527,38 +686,55 @@ class ShardedLSHIndex(_SegmentedIndex):
             keys=keys_n, sorted_keys=sorted_keys, perm=perm, corpus=corpus_n,
             cap=cap, counts=tuple(int(c) for c in counts))
         if self.mesh is not None:
-            seg = self._place_segment(seg)
-        self._corpus = None      # shard layout no longer matches build time
-        self.store = SegmentStore(
+            seg = self._place_segment(seg, shadow=True)
+        return SegmentStore(
             seg, place=self._place(), base_pos=new_pos.reshape(-1),
             live_window=self.bucket_cap is not None)
-        self.compactions += 1
-        return self
+
+    def _pre_publish(self, pending: PendingSwap) -> None:
+        # The shard layout changes under the flip: a shard-local compact
+        # invalidates the build-time corpus copy (non-contiguous sequence
+        # ranges → corpus_cache=None), a rebalance restores the fresh-build
+        # layout and installs the gathered corpus as the pristine fallback.
+        self._corpus = pending.corpus_cache
+
+    def prepare_rebalance(self) -> PendingSwap:
+        """Build the globally re-partitioned replacement store OFF the
+        query path (the one deliberately global program in the mutation
+        plane: gather the live corpus in sequence order, re-partition into
+        S contiguous shards, re-sort per shard). Blocks until the shadow
+        has landed on its shards; the live store keeps serving throughout.
+        """
+        store = self.store
+        if store.n_live == 0:
+            raise ValueError("cannot rebalance an index with no live items")
+        keys, corpus = store.effective_arrays()
+        shadow = self._new_store(keys, corpus, shadow=True)
+        jax.block_until_ready(jax.tree.leaves(shadow.view.all_arrays))
+        return PendingSwap(store=shadow, kind="rebalance", source=store,
+                           generation=store.generation,
+                           corpus_cache=corpus if self.keep_corpus else None)
 
     def rebalance(self):
         """Gather the live corpus (sequence order) and re-partition it into
-        S contiguous, evenly-sized shards — the one deliberately global
-        operation in the mutation plane, for when routing skew or
+        S contiguous, evenly-sized shards — for when routing skew or
         shard-local compaction history leaves occupancy uneven. Restores
         the exact layout of a fresh build over the effective corpus (so
         post-rebalance queries are bit-identical to one, scores included).
+        Runs as a synchronous double-buffered swap, like ``compact``.
         """
-        if self.store.n_live == 0:
-            raise ValueError("cannot rebalance an index with no live items")
-        keys, corpus = self.store.effective_arrays()
-        self.store = self._new_store(keys, corpus)
-        self.rebalances += 1
-        return self
+        return self.apply_swap(self.prepare_rebalance())
 
     # -- query --------------------------------------------------------------
 
     def candidates_batch(self, queries, *, probes: int = 1
                          ) -> tuple[jax.Array, jax.Array]:
         """-> (cand (B, W) effective ids with -1 fill, valid bool)."""
+        view = self.store.view
         return segments.sharded_candidates(
-            self.family, self.store.seg_arrays(0), self.store.delta_arrays,
-            jnp.asarray(self._mults), queries, cap=self.store.base.cap,
-            delta_caps=self.store.delta_caps, probes=int(probes))
+            self.family, view.seg_arrays(0), view.delta_arrays,
+            jnp.asarray(self._mults), queries, cap=view.base.cap,
+            delta_caps=view.delta_caps, probes=int(probes))
 
     def query_batch(self, queries, topk: int = 10, *, probes: int = 1,
                     mode: str = "topk", rng=None):
@@ -568,10 +744,11 @@ class ShardedLSHIndex(_SegmentedIndex):
         runs the single-program vmap path regardless of the mesh
         (``query_path`` describes the ``"topk"`` program)."""
         _check_mode(mode, rng)
-        args = (self.family, self.store.seg_arrays(0),
-                self.store.delta_arrays, jnp.asarray(self._mults), queries)
-        kwargs = dict(metric=self.metric, topk=topk, cap=self.store.base.cap,
-                      delta_caps=self.store.delta_caps, probes=int(probes))
+        view = self.store.view
+        args = (self.family, view.seg_arrays(0),
+                view.delta_arrays, jnp.asarray(self._mults), queries)
+        kwargs = dict(metric=self.metric, topk=topk, cap=view.base.cap,
+                      delta_caps=view.delta_caps, probes=int(probes))
         if mode != "topk":
             return segments.sharded_sample_vmap(*args, rng, mode=mode,
                                                 **kwargs)
@@ -657,14 +834,15 @@ class HostLSHIndex(_LSHIndexBase):
                     mode: str = "topk", rng=None):
         """Same contract as DeviceLSHIndex.query_batch."""
         _check_mode(mode, rng)
-        args = (self.family, self.store.all_arrays,
+        view = self.store.view
+        args = (self.family, view.all_arrays,
                 jnp.asarray(self._mults), queries)
         if mode != "topk":
             return segments.segmented_sample(
                 *args, rng, metric=self.metric, topk=topk,
-                caps=self.store.all_caps, probes=int(probes), mode=mode)
+                caps=view.all_caps, probes=int(probes), mode=mode)
         return segments.segmented_query(
-            *args, metric=self.metric, topk=topk, caps=self.store.all_caps,
+            *args, metric=self.metric, topk=topk, caps=view.all_caps,
             probes=int(probes))
 
 

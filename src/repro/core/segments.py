@@ -48,8 +48,10 @@ until compaction.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import time
 import warnings
 from typing import Any, Callable
 
@@ -241,15 +243,19 @@ def _warn_coarse(layout: str, cap: int, num_tables: int, n: int,
 
 
 def build_segment(keys: jax.Array, corpus, *, bucket_cap: int | None = None,
-                  warn_layout: str | None = None) -> TableSegment:
+                  warn_layout: str | None = None,
+                  sort_throttled: bool = False) -> TableSegment:
     """(m, L) corpus-order keys + corpus slice -> sorted TableSegment.
 
     One jit program sorts every table and measures the largest bucket; the
     coarse-family warning fires only for base builds (``warn_layout`` set) —
     small delta segments trip the threshold by construction.
+    ``sort_throttled`` sorts table-by-table instead (identical values) so
+    a shadow build's sort stays off a concurrent query's critical path.
     """
     m = keys.shape[0]
-    perm, sorted_keys, max_run = _sort_tables(keys.T)
+    sorter = _sort_tables_throttled if sort_throttled else _sort_tables
+    perm, sorted_keys, max_run = sorter(keys.T)
     if bucket_cap is None:
         cap = int(max_run) if m else 0
         if warn_layout is not None:
@@ -421,6 +427,150 @@ def _slab_gather_sort(keys_cat, corpus_cat, idx, counts, *, shard_size):
     perm = jnp.where(pad, shard_size, perm)
     max_runs = jax.vmap(_max_run_length_masked)(sorted_keys, ~pad)
     return keys_n, sorted_keys, perm, corpus_n, max_runs
+
+
+@jax.jit
+def _slab_gather_keys(keys_cat, idx):
+    """The keys half of ``_slab_gather_sort``'s gather (pad rows get
+    ``_PAD_KEY``), kept as its own bounded program for the chunked shadow
+    build: bucket keys are a few bytes per item, so this program stays
+    small regardless of corpus width. -> (S, shard_size, L) keys."""
+    s, w, num_tables = keys_cat.shape
+    keys_pad = jnp.concatenate(
+        [keys_cat, jnp.full((s, 1, num_tables), _PAD_KEY, jnp.uint32)],
+        axis=1)
+    return jnp.take_along_axis(keys_pad, idx[:, :, None], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("shard_size",))
+def _sort_shard_table(keys_l, counts, *, shard_size):
+    """Sort ONE table's (S, shard_size) fold keys — the same stable sort,
+    pad sentinel, and masked max-run math ``_slab_gather_sort`` applies to
+    all tables at once, so per-table outputs are bit-identical slices of
+    the monolithic fold's. The chunked shadow build issues L of these
+    (blocking between them) instead of one L-times-larger sort program."""
+    perm = jnp.argsort(keys_l, axis=-1, stable=True).astype(jnp.int32)
+    sorted_keys = jnp.take_along_axis(keys_l, perm, axis=-1)
+    pad = perm >= counts[:, None]
+    perm = jnp.where(pad, shard_size, perm)
+    max_run = _max_run_length_masked(sorted_keys, ~pad)
+    return perm, sorted_keys, max_run
+
+
+_BUILD_YIELD_S = 0.0
+_BUILD_BUSY_FN: Callable[[], bool] | None = None
+
+
+@contextlib.contextmanager
+def cooperative_build(yield_s: float = 0.008, busy=None):
+    """Make the throttled build loops sleep ``yield_s`` after each bounded
+    program while the block is active (and, with ``busy``, only while
+    foreground work actually exists).
+
+    Blocking per program keeps the *device* queue one program deep, but on
+    a machine with few cores the build thread usually keeps the CPU after
+    ``block_until_ready`` returns and enqueues its next program before a
+    waiting query-lane thread ever runs — so a query still convoys behind
+    several build programs in a row, and even once it runs, its program
+    timeshares the core with the build's back-to-back programs at ~half
+    speed. The sleep hands the core (and the GIL) over between programs,
+    leaving a concurrent query the majority of the core for the duration
+    of the build (measured on one core: compacting-phase p99 within
+    ~1.4x of quiet vs ~2x with back-to-back programs). Build wall time is
+    off the query path by design, so trading it for query latency is the
+    right direction — but only when there is a query to trade for:
+    ``busy`` (a nullary predicate, e.g. "any query in flight") gates each
+    sleep so an unloaded build still runs at full speed instead of
+    stretching its own wall — and with it the interference window the
+    next query can land in — by a blanket slowdown.
+
+    The flags are process-global on purpose: they are set by background
+    mutation executors (the scheduler's ingest lane) around whole
+    operations, and the loops they gate run several layers down the store
+    build with no parameter path through ``SegmentStore.__init__``."""
+    global _BUILD_YIELD_S, _BUILD_BUSY_FN
+    prev = (_BUILD_YIELD_S, _BUILD_BUSY_FN)
+    _BUILD_YIELD_S, _BUILD_BUSY_FN = yield_s, busy
+    try:
+        yield
+    finally:
+        _BUILD_YIELD_S, _BUILD_BUSY_FN = prev
+
+
+def _yield_slot() -> None:
+    """One cooperative-yield point between bounded build programs (no-op
+    unless inside :func:`cooperative_build`, or when its ``busy``
+    predicate says no foreground work is waiting)."""
+    if _BUILD_YIELD_S > 0.0 and (_BUILD_BUSY_FN is None or _BUILD_BUSY_FN()):
+        time.sleep(_BUILD_YIELD_S)
+
+
+def _sort_tables_throttled(keys_t: jax.Array):
+    """``_sort_tables`` issued as one bounded program per table, blocking
+    between programs — identical values (tables sort independently). The
+    chunked shadow build uses it so the fold's sort never queues one
+    all-tables program ahead of a concurrently dispatched query."""
+    outs = []
+    for table in range(keys_t.shape[-2]):
+        out = _sort_tables(keys_t[..., table:table + 1, :])
+        jax.block_until_ready(out)
+        _yield_slot()
+        outs.append(out)
+    perm = jnp.concatenate([o[0] for o in outs], axis=-2)
+    sorted_keys = jnp.concatenate([o[1] for o in outs], axis=-2)
+    return perm, sorted_keys, jnp.max(jnp.stack([o[2] for o in outs]))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows_chunk(buf, src, src_idx, dst_idx):
+    """One bounded program of the chunked shadow-build copy: gather
+    ``src_idx`` rows from one source segment and scatter them into the
+    donated destination buffers in place (``dst_idx`` past the end marks
+    chunk padding and is dropped). Donation makes the update O(chunk), not
+    O(buffer): the runtime aliases the output onto the input allocation."""
+    return jax.tree.map(
+        lambda b, s: b.at[dst_idx].set(s[src_idx], mode="drop"), buf, src)
+
+
+def gather_rows_chunked(template, srcs, src_idxs, dst_idxs, out_rows, *,
+                        chunk: int = 4096):
+    """Assemble ``out_rows`` live corpus rows into fresh zero-initialized
+    buffers via bounded per-chunk gather+scatter programs.
+
+    The monolithic folds (``_slab_gather_sort``, ``effective_arrays``)
+    move the whole store through one XLA program; a device executes
+    programs in order, so on a single-stream backend every concurrently
+    dispatched query waits the full store copy out — the exact serving
+    stall ``prepare_compact`` exists to avoid. This path issues the same
+    copy as ceil(rows/chunk) programs per source segment instead, each
+    touching at most ``chunk`` rows, and blocks on every chunk before
+    enqueuing the next — dispatch is async, so without the throttle the
+    fold floods the device queue in one burst and a concurrent query
+    waits behind all of it anyway. With it the queue stays one chunk deep
+    and query programs interleave between chunks. Values are identical to
+    the monolithic gather: every live row is written exactly once and
+    unwritten rows stay zero, matching the pad-row zeros of the
+    one-program path.
+
+    ``srcs`` are per-segment corpus pytrees with a flat leading axis;
+    ``src_idxs``/``dst_idxs`` the matching host-side row maps into them
+    and into the flat output. ``template`` supplies output leaf shapes.
+    """
+    buf = jax.tree.map(
+        lambda a: jnp.zeros((out_rows,) + a.shape[1:], a.dtype), template)
+    for src, s_idx, d_idx in zip(srcs, src_idxs, dst_idxs):
+        for c0 in range(0, len(s_idx), chunk):
+            s_c = np.asarray(s_idx[c0:c0 + chunk], np.int32)
+            d_c = np.asarray(d_idx[c0:c0 + chunk], np.int32)
+            if s_c.size < chunk:    # pad to the compiled chunk shape;
+                fill = chunk - s_c.size  # dst sentinel rows are dropped
+                s_c = np.pad(s_c, (0, fill))
+                d_c = np.pad(d_c, (0, fill), constant_values=out_rows)
+            buf = _scatter_rows_chunk(buf, src, jnp.asarray(s_c),
+                                      jnp.asarray(d_c))
+            jax.block_until_ready(jax.tree.leaves(buf))
+            _yield_slot()
+    return buf
 
 
 # ---------------------------------------------------------------------------
@@ -815,6 +965,17 @@ def sharded_sample_vmap(family, base, deltas, mults, queries, rng, *, metric,
 
 
 @jax.jit
+@jax.jit
+def _live_window_table(perm_l, live):
+    """One table of ``_live_window_tables`` as its own bounded program."""
+    live_sorted = live[perm_l]                            # (m,) bool
+    rank = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(live_sorted, dtype=jnp.int32)])
+    pos = jnp.argsort(~live_sorted, stable=True).astype(jnp.int32)
+    return rank, pos
+
+
 def _live_window_tables(perm, live):
     """(L, m) perm + (m+1,) live -> (live_rank (L, m+1), live_pos (L, m)).
 
@@ -823,23 +984,101 @@ def _live_window_tables(perm, live):
     (dead positions follow, also ascending — a probe walking past the live
     members of a bucket lands on dead slots that the liveness mask then
     filters). Together they let a truncated probe window address the j-th
-    *live* member of a bucket directly."""
-    live_sorted = live[perm]                              # (L, m) bool
-    rank = jnp.concatenate(
-        [jnp.zeros(perm.shape[:1] + (1,), jnp.int32),
-         jnp.cumsum(live_sorted, axis=1, dtype=jnp.int32)], axis=1)
-    pos = jnp.argsort(~live_sorted, axis=1, stable=True).astype(jnp.int32)
-    return rank, pos
+    *live* member of a bucket directly. Issued as one bounded program per
+    table (tables are independent, so values are unchanged), blocking
+    between programs: window rebuilds run on the mutation plane — deletes,
+    shadow-store builds — and must never queue one all-tables argsort
+    ahead of a concurrently dispatched query."""
+    outs = []
+    for table in range(perm.shape[0]):
+        out = _live_window_table(perm[table], live)
+        jax.block_until_ready(out)
+        _yield_slot()
+        outs.append(out)
+    return (jnp.stack([o[0] for o in outs]),
+            jnp.stack([o[1] for o in outs]))
 
 
-@jax.jit
 def _live_window_tables_sharded(perm, live):
-    return jax.vmap(_live_window_tables)(perm, live)
+    """Sharded variant of ``_live_window_tables``: perm (S, L, n_s) + live
+    (S, n_s + 1) -> (rank (S, L, n_s + 1), pos (S, L, n_s)), one bounded
+    per-(table, shard) program, throttled like the flat version. Shards
+    are independent too, so splitting below the table level changes no
+    value (integer sort/scan math) — it bounds each program at O(n_s)
+    instead of O(S * n_s), which is what keeps a concurrent query's wait
+    to one slab-sized program during a background delete at high S."""
+    outs = []
+    for table in range(perm.shape[1]):
+        shards = []
+        for sh in range(perm.shape[0]):
+            out = _live_window_table(perm[sh, table], live[sh])
+            jax.block_until_ready(out)
+            _yield_slot()
+            shards.append(out)
+        outs.append((jnp.stack([o[0] for o in shards]),
+                     jnp.stack([o[1] for o in shards])))
+    return (jnp.stack([o[0] for o in outs], axis=1),
+            jnp.stack([o[1] for o in outs], axis=1))
 
 
 # ---------------------------------------------------------------------------
 # Mutable store: base + deltas + tombstones
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreView:
+    """One immutable, internally-consistent snapshot of a store's queryable
+    state — the handle a query pins for its whole program.
+
+    ``SegmentStore`` publishes a fresh view (one atomic attribute write) at
+    the end of every mutation; readers grab ``store.view`` once and derive
+    every program input (segment arrays, liveness/effective-id lookups,
+    probe caps) from that single object, so a query dispatched concurrently
+    with an ``insert``/``delete``/``compact`` swap sees either the whole
+    pre-mutation state or the whole post-mutation state — never a torn mix
+    of segments from one generation and lookups from another. ``generation``
+    increments with every publish; the double-buffered swap machinery in
+    ``repro.core.index`` uses it to refuse publishing a shadow store whose
+    source mutated while the shadow was building.
+    """
+
+    segments: tuple          # base + deltas, slot-offset order
+    luts: tuple              # per-segment (live, eff) device lookups
+    wins: tuple              # per-segment live-window lookups (or None)
+    generation: int
+
+    @property
+    def base(self):
+        return self.segments[0]
+
+    @property
+    def n_deltas(self) -> int:
+        return len(self.segments) - 1
+
+    def seg_arrays(self, i: int):
+        """(corpus, sorted_keys, perm, live, eff, win) of segment i."""
+        seg = self.segments[i]
+        live, eff = self.luts[i]
+        return (seg.corpus, seg.sorted_keys, seg.perm, live, eff,
+                self.wins[i])
+
+    @property
+    def all_arrays(self) -> tuple:
+        return tuple(self.seg_arrays(i) for i in range(len(self.segments)))
+
+    @property
+    def delta_arrays(self) -> tuple:
+        return tuple(self.seg_arrays(i)
+                     for i in range(1, len(self.segments)))
+
+    @property
+    def all_caps(self) -> tuple[int, ...]:
+        return tuple(seg.cap for seg in self.segments)
+
+    @property
+    def delta_caps(self) -> tuple[int, ...]:
+        return tuple(seg.cap for seg in self.segments[1:])
 
 
 class SegmentStore:
@@ -872,6 +1111,11 @@ class SegmentStore:
     arrays on the index's mesh; ``base_pos`` overrides the base slot ->
     sequence map (shard-local compaction produces bases whose shards hold
     non-contiguous sequence ranges).
+
+    Every mutation ends by publishing a fresh immutable ``StoreView`` (one
+    atomic attribute write); queries read ``store.view`` once and serve the
+    whole program from it, so mutations racing a query from another thread
+    can never tear the segment/lookup pairing mid-read.
     """
 
     def __init__(self, base, *, place: Callable | None = None,
@@ -881,6 +1125,7 @@ class SegmentStore:
         self.deltas: list[TableSegment | ShardedSegment] = []
         self.place = place or (lambda t: t)
         self.live_window = bool(live_window)
+        self._generation = 0
         if base_pos is None:
             real = np.zeros(base.slots, bool)
             if isinstance(base, ShardedSegment):
@@ -962,31 +1207,44 @@ class SegmentStore:
                 wins.append(self._wins[i])
             off += seg.slots
         self._luts, self._wins = luts, wins
+        self._publish()
+
+    def _publish(self) -> None:
+        """Assemble + install a fresh immutable view (one atomic write)."""
+        self._generation += 1
+        self.view = StoreView(segments=tuple(self._segments()),
+                              luts=tuple(self._luts),
+                              wins=tuple(self._wins),
+                              generation=self._generation)
+
+    @property
+    def generation(self) -> int:
+        """Monotone mutation clock: bumps whenever a new view publishes."""
+        return self.view.generation
 
     def seg_arrays(self, i: int):
         """(corpus, sorted_keys, perm, live, eff, win) of segment i
-        (0 = base; ``win`` is None unless the store keeps live windows)."""
-        seg = self._segments()[i]
-        live, eff = self._luts[i]
-        return (seg.corpus, seg.sorted_keys, seg.perm, live, eff,
-                self._wins[i])
+        (0 = base; ``win`` is None unless the store keeps live windows).
+        Served from the published view — for a multi-access read sequence
+        that must stay consistent under concurrent mutation, pin
+        ``store.view`` once instead."""
+        return self.view.seg_arrays(i)
 
     @property
     def delta_arrays(self) -> tuple:
-        return tuple(self.seg_arrays(1 + i) for i in range(len(self.deltas)))
+        return self.view.delta_arrays
 
     @property
     def delta_caps(self) -> tuple[int, ...]:
-        return tuple(d.cap for d in self.deltas)
+        return self.view.delta_caps
 
     @property
     def all_arrays(self) -> tuple:
-        return tuple(self.seg_arrays(i)
-                     for i in range(1 + len(self.deltas)))
+        return self.view.all_arrays
 
     @property
     def all_caps(self) -> tuple[int, ...]:
-        return (self.base.cap,) + self.delta_caps
+        return self.view.all_caps
 
     @property
     def mutated(self) -> bool:
@@ -1034,6 +1292,7 @@ class SegmentStore:
         lut = self._seg_luts(seg, valid, eff)
         self._luts.append(lut)
         self._wins.append(self._seg_win(seg, lut[0]))
+        self._publish()
 
     def delete_effective(self, ids: np.ndarray) -> int:
         """Tombstone items by their current *effective* ids (the numbering
@@ -1084,6 +1343,36 @@ class SegmentStore:
         keys, corpus = self._flat_keys_and_corpus()
         idx = jnp.asarray(self._live_slots_seq_order())
         return keys[idx], tree_index(corpus, idx)
+
+    def effective_arrays_chunked(self, chunk: int):
+        """``effective_arrays`` with the corpus assembled by bounded
+        gather+scatter programs (``gather_rows_chunked``) instead of one
+        store-sized concatenate + gather. Bit-identical output; the
+        shadow-build (``prepare_compact``) path uses it so concurrent
+        queries never queue behind a store-sized program. Keys stay on the
+        one-program path — they are a few bytes per item."""
+        idx = self._live_slots_seq_order()
+        flat_keys = []
+        srcs, src_idxs, dst_idxs = [], [], []
+        off = 0
+        for seg in self._segments():
+            if isinstance(seg, ShardedSegment):
+                flat_keys.append(seg.keys.reshape(-1, seg.keys.shape[-1]))
+                flat = jax.tree.map(
+                    lambda a: a.reshape((-1,) + a.shape[2:]), seg.corpus)
+            else:
+                flat_keys.append(seg.keys)
+                flat = seg.corpus
+            w = seg.slots
+            dst = np.flatnonzero((idx >= off) & (idx < off + w))
+            srcs.append(flat)
+            src_idxs.append(idx[dst] - off)
+            dst_idxs.append(dst)
+            off += w
+        keys = jnp.concatenate(flat_keys, axis=0)[jnp.asarray(idx)]
+        corpus = gather_rows_chunked(srcs[0], srcs, src_idxs, dst_idxs,
+                                     idx.size, chunk=chunk)
+        return keys, corpus
 
     def effective_corpus(self):
         """The live corpus in effective-id order. Zero-copy for a pristine

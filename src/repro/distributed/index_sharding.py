@@ -15,7 +15,9 @@ segment runs and provides the ``shard_map`` variant of the query program:
   arrays — the base segment AND the routed delta slabs (sorted keys,
   permutations, liveness/effective-id/live-window lookups, corpus slices)
   follow the same rules, so the mutation plane shards exactly like the
-  query plane.
+  query plane. ``place_shadow`` is the blocking variant the double-buffered
+  swap uses to land a fully-materialized shadow store before the pointer
+  flip publishes it.
 - ``shard_map_query``: one jit program — replicated hashing outside the
   shard_map; inside it each device probes its base block *and* its slab of
   every delta segment (searchsorted/gather/tombstone-filter/re-rank) and
@@ -64,6 +66,17 @@ def place_sharded(tree, mesh: Mesh, axis: str):
     """device_put every leaf with its leading dim sharded over ``axis``."""
     sh = NamedSharding(mesh, P(axis))
     return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+def place_shadow(tree, mesh: Mesh, axis: str):
+    """``place_sharded`` for the double-buffered swap's shadow store: the
+    transfers are issued AND waited on here, off the query path, so the
+    later pointer flip publishes a store whose every array has already
+    landed on its shard — the first post-swap query pays zero placement
+    cost and the flip itself does no device work."""
+    placed = place_sharded(tree, mesh, axis)
+    jax.block_until_ready(jax.tree.leaves(placed))
+    return placed
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "topk", "cap",

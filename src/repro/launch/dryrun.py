@@ -253,10 +253,15 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
     ``delta_probe``), the query-directed multi-probe query at T=``probes``
     candidate buckets per table (``multiprobe_program`` — prices the key
     expansion + the T-times-wider probe windows of the (L, T) trade-off),
-    the fused hash pipeline (``hash_program``), and the two shard-local
+    the fused hash pipeline (``hash_program``), the two shard-local
     mutation programs — the routed slab scatter + sort behind ``insert``
     (``insert_program``, hash included) and the per-shard survivor fold
-    behind ``compact()`` (``compact_program``).
+    behind ``compact()`` (``compact_program``) — and the double-buffered
+    swap's shadow build (``swap_build_program``): the global sequence-order
+    gather + contiguous re-partition + per-shard re-sort behind
+    ``prepare_rebalance()``, the one mutation program that pays cross-shard
+    collectives (it runs off the query path; the ``apply_swap`` flip itself
+    compiles nothing).
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -376,6 +381,40 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
                                   shard_of(fold_idx_sds), rep))
             .lower(keys_cat_sds, corpus_cat_sds, fold_idx_sds,
                    counts_sds).compile(), t4)
+
+        # the double-buffered swap's shadow build (the rebalance prepare):
+        # gather every live item from the sharded base + delta slabs in
+        # sequence order — the one deliberately global gather in the
+        # mutation plane, so this program carries the cross-shard
+        # collectives compact_program deliberately avoids — then
+        # re-partition contiguously and re-sort each new shard. Runs off
+        # the query path while the live store keeps serving; apply_swap
+        # afterwards is a host pointer flip with no program at all.
+        t5 = time.time()
+        live_n = corpus_n + delta_n
+        new_ns = -(-live_n // shards)
+        swap_idx_sds = sds((shards * new_ns,), jnp.int32)
+
+        def swap_build_step(keys_cat, corpus_cat, flat_idx):
+            s, w_, l_ = keys_cat.shape
+            keys_pad = jnp.concatenate(
+                [keys_cat.reshape(s * w_, l_),
+                 jnp.zeros((1, l_), jnp.uint32)])
+            keys_g = keys_pad[flat_idx].reshape(shards, new_ns, l_)
+            corpus_g = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a.reshape((s * w_,) + a.shape[2:]),
+                     jnp.zeros((1,) + a.shape[2:], a.dtype)])[flat_idx]
+                .reshape((shards, new_ns) + a.shape[2:]), corpus_cat)
+            perm, sorted_keys, max_run = segments._sort_tables(
+                keys_g.transpose(0, 2, 1))
+            return keys_g, sorted_keys, perm, corpus_g, max_run
+
+        swap_rec = _analyze(
+            jax.jit(swap_build_step,
+                    in_shardings=(shard_of(keys_cat_sds),
+                                  shard_of(corpus_cat_sds), rep))
+            .lower(keys_cat_sds, corpus_cat_sds, swap_idx_sds).compile(), t5)
         fallbacks = sorted({(f[0], f[1], "/".join(f[2]))
                             for f in ctx.fallbacks})
 
@@ -406,6 +445,10 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         "insert_program": {"insert_n": delta_n, "slab_size": d_ns,
                            **insert_rec},
         "compact_program": {"folded_slots_per_shard": w, **compact_rec},
+        "swap_build_program": {"live_n": corpus_n + delta_n,
+                               "new_shard_size":
+                                   -(-(corpus_n + delta_n) // shards),
+                               **swap_rec},
         "sharding_fallbacks": fallbacks,
     }
 
@@ -527,7 +570,9 @@ def main():
                       f", insert: "
                       f"{rec['insert_program']['cost']['flops_per_device']:.3e}"
                       f", compact: "
-                      f"{rec['compact_program']['cost']['flops_per_device']:.3e}")
+                      f"{rec['compact_program']['cost']['flops_per_device']:.3e}"
+                      f", swap build: "
+                      f"{rec['swap_build_program']['cost']['flops_per_device']:.3e}")
             except Exception as e:
                 failures += 1
                 rec = {"status": "failed", "arch": "lsh-index",

@@ -99,7 +99,8 @@ LSH_SUBPROGRAMS = (("delta_probe", "lsh_query"),
                    ("multiprobe_program", "lsh_query"),
                    ("hash_program", "lsh_query"),
                    ("insert_program", "lsh_mutation"),
-                   ("compact_program", "lsh_mutation"))
+                   ("compact_program", "lsh_mutation"),
+                   ("swap_build_program", "lsh_mutation"))
 
 
 def expand(rec: dict) -> list[dict]:

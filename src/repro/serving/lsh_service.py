@@ -16,7 +16,18 @@ segment (served immediately, no rebuild), ``delete(ids)`` tombstones items
 by their current effective ids, and ``compact()`` folds deltas and
 tombstones back into one base segment (also triggered automatically past
 the index's ``max_deltas``). ``ServiceStats`` tracks the mutation traffic
-next to the query traffic.
+next to the query traffic, with automatic compaction time split out of
+``insert_ms`` (``auto_compact_ms``/``auto_compactions``) so ingest
+throughput numbers never silently absorb fold cost.
+
+Mutations never stall serving: ``prepare_compact()``/``prepare_rebalance()``
+build the full replacement store off the query path (every array
+materialized and placed — the second buffer of a double-buffered swap) and
+``apply_swap()`` publishes it as a single pointer flip. Queries dispatched
+before the flip finish on the store they pinned, bit-identical to its
+answers; the synchronous ``compact()``/``rebalance()`` endpoints are the
+same prepare+flip pair run back-to-back. ``repro.serving.scheduler`` runs
+the prepare step on its ingest lane so the query lane never waits.
 
 ``LSHService(..., shards=S)`` serves through the mesh-sharded
 ``ShardedLSHIndex``, whose mutation plane is shard-native: the base
@@ -65,13 +76,17 @@ class ServiceStats:
     # mutation counters
     inserted: int = 0          # items appended via insert()
     insert_batches: int = 0
-    insert_ms: float = 0.0
+    insert_ms: float = 0.0     # insert wall time, auto-compaction excluded
     deleted: int = 0           # items tombstoned via delete()
     delete_batches: int = 0
-    compactions: int = 0       # explicit + automatic (max_deltas) compactions
-    compact_ms: float = 0.0    # explicit compact() wall time only
+    compactions: int = 0       # explicit compact()/apply_swap publications
+    compact_ms: float = 0.0    # explicit compact build wall time only
+    auto_compactions: int = 0  # max_deltas-triggered folds inside insert()
+    auto_compact_ms: float = 0.0
     rebalances: int = 0        # explicit cross-shard re-partitions
     rebalance_ms: float = 0.0
+    rejected: int = 0          # requests refused by a tenant quota
+                               # (set by the serving scheduler)
     shard_occupancy: tuple[int, ...] = ()  # live items per shard (sharded
                                            # index only; updated per mutation)
 
@@ -106,6 +121,18 @@ class ServiceStats:
         self.topk_queries = self.uniform_queries = self.weighted_queries = 0
         self.total_ms = 0.0
         self.total_candidates = 0
+
+    def reset_mutations(self):
+        """Zero the mutation counters — ``build()`` calls this on every
+        (re)build so the stats always describe the live index, never a
+        previous corpus's mutation history."""
+        self.inserted = self.insert_batches = 0
+        self.deleted = self.delete_batches = 0
+        self.compactions = self.auto_compactions = self.rebalances = 0
+        self.insert_ms = self.compact_ms = 0.0
+        self.auto_compact_ms = self.rebalance_ms = 0.0
+        self.rejected = 0
+        self.shard_occupancy = ()
 
 
 class LSHService:
@@ -146,6 +173,7 @@ class LSHService:
         t0 = time.perf_counter()
         self.index.build(corpus, batch_size=batch_size)
         self.stats.build_s = time.perf_counter() - t0
+        self.stats.reset_mutations()   # stats describe the live index only
         self._track_shards()
         return self
 
@@ -153,21 +181,32 @@ class LSHService:
 
     def query_arrays(self, queries, topk: int = 10, *,
                      probes: int | None = None, mode: str | None = None,
-                     seed: int | None = None):
+                     seed: int | None = None, stat_rows: int | None = None):
         """Batched raw results: (ids (B, topk), scores (B, topk), n_cand (B,)).
 
         ids are effective (live-corpus) ids, -1-filled where a row has fewer
         than topk candidates. One jit-compiled call through the shared
         segment planner for every index deployment.
 
-        ``probes``/``mode`` override the service defaults per request; the
-        sampling modes (``"uniform"``/``"weighted"``) draw ``topk`` distinct
-        members from the probed bucket union and require an explicit
-        per-request ``seed`` (the PRNG key is derived from it and nothing
-        else — the same seed on the same index state replays the exact
-        draw; the service keeps no hidden sampling state).
+        ``probes``/``mode`` override the service defaults per request —
+        validated here with the constructor's contract, so a bad override
+        raises the same ``ValueError`` instead of flowing into the jit
+        program. The sampling modes (``"uniform"``/``"weighted"``) draw
+        ``topk`` distinct members from the probed bucket union and require
+        an explicit per-request ``seed`` (the PRNG key is derived from it
+        and nothing else — the same seed on the same index state replays
+        the exact draw; the service keeps no hidden sampling state).
+
+        ``stat_rows`` caps the row count attributed to the query counters —
+        the micro-batch scheduler pads coalesced batches to stable program
+        shapes and passes the real request count so pad rows never inflate
+        per-tenant stats.
         """
         probes = self.probes if probes is None else int(probes)
+        if probes < 1:
+            raise ValueError(f"probes must be >= 1, got {probes}")
+        if int(topk) < 1:
+            raise ValueError(f"topk must be >= 1, got {topk}")
         mode = self.query_mode if mode is None else mode
         if mode not in QUERY_MODES:
             raise ValueError(f"unknown query mode {mode!r}; expected one "
@@ -183,6 +222,8 @@ class LSHService:
             raise ValueError("seed applies to the sampling modes only; "
                              "mode='topk' is deterministic")
         n = jax.tree.leaves(queries)[0].shape[0]
+        if stat_rows is not None:
+            n = min(n, int(stat_rows))
         t0 = time.perf_counter()
         ids, scores, n_cand = jax.block_until_ready(
             self.index.query_batch(queries, topk=topk, probes=probes,
@@ -225,22 +266,35 @@ class LSHService:
         if isinstance(self.index, ShardedLSHIndex):
             self.stats.shard_occupancy = tuple(
                 int(c) for c in self.index.occupancy())
-            self.stats.rebalances = self.index.rebalances
+
+    def _sync_mutation_stats(self) -> None:
+        """Mirror the index's mutation counters into the stats, splitting
+        max_deltas-triggered automatic folds from explicit publications."""
+        index = self.index
+        self.stats.auto_compactions = index.auto_compactions
+        self.stats.auto_compact_ms = index.auto_compact_s * 1e3
+        self.stats.compactions = index.compactions - index.auto_compactions
+        self.stats.rebalances = getattr(index, "rebalances", 0)
 
     def insert(self, batch, batch_size: int = 2048) -> "LSHService":
         """Append a batch of items (one delta segment — a routed sharded
-        slab on the sharded index — served immediately)."""
+        slab on the sharded index — served immediately). A max_deltas
+        auto-compaction triggered here is timed into ``auto_compact_ms``,
+        never ``insert_ms`` — ``insert_items_per_s`` measures ingest, not
+        fold cost."""
         index = self._mutable_index()
         n = jax.tree.leaves(batch)[0].shape[0]
+        auto_s0 = index.auto_compact_s
         t0 = time.perf_counter()
         index.insert(batch, batch_size=batch_size)
         jax.block_until_ready(
             [seg.sorted_keys for seg in
              [index.store.base] + index.store.deltas])
-        self.stats.insert_ms += (time.perf_counter() - t0) * 1e3
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self.stats.insert_ms += dt_ms - (index.auto_compact_s - auto_s0) * 1e3
         self.stats.inserted += n
         self.stats.insert_batches += 1
-        self.stats.compactions = index.compactions
+        self._sync_mutation_stats()
         self._track_shards()
         return self
 
@@ -252,32 +306,52 @@ class LSHService:
         self._track_shards()
         return n
 
-    def compact(self) -> "LSHService":
-        """Fold deltas + tombstones back into the base (shard-local on the
-        sharded index — shards keep their item mix, see ``rebalance``)."""
+    def prepare_compact(self):
+        """Build the compacted replacement store OFF the query path and
+        return the pending swap (None when there is nothing to fold).
+        Queries keep serving the live store while this runs; publish the
+        result with ``apply_swap``. The build wall time lands in
+        ``compact_ms``."""
         index = self._mutable_index()
         t0 = time.perf_counter()
-        index.compact()
-        jax.block_until_ready(index.sorted_keys)
+        pending = index.prepare_compact()
         self.stats.compact_ms += (time.perf_counter() - t0) * 1e3
-        self.stats.compactions = index.compactions
-        self._track_shards()
-        return self
+        return pending
 
-    def rebalance(self) -> "LSHService":
-        """Re-partition the live corpus into contiguous, evenly-sized
-        shards (the explicit cross-shard move; sharded index only)."""
+    def prepare_rebalance(self):
+        """Build the globally re-partitioned replacement store off the
+        query path (sharded index only); publish with ``apply_swap``. The
+        build wall time lands in ``rebalance_ms``."""
         index = self._mutable_index()
         if not isinstance(index, ShardedLSHIndex):
             raise TypeError("rebalance applies to the sharded index only "
                             "(pass shards=S)")
         t0 = time.perf_counter()
-        index.rebalance()
-        jax.block_until_ready(index.sorted_keys)
+        pending = index.prepare_rebalance()
         self.stats.rebalance_ms += (time.perf_counter() - t0) * 1e3
-        self.stats.compactions = index.compactions
+        return pending
+
+    def apply_swap(self, pending) -> "LSHService":
+        """Publish a prepared store: one pointer flip, no device work.
+        Raises RuntimeError if the index mutated since the prepare (the
+        shadow would drop those mutations) — serialize mutations with the
+        prepare/apply pair, as the scheduler's ingest lane does."""
+        self._mutable_index().apply_swap(pending)
+        self._sync_mutation_stats()
         self._track_shards()
         return self
+
+    def compact(self) -> "LSHService":
+        """Fold deltas + tombstones back into the base (shard-local on the
+        sharded index — shards keep their item mix, see ``rebalance``).
+        Synchronous prepare + flip; single-threaded callers see exactly
+        the old behavior."""
+        return self.apply_swap(self.prepare_compact())
+
+    def rebalance(self) -> "LSHService":
+        """Re-partition the live corpus into contiguous, evenly-sized
+        shards (the explicit cross-shard move; sharded index only)."""
+        return self.apply_swap(self.prepare_rebalance())
 
 
 def build_service(key, kind: str, dims: Sequence[int], corpus, *,

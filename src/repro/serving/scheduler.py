@@ -1,0 +1,414 @@
+"""Two-lane micro-batch request scheduler + multi-tenant namespaces for
+``LSHService`` — the serving plane where mutations never stall queries.
+
+Single queries are the worst case for the jit query program: a B=1 dispatch
+pays the same program overhead as B=1024 and none of the batch economics
+(``benchmarks/index_serving`` measures the gap at two orders of magnitude
+of per-query cost). The scheduler closes it by *coalescing*: the query lane
+accumulates compatible single-query requests into one micro-batch and
+flushes on whichever comes first — the latency deadline (``deadline_ms``,
+measured from the oldest queued request) or the size cap (``max_batch``).
+Batches are padded to the next power of two by repeating a row, so the jit
+cache holds log2(max_batch) program shapes instead of one per batch size;
+pad rows are sliced off before results resolve and never touch the stats
+(``stat_rows``). Requests coalesce only within a group key
+(tenant, topk, probes, mode) — different knobs are different programs —
+and sampling-mode requests never coalesce (each carries its own seed, i.e.
+its own draw).
+
+Two lanes, one rule: the *query lane* only reads published stores, the
+*ingest lane* owns every mutation. ``insert``/``delete`` run on the ingest
+lane directly; ``compact``/``rebalance`` run there as the double-buffered
+pair — ``prepare_*`` builds the replacement store (the slow part, off the
+query path) and ``apply_swap`` publishes it as a pointer flip. Because the
+ingest lane serializes all mutations, the swap's generation guard never
+fires in normal operation; the query lane keeps dispatching throughout and
+each query is bit-identical to the store generation it pinned.
+
+*Namespaces* multiplex many logical indexes (one ``LSHService`` each —
+tenants share the mesh through the same ``resolve_mesh`` rules) behind one
+scheduler and one pair of lanes. ``TenantQuota`` bounds each tenant at
+admission: ``max_items`` caps the live corpus (oversized inserts are
+rejected before they queue), ``max_pending`` caps queued requests
+(backpressure). Rejections raise ``QuotaExceeded`` at submission and count
+into that tenant's ``ServiceStats.rejected``; per-tenant traffic counters
+are the tenant's own ``ServiceStats``.
+
+Every submission returns a ``concurrent.futures.Future``; exceptions (bad
+overrides, quota-free service errors) resolve through it. ``flush()``
+drains both lanes; the scheduler is a context manager (``close()`` stops
+the lanes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue as queue_lib
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import segments
+from repro.serving.lsh_service import LSHService
+
+
+class QuotaExceeded(RuntimeError):
+    """A tenant quota refused this request at admission."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Admission limits for one namespace (None = unlimited).
+
+    ``max_items`` caps the tenant's live corpus: an insert that would grow
+    past it is rejected at submission. ``max_pending`` caps the tenant's
+    queued-but-unserved requests across both lanes — the backpressure
+    valve that keeps one tenant from monopolizing the lanes."""
+
+    max_items: int | None = None
+    max_pending: int | None = None
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Query-lane coalescing counters (per scheduler, across tenants)."""
+
+    requests: int = 0          # single-query submissions served
+    batches: int = 0           # jit dispatches on the query lane
+    size_flushes: int = 0      # batches flushed by the max_batch cap
+    deadline_flushes: int = 0  # batches flushed by the latency deadline
+
+    @property
+    def mean_batch(self) -> float:
+        """Mean coalesced batch size (1.0 = no coalescing happened)."""
+        return self.requests / max(self.batches, 1)
+
+    def reset(self) -> None:
+        """Zero the counters (e.g. after a warm-up/calibration burst)."""
+        self.requests = self.batches = 0
+        self.size_flushes = self.deadline_flushes = 0
+
+
+@dataclasses.dataclass
+class _Namespace:
+    name: str
+    service: LSHService
+    quota: TenantQuota
+    pending: int = 0           # admitted, not yet completed requests
+
+
+@dataclasses.dataclass
+class _QueryReq:
+    ns: _Namespace
+    x: Any                     # one item (no batch dim), pytree
+    topk: int
+    probes: int | None
+    mode: str | None
+    seed: int | None
+    future: Future
+    t_submit: float
+
+    @property
+    def group_key(self):
+        # sampling modes carry per-request seeds (independent draws) and
+        # never coalesce; id(self) makes the key unique
+        mode = self.mode
+        if mode in ("uniform", "weighted"):
+            return (id(self),)
+        return (self.ns.name, self.topk, self.probes, mode)
+
+
+_STOP = object()
+
+
+class ServingScheduler:
+    """Serve one or many ``LSHService`` namespaces through two lanes.
+
+    ``services``: a single service (namespace ``"default"``) or a
+    ``{name: service}`` dict. ``quotas``: optional ``{name: TenantQuota}``.
+    ``max_batch``: query-lane size flush (coalesced batch cap).
+    ``deadline_ms``: query-lane latency deadline — the oldest queued
+    request waits at most this long before its batch dispatches.
+    """
+
+    def __init__(self, services, *, max_batch: int = 64,
+                 deadline_ms: float = 2.0,
+                 quotas: dict[str, TenantQuota] | None = None):
+        if int(max_batch) < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if float(deadline_ms) < 0:
+            raise ValueError(f"deadline_ms must be >= 0, got {deadline_ms}")
+        if isinstance(services, LSHService):
+            services = {"default": services}
+        self.max_batch = int(max_batch)
+        self.deadline_s = float(deadline_ms) / 1e3
+        self.stats = SchedulerStats()
+        self._namespaces: dict[str, _Namespace] = {}
+        self._lock = threading.Lock()
+        quotas = quotas or {}
+        for name, svc in services.items():
+            self.add_namespace(name, svc, quota=quotas.get(name))
+        self._query_q: queue_lib.Queue = queue_lib.Queue()
+        self._ingest_q: queue_lib.Queue = queue_lib.Queue()
+        self._queries_inflight = 0   # submitted, future not yet resolved
+        self._closed = False
+        self._query_thread = threading.Thread(
+            target=self._query_loop, name="lsh-query-lane", daemon=True)
+        self._ingest_thread = threading.Thread(
+            target=self._ingest_loop, name="lsh-ingest-lane", daemon=True)
+        self._query_thread.start()
+        self._ingest_thread.start()
+
+    # -- namespaces ---------------------------------------------------------
+
+    def add_namespace(self, name: str, service: LSHService,
+                      quota: TenantQuota | None = None) -> None:
+        """Register a logical index under ``name`` (tenants share the mesh
+        through the services' own placement rules)."""
+        if name in self._namespaces:
+            raise ValueError(f"namespace {name!r} already registered")
+        self._namespaces[name] = _Namespace(
+            name=name, service=service, quota=quota or TenantQuota())
+
+    def namespaces(self) -> tuple[str, ...]:
+        return tuple(self._namespaces)
+
+    def service(self, tenant: str = "default") -> LSHService:
+        return self._ns(tenant).service
+
+    def tenant_stats(self, tenant: str = "default"):
+        """The tenant's ``ServiceStats`` (its per-tenant counters)."""
+        return self._ns(tenant).service.stats
+
+    def _ns(self, tenant: str) -> _Namespace:
+        ns = self._namespaces.get(tenant)
+        if ns is None:
+            raise KeyError(
+                f"unknown namespace {tenant!r}; registered: "
+                f"{sorted(self._namespaces)}")
+        return ns
+
+    def _admit(self, ns: _Namespace, new_items: int = 0) -> None:
+        with self._lock:
+            q = ns.quota
+            if q.max_pending is not None and ns.pending >= q.max_pending:
+                ns.service.stats.rejected += 1
+                raise QuotaExceeded(
+                    f"tenant {ns.name!r} has {ns.pending} pending requests "
+                    f"(max_pending={q.max_pending})")
+            if (new_items and q.max_items is not None
+                    and ns.service.index.size + new_items > q.max_items):
+                ns.service.stats.rejected += 1
+                raise QuotaExceeded(
+                    f"insert of {new_items} items would grow tenant "
+                    f"{ns.name!r} past max_items={q.max_items} "
+                    f"(live={ns.service.index.size})")
+            ns.pending += 1
+
+    def _done(self, ns: _Namespace, future: Future) -> Future:
+        def _dec(_):
+            with self._lock:
+                ns.pending -= 1
+        future.add_done_callback(_dec)
+        return future
+
+    # -- submission API -----------------------------------------------------
+
+    def query(self, x, *, tenant: str = "default", topk: int = 10,
+              probes: int | None = None, mode: str | None = None,
+              seed: int | None = None) -> Future:
+        """Submit ONE query (no batch dim) for coalescing; the future
+        resolves to (ids (topk,), scores (topk,), n_candidates) with -1
+        fill, exactly one row of ``LSHService.query_arrays``."""
+        ns = self._ns(tenant)
+        self._check_open()
+        self._admit(ns)
+        req = _QueryReq(ns=ns, x=x, topk=int(topk), probes=probes,
+                        mode=mode, seed=seed, future=Future(),
+                        t_submit=time.perf_counter())
+        with self._lock:
+            self._queries_inflight += 1
+        req.future.add_done_callback(self._query_resolved)
+        self._query_q.put(req)
+        return self._done(ns, req.future)
+
+    def _query_resolved(self, _future) -> None:
+        with self._lock:
+            self._queries_inflight -= 1
+
+    def _queries_waiting(self) -> bool:
+        """Any query submitted but not yet resolved — the ingest lane's
+        cue to cede the core between build programs."""
+        return self._queries_inflight > 0
+
+    def insert(self, batch, *, tenant: str = "default") -> Future:
+        """Submit an insert to the ingest lane; resolves to the service."""
+        ns = self._ns(tenant)
+        self._check_open()
+        n = jax.tree.leaves(batch)[0].shape[0]
+        self._admit(ns, new_items=n)
+        return self._submit_ingest(ns, lambda: ns.service.insert(batch))
+
+    def delete(self, ids, *, tenant: str = "default") -> Future:
+        """Submit a delete to the ingest lane; resolves to the count."""
+        ns = self._ns(tenant)
+        self._check_open()
+        self._admit(ns)
+        return self._submit_ingest(ns, lambda: ns.service.delete(ids))
+
+    def compact(self, tenant: str = "default") -> Future:
+        """Queue a compaction on the ingest lane: the replacement store is
+        built there (off the query path) and published as a pointer flip —
+        queries keep flowing the whole time."""
+        ns = self._ns(tenant)
+        self._check_open()
+        self._admit(ns)
+        return self._submit_ingest(
+            ns, lambda: ns.service.apply_swap(ns.service.prepare_compact()))
+
+    def rebalance(self, tenant: str = "default") -> Future:
+        """Queue a rebalance (sharded tenants) — same prepare/flip split."""
+        ns = self._ns(tenant)
+        self._check_open()
+        self._admit(ns)
+        return self._submit_ingest(
+            ns,
+            lambda: ns.service.apply_swap(ns.service.prepare_rebalance()))
+
+    def _submit_ingest(self, ns: _Namespace, fn) -> Future:
+        future: Future = Future()
+        self._ingest_q.put((fn, future))
+        return self._done(ns, future)
+
+    def flush(self, timeout: float | None = None) -> None:
+        """Block until everything submitted so far has executed."""
+        barriers = []
+        for q in (self._query_q, self._ingest_q):
+            f: Future = Future()
+            q.put((lambda: None, f))
+            barriers.append(f)
+        for f in barriers:
+            f.result(timeout=timeout)
+
+    def close(self) -> None:
+        """Drain both lanes and stop their threads."""
+        if self._closed:
+            return
+        self._closed = True
+        self._query_q.put(_STOP)
+        self._ingest_q.put(_STOP)
+        self._query_thread.join()
+        self._ingest_thread.join()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("scheduler is closed")
+
+    def __enter__(self) -> "ServingScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- lanes --------------------------------------------------------------
+
+    def _query_loop(self) -> None:
+        stop = False
+        while not stop:
+            item = self._query_q.get()
+            if item is _STOP:
+                return
+            if isinstance(item, tuple):     # flush barrier
+                item[1].set_result(None)
+                continue
+            batch, deferred = [item], []
+            deadline = item.t_submit + self.deadline_s
+            flush_kind = "deadline"
+            while len(batch) < self.max_batch:
+                try:
+                    # drain whatever is already queued without waiting —
+                    # when the lane falls behind, the backlog coalesces
+                    # into one batch even though the oldest request's
+                    # deadline has long passed
+                    nxt = self._query_q.get_nowait()
+                except queue_lib.Empty:
+                    timeout = deadline - time.perf_counter()
+                    if timeout <= 0:
+                        break
+                    try:
+                        nxt = self._query_q.get(timeout=timeout)
+                    except queue_lib.Empty:
+                        break
+                if nxt is _STOP:
+                    stop = True
+                    break
+                if isinstance(nxt, tuple):  # barrier: resolve after batch
+                    deferred.append(nxt[1])
+                    continue
+                batch.append(nxt)
+            else:
+                flush_kind = "size"
+            self._run_batch(batch, flush_kind)
+            for f in deferred:
+                f.set_result(None)
+
+    def _run_batch(self, batch: list[_QueryReq], flush_kind: str) -> None:
+        groups: dict[Any, list[_QueryReq]] = {}
+        for req in batch:
+            groups.setdefault(req.group_key, []).append(req)
+        self.stats.requests += len(batch)
+        self.stats.batches += len(groups)
+        if flush_kind == "size":
+            self.stats.size_flushes += 1
+        else:
+            self.stats.deadline_flushes += 1
+        for reqs in groups.values():
+            self._run_group(reqs)
+
+    def _run_group(self, reqs: list[_QueryReq]) -> None:
+        head = reqs[0]
+        try:
+            b = len(reqs)
+            padded = 1 << (b - 1).bit_length()  # stable program shapes
+            stacked = jax.tree.map(
+                lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                *[r.x for r in reqs])
+            if padded > b:
+                stacked = jax.tree.map(
+                    lambda a: np.concatenate(
+                        [a, np.repeat(a[:1], padded - b, axis=0)]),
+                    stacked)
+            ids, scores, n_cand = head.ns.service.query_arrays(
+                stacked, topk=head.topk, probes=head.probes, mode=head.mode,
+                seed=head.seed, stat_rows=b)
+            for i, req in enumerate(reqs):
+                req.future.set_result(
+                    (ids[i], scores[i], int(n_cand[i])))
+        except BaseException as exc:  # resolve every waiter, never wedge
+            for req in reqs:
+                if not req.future.done():
+                    req.future.set_exception(exc)
+
+    def _ingest_loop(self) -> None:
+        while True:
+            item = self._ingest_q.get()
+            if item is _STOP:
+                return
+            fn, future = item
+            try:
+                # mutations on this lane run cooperatively: the throttled
+                # store-build loops yield the core between bounded
+                # programs — but only while a query is actually in flight
+                # — so a pending query-lane batch submits ahead of the
+                # next build chunk and runs with most of the core instead
+                # of convoying behind the whole build (decisive on
+                # few-core hosts, where the lane thread otherwise keeps
+                # the CPU after every block)
+                with segments.cooperative_build(busy=self._queries_waiting):
+                    future.set_result(fn())
+            except BaseException as exc:
+                future.set_exception(exc)

@@ -13,6 +13,7 @@ just ``import grids``.
 """
 
 import jax
+import pytest
 
 from repro.core import make_family
 from repro.core.lsh import ALL_KINDS, E2LSH_KINDS, SRP_KINDS  # noqa: F401
@@ -28,6 +29,25 @@ def metric_for(kind: str) -> str:
     """The metric the kind's collision guarantees target (SRP hashes
     angles -> cosine; E2LSH hashes offsets -> euclidean)."""
     return "cosine" if kind.endswith("srp") else "euclidean"
+
+
+def cell_params(kinds=ALL_KINDS, metrics=METRICS):
+    """The kind x metric grid as parametrize cells, with every
+    *non-canonical* metric pairing marked ``slow``.
+
+    The canonical-metric half (SRP kinds -> cosine, E2LSH kinds ->
+    euclidean) already drives both scoring paths across the kind axis, so
+    the cross-metric half re-checks metric handling the fast leg has
+    covered with a different hash family in front of it — real coverage,
+    but redundant per-push. ``make test`` / the full CI leg still sweeps
+    the whole grid; ``make test-fast`` / the fast leg runs the canonical
+    half. Use as ``@pytest.mark.parametrize("kind,metric", cell_params())``
+    in place of stacking a kind and a metric decorator.
+    """
+    return [pytest.param(kind, metric,
+                         marks=() if metric == metric_for(kind)
+                         else (pytest.mark.slow,))
+            for kind in kinds for metric in metrics]
 
 
 def grid_family(kind: str, dims=DIMS, num_tables: int = 4, rank: int = 2,

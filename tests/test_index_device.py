@@ -34,8 +34,7 @@ def _build_pair(kind, metric, corpus):
     return host, device
 
 
-@pytest.mark.parametrize("metric", grids.METRICS)
-@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("kind,metric", grids.cell_params())
 class TestDeviceMatchesHost:
     def test_bucket_membership(self, kind, metric):
         corpus, queries = _data()

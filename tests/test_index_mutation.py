@@ -103,8 +103,7 @@ def _assert_bit_identical(got, want, msg=None, scores_exact=True):
 _assert_query_path = grids.assert_query_path
 
 
-@pytest.mark.parametrize("metric", grids.METRICS)
-@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("kind,metric", grids.cell_params())
 class TestStreamingParityDevice:
     def test_mutated_equals_fresh_rebuild(self, kind, metric):
         corpus, queries = _data()
@@ -130,8 +129,7 @@ class TestStreamingParityDevice:
 
 
 @pytest.mark.parametrize("shards", SHARD_COUNTS)
-@pytest.mark.parametrize("metric", grids.METRICS)
-@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("kind,metric", grids.cell_params())
 class TestStreamingParitySharded:
     """The acceptance matrix: 6 kinds x 2 metrics x S in {1, 2, 4} x
     {uncompacted, shard-locally compacted, rebalanced}. Ids, counts, and
@@ -511,6 +509,56 @@ class TestServiceMutations:
         _assert_bit_identical(svc.index.query_batch(queries, topk=TOPK),
                               fresh.query_batch(queries, topk=TOPK))
 
+    def test_auto_compact_counters_split_from_explicit(self):
+        """max_deltas-triggered folds land in ``auto_compactions`` /
+        ``auto_compact_ms`` and never inflate ``insert_ms`` — the ingest
+        throughput stat measures ingest, not fold cost."""
+        import time
+        corpus, _ = _data(9)
+        svc = LSHService(_family("cp-e2lsh"), metric="euclidean", shards=2,
+                         max_deltas=1).build(corpus)
+        ins1, ins2 = _inserts()
+        t0 = time.perf_counter()
+        svc.insert(ins1)
+        svc.insert(ins2)                   # 2 > max_deltas -> auto-compact
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        st = svc.stats
+        assert st.auto_compactions == 1 and st.auto_compact_ms > 0
+        assert st.compactions == 0         # no *explicit* fold happened
+        # the split is exact: the two timers partition the insert wall
+        assert st.insert_ms + st.auto_compact_ms <= wall_ms * 1.05
+        svc.insert(ins1)
+        svc.compact()
+        assert st.compactions == 1 and st.auto_compactions == 1
+
+    def test_rebuild_resets_mutation_counters_and_occupancy(self):
+        """``build()`` on a live service describes the new corpus from
+        scratch: stale mutation counters and the previous corpus's
+        ``shard_occupancy`` must not leak through — not even via the next
+        ``_sync_mutation_stats`` (the index's own counters reset too)."""
+        corpus, _ = _data(9)
+        svc = LSHService(_family("cp-e2lsh"), metric="euclidean", shards=2,
+                         max_deltas=1).build(corpus)
+        ins1, ins2 = _inserts()
+        svc.insert(ins1)
+        svc.insert(ins2)                   # auto-compact
+        svc.delete(DEL1)
+        svc.compact()
+        corpus2, _ = grids.corpus_and_queries(N_CORPUS + 5, N_QUERIES,
+                                              seed=12)
+        svc.build(corpus2)
+        st = svc.stats
+        assert st.inserted == st.insert_batches == 0
+        assert st.deleted == st.delete_batches == 0
+        assert st.compactions == st.auto_compactions == st.rebalances == 0
+        assert st.insert_ms == st.compact_ms == st.auto_compact_ms == 0.0
+        assert sum(st.shard_occupancy) == svc.index.size == N_CORPUS + 5
+        # post-rebuild history starts from zero: one insert, no ghosts
+        svc.insert(ins1)
+        assert st.inserted == N_INS1 and st.insert_batches == 1
+        assert st.compactions == 0 and st.auto_compactions == 0
+        assert sum(st.shard_occupancy) == N_CORPUS + 5 + N_INS1
+
     def test_host_service_is_rebuild_only(self):
         corpus, _ = _data(10)
         svc = LSHService(_family("srp"), metric="cosine",
@@ -542,6 +590,7 @@ class TestServiceMutations:
         assert stats["corpus_size"] == idx.size
 
 
+@pytest.mark.slow
 class TestShardMapStreamingMultiDevice:
     """Force a 4-device host platform in a subprocess so the shard_map path
     of the shard-native mutated store runs in every tier-1 invocation (the

@@ -121,8 +121,7 @@ def _reference_probe_keys(fam, mults, queries, probes):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("metric", grids.METRICS)
-@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("kind,metric", grids.cell_params())
 class TestSingleProbeBitIdentity:
     @pytest.mark.parametrize("mutated", [False, True],
                              ids=["fresh", "mutated"])
@@ -507,6 +506,24 @@ class TestModeContracts:
             svc.query_arrays(queries, mode="topk", seed=1)  # spurious seed
         with pytest.raises(ValueError, match="unknown query mode"):
             svc.query_arrays(queries, mode="nearest")
+
+    def test_service_rejects_bad_override_values(self):
+        """Per-request ``probes``/``topk`` overrides are validated at the
+        service boundary — a bad value must raise, not silently dispatch a
+        nonsense program (or worse, a negative-size gather)."""
+        corpus, queries = _data()
+        svc = LSHService(_family("e2lsh"), metric="euclidean").build(corpus)
+        for probes in (0, -1, -7):
+            with pytest.raises(ValueError, match="probes must be >= 1"):
+                svc.query_arrays(queries, probes=probes)
+        for topk in (0, -1, -5):
+            with pytest.raises(ValueError, match="topk must be >= 1"):
+                svc.query_arrays(queries, topk=topk)
+        # the rejected requests must not have dispatched or been counted
+        assert svc.stats.topk_queries == 0
+        ids, _, _ = svc.query_arrays(queries, probes=2, topk=3)
+        assert ids.shape == (len(queries), 3)
+        assert svc.stats.topk_queries == N_QUERIES
 
     def test_service_mode_counters_and_replay(self):
         corpus, queries = _data()
