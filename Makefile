@@ -5,8 +5,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast bench bench-index bench-index-sharded \
-	bench-index-mut bench-multiprobe bench-ingest bench-slo bench-hash \
-	bench-kernels
+	bench-index-mut bench-multiprobe bench-ingest bench-slo \
+	bench-recovery bench-hash bench-kernels
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -36,6 +36,9 @@ bench-ingest:
 
 bench-slo:
 	$(PYTHON) -m benchmarks.serving_slo
+
+bench-recovery:
+	$(PYTHON) -m benchmarks.durability
 
 bench-hash:
 	$(PYTHON) -m benchmarks.hash_throughput

@@ -1,0 +1,163 @@
+"""Durability overhead + recovery-time benchmark for the mutable index.
+
+Replays the bench-ingest workload (clustered n=100k corpus, 1024-item
+insert batches, cp-e2lsh K=4 x 8 tables) through a plain ``LSHService``
+and a ``DurableLSHService`` writing its WAL to a scratch directory, then
+measures crash recovery (latest snapshot + log-suffix replay). The
+acceptance gate this feeds: WAL-on insert throughput within 10% of
+WAL-off.
+
+CSV rows (name,us_per_call,derived):
+
+  durability/insert_wal_off_b{B}   us = per insert batch (median),
+                                   derived = items/s
+  durability/insert_wal_on_b{B}    us = same batches, WAL fsync'd per
+                                   append, derived = items/s|+X.X%
+  durability/wal_append            us = caller-visible WAL commit time per
+                                   record (the append + fsync overlap the
+                                   in-memory apply; this is begin() plus
+                                   the finish() wait), derived = records
+  durability/snapshot              us = one atomic full-store snapshot,
+                                   derived = n items
+  durability/recover               us = snapshot load + replay of the
+                                   log suffix, derived = records replayed
+
+``run()`` appends one trajectory entry to BENCH_index.json (tagged
+``"bench": "durability"``). Set BENCH_RECOVERY_N to shrink for smoke
+runs.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import append_trajectory, emit
+from repro.core import make_family
+from repro.serving.durability import DurableLSHService
+from repro.serving.lsh_service import LSHService
+
+DIMS = (8, 8, 8)
+N_CORPUS = int(os.environ.get("BENCH_RECOVERY_N", 100_000))
+PER_CLUSTER = 8
+NOISE = 0.15
+INSERT_BATCH = 1024
+DELETE_BATCH = 256
+N_ROUNDS = 8                  # timed rounds (after 1 compile-warmup round)
+BUCKET_CAP = 64
+NO_SNAP = 10 ** 9             # keep periodic snapshots out of insert timing
+
+
+def _data():
+    kc, kn, ki, kf = jax.random.split(jax.random.PRNGKey(29), 4)
+    n_clusters = max(N_CORPUS // PER_CLUSTER, 1)
+    centers = jax.random.normal(kc, (n_clusters,) + DIMS)
+    corpus = (jnp.repeat(centers, PER_CLUSTER, axis=0)[:N_CORPUS]
+              + NOISE * jax.random.normal(kn, (N_CORPUS,) + DIMS))
+    n_ins = (N_ROUNDS + 1) * INSERT_BATCH
+    inserts = np.asarray(
+        jnp.tile(centers, (n_ins // n_clusters + 1,) + (1,) * len(DIMS))
+        [:n_ins] + NOISE * jax.random.normal(ki, (n_ins,) + DIMS),
+        np.float32)
+    fam = make_family(kf, "cp-e2lsh", DIMS, num_codes=4, num_tables=8,
+                      rank=2, bucket_width=16.0)
+    return corpus, inserts, fam
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def _ingest_rounds(svc, inserts) -> list[float]:
+    """One warmup + N_ROUNDS timed insert/delete rounds (the bench-ingest
+    cadence); -> per-insert-batch wall times in us."""
+    rng = np.random.default_rng(7)
+    times = []
+    for r in range(N_ROUNDS + 1):
+        batch = inserts[r * INSERT_BATCH:(r + 1) * INSERT_BATCH]
+        t = _timed(lambda: jax.block_until_ready(
+            svc.insert(batch).index.store.deltas[-1].sorted_keys))
+        svc.delete(rng.choice(svc.index.size, size=DELETE_BATCH,
+                              replace=False))
+        if r > 0:                             # round 0 pays the compiles
+            times.append(t)
+        else:
+            # Round 0 also pays the one-time WAL segment rotation (a 64MB
+            # prezero); drop it from the per-append stats.
+            svc.stats.wal_ms, svc.stats.wal_appends = 0.0, 0
+    return times
+
+
+def _median(xs):
+    return sorted(xs)[len(xs) // 2]
+
+
+def run() -> list[str]:
+    rows = []
+    corpus, inserts, fam = _data()
+    kw = dict(metric="euclidean", bucket_cap=BUCKET_CAP,
+              max_deltas=2 * (N_ROUNDS + 2))
+
+    plain = LSHService(fam, **kw).build(corpus)
+    off_us = _median(_ingest_rounds(plain, inserts))
+    off_ips = INSERT_BATCH / (off_us / 1e6)
+    rows.append(emit(f"durability/insert_wal_off_b{INSERT_BATCH}", off_us,
+                     f"{off_ips:.0f}"))
+    del plain
+
+    scratch = tempfile.mkdtemp(prefix="bench_durability_",
+                               dir=os.path.dirname(os.path.abspath(__file__)))
+    try:
+        svc = DurableLSHService(fam, scratch, snapshot_every=NO_SNAP,
+                                **kw).build(corpus)
+        on_us = _median(_ingest_rounds(svc, inserts))
+        on_ips = INSERT_BATCH / (on_us / 1e6)
+        overhead = (on_us - off_us) / off_us * 100.0
+        rows.append(emit(f"durability/insert_wal_on_b{INSERT_BATCH}", on_us,
+                         f"{on_ips:.0f}|{overhead:+.1f}%"))
+        rows.append(emit("durability/wal_append",
+                         svc.stats.wal_ms * 1e3 / max(svc.stats.wal_appends,
+                                                      1),
+                         svc.stats.wal_appends))
+
+        snap_us = _timed(svc.snapshot)        # rotates: replay starts here
+        rows.append(emit("durability/snapshot", snap_us, svc.index.size))
+
+        _ingest_rounds(svc, inserts)          # the log suffix to replay
+        replayed = svc._log.next_lsn - svc._cover
+        svc.close()
+
+        fresh = DurableLSHService(fam, scratch, snapshot_every=NO_SNAP, **kw)
+        rec_us = _timed(lambda: jax.block_until_ready(
+            fresh.recover().index.store.base.sorted_keys))
+        rows.append(emit("durability/recover", rec_us, replayed))
+
+        append_trajectory({
+            "bench": "durability", "n_devices": len(jax.devices()),
+            "corpus_n": N_CORPUS, "insert_batch": INSERT_BATCH,
+            "rounds": N_ROUNDS,
+            "insert_items_per_s_wal_off": round(off_ips),
+            "insert_items_per_s_wal_on": round(on_ips),
+            "wal_overhead_pct": round(overhead, 2),
+            "wal_append_ms": round(
+                svc.stats.wal_ms / max(svc.stats.wal_appends, 1), 3),
+            "snapshot_s": round(snap_us / 1e6, 3),
+            "recovery_s": round(rec_us / 1e6, 3),
+            "recovery_records_replayed": int(replayed),
+        })
+        fresh.close()
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -7,10 +7,10 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (collision, hash_throughput, index_ingest,
-                            index_multiprobe, index_mutation, index_qps,
-                            index_sharded, kernels, recall, serving_slo,
-                            table1_e2lsh, table2_srp)
+    from benchmarks import (collision, durability, hash_throughput,
+                            index_ingest, index_multiprobe, index_mutation,
+                            index_qps, index_sharded, kernels, recall,
+                            serving_slo, table1_e2lsh, table2_srp)
     print("name,us_per_call,derived")
     rows = []
     rows += table1_e2lsh.run()
@@ -23,6 +23,7 @@ def main() -> None:
     rows += index_mutation.run()
     rows += index_ingest.run()
     rows += serving_slo.run()
+    rows += durability.run()
     rows += hash_throughput.run()
     rows += kernels.run()
     print(f"# {len(rows)} benchmark rows", file=sys.stderr)

@@ -1264,6 +1264,47 @@ class SegmentStore:
             off += seg.slots
         return counts
 
+    # -- durability hooks ----------------------------------------------------
+
+    def host_state(self) -> dict:
+        """The host-side bookkeeping a snapshot must persist next to the
+        segment arrays: the slot -> sequence-position maps, the tombstone
+        mask, and the sequence clock. Everything else the store serves
+        (liveness/effective-id/live-window lookups, the published view) is
+        re-derived deterministically by ``restore`` via ``_refresh``, so a
+        snapshot never has to serialize device lookups."""
+        return {
+            "slot_pos": [np.asarray(p, np.int64) for p in self.slot_pos],
+            "live_host": np.asarray(self.live_host, bool),
+            "seq_len": int(self.seq_len),
+            "live_window": bool(self.live_window),
+        }
+
+    @classmethod
+    def restore(cls, segs, state: dict, *,
+                place: Callable | None = None) -> "SegmentStore":
+        """Rebuild a store from snapshotted segments + ``host_state()``.
+
+        Installs the raw host state, then re-derives every lookup and
+        publishes a fresh view through ``_refresh`` — the same code path
+        every live mutation ends with — so a restored store answers
+        queries bit-identically to the one that was snapshotted."""
+        if len(segs) != len(state["slot_pos"]):
+            raise ValueError(
+                f"{len(segs)} segments but {len(state['slot_pos'])} "
+                "slot_pos maps in the snapshot state")
+        store = cls.__new__(cls)
+        store.base = segs[0]
+        store.deltas = list(segs[1:])
+        store.place = place or (lambda t: t)
+        store.live_window = bool(state["live_window"])
+        store._generation = 0
+        store.slot_pos = [np.asarray(p, np.int64) for p in state["slot_pos"]]
+        store.live_host = np.asarray(state["live_host"], bool)
+        store.seq_len = int(state["seq_len"])
+        store._refresh()
+        return store
+
     # -- mutations ----------------------------------------------------------
 
     def append_delta(self, seg, positions: np.ndarray | None = None) -> None:

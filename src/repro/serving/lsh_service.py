@@ -89,6 +89,18 @@ class ServiceStats:
                                # (set by the serving scheduler)
     shard_occupancy: tuple[int, ...] = ()  # live items per shard (sharded
                                            # index only; updated per mutation)
+    # robustness / durability counters
+    errors: int = 0            # failed ingest-lane mutations (scheduler)
+    last_error: str = ""       # "<Type>: <message>" of the newest failure
+    retries: int = 0           # ingest retries after transient IO failures
+    timeouts: int = 0          # requests expired past the scheduler deadline
+    unavailable: int = 0       # requests shed while degraded/recovering
+    recoveries: int = 0        # successful snapshot+replay recoveries
+    recovery_ms: float = 0.0   # restore + replay wall time
+    wal_appends: int = 0       # committed WAL records
+    wal_ms: float = 0.0        # fsync-inclusive WAL append wall time
+    snapshots: int = 0         # atomic snapshots written
+    snapshot_ms: float = 0.0
 
     @property
     def occupancy_skew(self) -> float:
@@ -133,6 +145,10 @@ class ServiceStats:
         self.auto_compact_ms = self.rebalance_ms = 0.0
         self.rejected = 0
         self.shard_occupancy = ()
+        self.errors = self.retries = self.timeouts = self.unavailable = 0
+        self.last_error = ""
+        self.recoveries = self.wal_appends = self.snapshots = 0
+        self.recovery_ms = self.wal_ms = self.snapshot_ms = 0.0
 
 
 class LSHService:
@@ -168,6 +184,8 @@ class LSHService:
                     "index always probes full buckets (pass device=True)")
             self.index = HostLSHIndex(family, metric=metric)
         self.stats = ServiceStats()
+        self.health = "serving"  # namespace health; the durable subclass
+                                 # moves through cold/recovering/degraded
 
     def build(self, corpus, batch_size: int = 2048) -> "LSHService":
         t0 = time.perf_counter()

@@ -36,8 +36,20 @@ are the tenant's own ``ServiceStats``.
 
 Every submission returns a ``concurrent.futures.Future``; exceptions (bad
 overrides, quota-free service errors) resolve through it. ``flush()``
-drains both lanes; the scheduler is a context manager (``close()`` stops
-the lanes).
+drains both lanes (and raises ``TimeoutError`` rather than letting a
+stalled lane read as drained); the scheduler is a context manager
+(``close()`` stops the lanes).
+
+*Robustness*: the ingest lane retries transient WAL/IO failures
+(``durability.TransientIOError``) with bounded exponential backoff and
+records terminal failures on both the scheduler's and the tenant's stats
+(``errors``/``last_error``) — a dropped future never silently swallows a
+failed mutation. Exhausted retries or an injected crash mark the
+namespace ``"degraded"``; degraded/recovering namespaces shed every
+request with a typed ``ServiceUnavailable`` at submission instead of
+hanging, until ``recover_namespace()`` replays the tenant's durable
+state back to ``"serving"``. ``request_timeout_ms`` expires requests that
+sat queued too long with a ``RequestTimeout``.
 """
 
 from __future__ import annotations
@@ -47,17 +59,26 @@ import queue as queue_lib
 import threading
 import time
 from concurrent.futures import Future
-from typing import Any
+from concurrent.futures import TimeoutError as _FutureTimeout
+from typing import Any, Callable
 
 import jax
 import numpy as np
 
 from repro.core import segments
+from repro.serving.durability import (InjectedCrash, ServiceUnavailable,
+                                      TransientIOError)
 from repro.serving.lsh_service import LSHService
 
 
 class QuotaExceeded(RuntimeError):
     """A tenant quota refused this request at admission."""
+
+
+class RequestTimeout(TimeoutError):
+    """The request sat queued past ``request_timeout_ms``; its future
+    resolves with this instead of running against state the caller has
+    long stopped waiting for."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +102,11 @@ class SchedulerStats:
     batches: int = 0           # jit dispatches on the query lane
     size_flushes: int = 0      # batches flushed by the max_batch cap
     deadline_flushes: int = 0  # batches flushed by the latency deadline
+    errors: int = 0            # ingest-lane mutations that failed for good
+    last_error: str = ""       # "<Type>: <message>" of the newest failure
+    retries: int = 0           # ingest re-runs after transient IO failures
+    timeouts: int = 0          # requests expired past request_timeout_ms
+    shed: int = 0              # requests refused on a non-serving namespace
 
     @property
     def mean_batch(self) -> float:
@@ -91,6 +117,8 @@ class SchedulerStats:
         """Zero the counters (e.g. after a warm-up/calibration burst)."""
         self.requests = self.batches = 0
         self.size_flushes = self.deadline_flushes = 0
+        self.errors = self.retries = self.timeouts = self.shed = 0
+        self.last_error = ""
 
 
 @dataclasses.dataclass
@@ -122,6 +150,14 @@ class _QueryReq:
         return (self.ns.name, self.topk, self.probes, mode)
 
 
+@dataclasses.dataclass
+class _IngestReq:
+    ns: _Namespace
+    fn: Callable
+    future: Future
+    t_submit: float
+
+
 _STOP = object()
 
 
@@ -133,19 +169,38 @@ class ServingScheduler:
     ``max_batch``: query-lane size flush (coalesced batch cap).
     ``deadline_ms``: query-lane latency deadline — the oldest queued
     request waits at most this long before its batch dispatches.
+    ``request_timeout_ms``: requests still queued past this age resolve
+    with ``RequestTimeout`` instead of running (None = never expire).
+    ``ingest_retries`` / ``retry_backoff_ms``: the ingest lane re-runs a
+    mutation that failed with a *transient* IO error
+    (``durability.TransientIOError``) up to ``ingest_retries`` times with
+    exponential backoff (capped at 1 s); exhausting the retries — or an
+    ``InjectedCrash`` — marks the namespace ``"degraded"``, after which
+    requests shed with ``ServiceUnavailable`` until
+    ``recover_namespace()`` brings it back.
     """
 
     def __init__(self, services, *, max_batch: int = 64,
                  deadline_ms: float = 2.0,
-                 quotas: dict[str, TenantQuota] | None = None):
+                 quotas: dict[str, TenantQuota] | None = None,
+                 request_timeout_ms: float | None = None,
+                 ingest_retries: int = 3,
+                 retry_backoff_ms: float = 10.0):
         if int(max_batch) < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if float(deadline_ms) < 0:
             raise ValueError(f"deadline_ms must be >= 0, got {deadline_ms}")
+        if int(ingest_retries) < 0:
+            raise ValueError(
+                f"ingest_retries must be >= 0, got {ingest_retries}")
         if isinstance(services, LSHService):
             services = {"default": services}
         self.max_batch = int(max_batch)
         self.deadline_s = float(deadline_ms) / 1e3
+        self.timeout_s = (None if request_timeout_ms is None
+                          else float(request_timeout_ms) / 1e3)
+        self.ingest_retries = int(ingest_retries)
+        self.backoff_s = float(retry_backoff_ms) / 1e3
         self.stats = SchedulerStats()
         self._namespaces: dict[str, _Namespace] = {}
         self._lock = threading.Lock()
@@ -216,6 +271,45 @@ class ServingScheduler:
         future.add_done_callback(_dec)
         return future
 
+    # -- health -------------------------------------------------------------
+
+    def _shed_unless_serving(self, ns: _Namespace) -> None:
+        """Degraded-mode serving: a non-serving namespace sheds at
+        submission with a typed error instead of queueing work that would
+        hang or run against an inconsistent store."""
+        health = getattr(ns.service, "health", "serving")
+        if health != "serving":
+            ns.service.stats.unavailable += 1
+            self.stats.shed += 1
+            raise ServiceUnavailable(
+                f"namespace {ns.name!r} is {health!r}; request shed "
+                "(recover_namespace() restores it)")
+
+    def _set_health(self, ns: _Namespace, health: str) -> None:
+        ns.service.health = health
+
+    def _record_error(self, ns: _Namespace, exc: BaseException) -> None:
+        msg = f"{type(exc).__name__}: {exc}"
+        self.stats.errors += 1
+        self.stats.last_error = msg
+        ns.service.stats.errors += 1
+        ns.service.stats.last_error = msg
+
+    def recover_namespace(self, tenant: str = "default") -> Future:
+        """Queue a snapshot+replay recovery of a degraded durable tenant
+        on the ingest lane (bypasses health shedding — this is the one
+        request a non-serving namespace must accept). Resolves to the
+        service once it is back to ``"serving"``."""
+        ns = self._ns(tenant)
+        self._check_open()
+        recover = getattr(ns.service, "recover", None)
+        if recover is None:
+            raise TypeError(
+                f"namespace {ns.name!r} serves a non-durable service; "
+                "recovery needs a DurableLSHService")
+        self._admit(ns)
+        return self._submit_ingest(ns, recover)
+
     # -- submission API -----------------------------------------------------
 
     def query(self, x, *, tenant: str = "default", topk: int = 10,
@@ -226,6 +320,7 @@ class ServingScheduler:
         fill, exactly one row of ``LSHService.query_arrays``."""
         ns = self._ns(tenant)
         self._check_open()
+        self._shed_unless_serving(ns)
         self._admit(ns)
         req = _QueryReq(ns=ns, x=x, topk=int(topk), probes=probes,
                         mode=mode, seed=seed, future=Future(),
@@ -249,6 +344,7 @@ class ServingScheduler:
         """Submit an insert to the ingest lane; resolves to the service."""
         ns = self._ns(tenant)
         self._check_open()
+        self._shed_unless_serving(ns)
         n = jax.tree.leaves(batch)[0].shape[0]
         self._admit(ns, new_items=n)
         return self._submit_ingest(ns, lambda: ns.service.insert(batch))
@@ -257,6 +353,7 @@ class ServingScheduler:
         """Submit a delete to the ingest lane; resolves to the count."""
         ns = self._ns(tenant)
         self._check_open()
+        self._shed_unless_serving(ns)
         self._admit(ns)
         return self._submit_ingest(ns, lambda: ns.service.delete(ids))
 
@@ -266,6 +363,7 @@ class ServingScheduler:
         queries keep flowing the whole time."""
         ns = self._ns(tenant)
         self._check_open()
+        self._shed_unless_serving(ns)
         self._admit(ns)
         return self._submit_ingest(
             ns, lambda: ns.service.apply_swap(ns.service.prepare_compact()))
@@ -274,25 +372,39 @@ class ServingScheduler:
         """Queue a rebalance (sharded tenants) — same prepare/flip split."""
         ns = self._ns(tenant)
         self._check_open()
+        self._shed_unless_serving(ns)
         self._admit(ns)
         return self._submit_ingest(
             ns,
             lambda: ns.service.apply_swap(ns.service.prepare_rebalance()))
 
     def _submit_ingest(self, ns: _Namespace, fn) -> Future:
-        future: Future = Future()
-        self._ingest_q.put((fn, future))
-        return self._done(ns, future)
+        req = _IngestReq(ns=ns, fn=fn, future=Future(),
+                         t_submit=time.perf_counter())
+        self._ingest_q.put(req)
+        return self._done(ns, req.future)
 
     def flush(self, timeout: float | None = None) -> None:
-        """Block until everything submitted so far has executed."""
+        """Block until everything submitted so far has executed. Raises
+        ``TimeoutError`` when the lanes have not drained within
+        ``timeout`` seconds (one shared deadline across both) — a stalled
+        lane must never read as a drained one."""
+        deadline = (None if timeout is None
+                    else time.perf_counter() + float(timeout))
         barriers = []
         for q in (self._query_q, self._ingest_q):
             f: Future = Future()
             q.put((lambda: None, f))
             barriers.append(f)
         for f in barriers:
-            f.result(timeout=timeout)
+            left = (None if deadline is None
+                    else max(deadline - time.perf_counter(), 0.0))
+            try:
+                f.result(timeout=left)
+            except _FutureTimeout:
+                raise TimeoutError(
+                    f"flush timed out after {timeout}s with work still "
+                    "queued on the lanes") from None
 
     def close(self) -> None:
         """Drain both lanes and stop their threads."""
@@ -369,7 +481,24 @@ class ServingScheduler:
         for reqs in groups.values():
             self._run_group(reqs)
 
+    def _expire(self, req) -> None:
+        self.stats.timeouts += 1
+        req.ns.service.stats.timeouts += 1
+        req.future.set_exception(RequestTimeout(
+            f"request queued for more than "
+            f"{self.timeout_s * 1e3:g} ms (request_timeout_ms)"))
+
     def _run_group(self, reqs: list[_QueryReq]) -> None:
+        if self.timeout_s is not None:
+            now, live = time.perf_counter(), []
+            for req in reqs:
+                if now - req.t_submit > self.timeout_s:
+                    self._expire(req)
+                else:
+                    live.append(req)
+            reqs = live
+            if not reqs:
+                return
         head = reqs[0]
         try:
             b = len(reqs)
@@ -398,7 +527,18 @@ class ServingScheduler:
             item = self._ingest_q.get()
             if item is _STOP:
                 return
-            fn, future = item
+            if isinstance(item, tuple):     # flush barrier
+                item[1].set_result(None)
+                continue
+            self._run_ingest(item)
+
+    def _run_ingest(self, req: _IngestReq) -> None:
+        if (self.timeout_s is not None
+                and time.perf_counter() - req.t_submit > self.timeout_s):
+            self._expire(req)
+            return
+        attempt = 0
+        while True:
             try:
                 # mutations on this lane run cooperatively: the throttled
                 # store-build loops yield the core between bounded
@@ -409,6 +549,26 @@ class ServingScheduler:
                 # few-core hosts, where the lane thread otherwise keeps
                 # the CPU after every block)
                 with segments.cooperative_build(busy=self._queries_waiting):
-                    future.set_result(fn())
+                    req.future.set_result(req.fn())
+                return
+            except TransientIOError as exc:
+                # retryable IO on the durability plane: nothing was
+                # committed, so re-running the mutation is safe
+                if attempt >= self.ingest_retries:
+                    self._record_error(req.ns, exc)
+                    self._set_health(req.ns, "degraded")
+                    req.future.set_exception(exc)
+                    return
+                attempt += 1
+                self.stats.retries += 1
+                req.ns.service.stats.retries += 1
+                time.sleep(min(self.backoff_s * 2 ** (attempt - 1), 1.0))
             except BaseException as exc:
-                future.set_exception(exc)
+                # non-retryable: record it on the tenant so a dropped
+                # future can't swallow a failed mutation; a simulated
+                # crash leaves memory state untrusted -> degrade
+                self._record_error(req.ns, exc)
+                if isinstance(exc, InjectedCrash):
+                    self._set_health(req.ns, "degraded")
+                req.future.set_exception(exc)
+                return

@@ -1,0 +1,551 @@
+"""Crash recovery must be invisible: the chaos matrix of the durable index.
+
+The contract pinned here, per store layout (device + sharded S in
+{1, 2, 4}) and across every hash-family kind:
+
+* **Commit point** — an operation is durable iff its WAL append
+  completed. For every named crash point (``pre_wal_append`` /
+  ``post_wal_append`` / ``mid_snapshot`` / ``pre_apply_swap``) and for
+  seeded random kill schedules over interleaved
+  insert/delete/query/compact traffic, a recovered service answers
+  queries (ids, scores, counts, candidate sets) **bit-identically** to a
+  fresh service that applied exactly the committed prefix.
+* **WAL edge cases** — a torn final record is dropped; checksum damage
+  or an lsn gap before the tail raises ``WalCorrupted``; an empty log
+  and a snapshot-with-no-log recover cleanly; replay crosses
+  ``apply_swap`` epoch markers. Never a silent partial store.
+* **Degraded-mode serving** — transient WAL failures retry with backoff
+  on the scheduler's ingest lane; exhausted retries or an injected crash
+  degrade the namespace, which then sheds with ``ServiceUnavailable``
+  until ``recover_namespace()`` replays it back; poisoned mutations and
+  expired requests land in the ``errors``/``timeouts`` counters instead
+  of vanishing with a dropped future.
+"""
+
+import os
+import struct
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+import grids
+from repro.serving.durability import (_ALIGN, CRASH_POINTS,
+                                      DurableLSHService, FaultInjector,
+                                      InjectedCrash, RecoveryError,
+                                      ServiceUnavailable, TransientIOError,
+                                      WalCorrupted, read_wal)
+from repro.serving.lsh_service import LSHService
+from repro.serving.scheduler import RequestTimeout, ServingScheduler
+
+TOPK = 6
+N_CORPUS = 67          # coprime to every shard count: padded last shard
+N_QUERIES = 5
+KIND = "cp-e2lsh"
+LAYOUTS = (None,) + grids.SHARD_COUNTS    # device + sharded S in {1,2,4}
+NO_SNAP = 10 ** 9      # snapshot_every that never triggers mid-test
+
+# Which side of the crash point the in-flight operation lands on:
+# pre_wal_append fires before the record exists (not committed); the other
+# points fire after the fsync (committed, even though the caller saw the
+# crash).
+COMMITS_INFLIGHT = {"pre_wal_append": False, "post_wal_append": True,
+                    "mid_snapshot": True, "pre_apply_swap": True}
+
+
+def _fixture():
+    return grids.corpus_and_queries(N_CORPUS, N_QUERIES)
+
+
+def _durable(directory, shards=None, kind=KIND, injector=None,
+             snapshot_every=NO_SNAP, build=True, **kw):
+    kw.setdefault("bucket_cap", 16)
+    kw.setdefault("max_deltas", 64)
+    svc = DurableLSHService(grids.grid_family(kind), str(directory),
+                            metric=grids.metric_for(kind), shards=shards,
+                            injector=injector,
+                            snapshot_every=snapshot_every, **kw)
+    if build:
+        svc.build(_fixture()[0])
+    return svc
+
+
+def _recovered(directory, shards=None, kind=KIND, **kw):
+    return _durable(directory, shards=shards, kind=kind, build=False,
+                    **kw).recover()
+
+
+def _plain(shards=None, kind=KIND, **kw):
+    kw.setdefault("bucket_cap", 16)
+    kw.setdefault("max_deltas", 64)
+    return LSHService(grids.grid_family(kind), metric=grids.metric_for(kind),
+                      shards=shards, **kw).build(_fixture()[0])
+
+
+def _schedule(seed, n_ops, live=N_CORPUS):
+    """A deterministic interleaved op list. Delete ids are drawn against
+    the simulated live count, so applying any prefix to any equally-built
+    service is well-defined."""
+    rng = np.random.RandomState(seed)
+    ops = []
+    for _ in range(n_ops):
+        r = rng.rand()
+        if r < 0.55 or live < 16:
+            k = int(rng.randint(1, 7))
+            ops.append(("insert", rng.randn(k, *grids.DIMS)
+                        .astype(np.float32)))
+            live += k
+        elif r < 0.85:
+            ids = np.unique(rng.randint(0, live, size=int(rng.randint(1, 4))))
+            ops.append(("delete", ids.astype(np.int64)))
+            live -= len(ids)
+        else:
+            ops.append(("compact", None))
+    return ops
+
+
+def _fixed_ops():
+    """insert/delete/compact mix with the epoch markers at known slots
+    (records 3 and 6), so every crash point can be aimed precisely."""
+    rng = np.random.RandomState(3)
+    mk = lambda k: rng.randn(k, *grids.DIMS).astype(np.float32)
+    return [("insert", mk(5)), ("delete", np.array([3, 11])),
+            ("insert", mk(4)), ("compact", None), ("insert", mk(3)),
+            ("delete", np.array([0, 20, 40])), ("compact", None),
+            ("insert", mk(6))]
+
+
+def _apply(svc, op):
+    kind, arg = op
+    if kind == "insert":
+        svc.insert(arg)
+    elif kind == "delete":
+        svc.delete(arg)
+    else:
+        svc.compact()
+
+
+def _run_until_crash(svc, ops, queries=None):
+    """Apply ops until an injected crash; -> (applied_ops, inflight_op).
+    ``queries`` interleaves query traffic between mutations (the store
+    must serve bit-identically throughout; crash points never fire on the
+    query path)."""
+    applied = []
+    for i, op in enumerate(ops):
+        try:
+            _apply(svc, op)
+        except InjectedCrash:
+            return applied, op
+        applied.append(op)
+        if queries is not None and i % 3 == 2:
+            svc.query_arrays(queries[:2], topk=4)
+    return applied, None
+
+
+def _committed(applied, inflight, point):
+    if inflight is not None and COMMITS_INFLIGHT[point]:
+        return applied + [inflight]
+    return applied
+
+
+def _assert_bit_identical(got, want, queries):
+    """ids, scores, counts AND candidate sets, all exactly equal."""
+    a, b = got.query_arrays(queries, topk=TOPK), \
+        want.query_arrays(queries, topk=TOPK)
+    for name, x, y in zip(("ids", "scores", "n_cand"), a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=name)
+    for q in np.asarray(queries)[:3]:
+        np.testing.assert_array_equal(got.index.candidates(q),
+                                      want.index.candidates(q),
+                                      err_msg="candidate set")
+
+
+def _wal_paths(directory):
+    return sorted(os.path.join(str(directory), n)
+                  for n in os.listdir(str(directory))
+                  if n.startswith("wal_") and n.endswith(".log"))
+
+
+def _frames(path):
+    """(offset, length) of each record in a segment (aligned stepping,
+    zero-length sentinel = end)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    out, off = [], 0
+    while off + 8 <= len(data):
+        length, _ = struct.unpack_from("<II", data, off)
+        if length == 0:
+            break
+        out.append((off, length))
+        off = (off + 8 + length + _ALIGN - 1) // _ALIGN * _ALIGN
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Recovery parity
+# ---------------------------------------------------------------------------
+
+
+class TestRecoveryParity:
+    @pytest.mark.parametrize("shards", LAYOUTS)
+    def test_clean_recovery_matches_live_service(self, tmp_path, shards):
+        _, queries = _fixture()
+        svc = _durable(tmp_path, shards=shards)
+        for op in _fixed_ops():
+            _apply(svc, op)
+        rec = _recovered(tmp_path, shards=shards)
+        if shards is not None:
+            grids.assert_query_path(rec.index)
+        _assert_bit_identical(rec, svc, queries)
+        assert rec.stats.recoveries == 1
+        assert rec.stats.compactions == 2     # replayed both epoch markers
+        assert rec.health == "serving"
+        # the recovered WAL accepts new commits and they recover again
+        # (close the original's log first: one writer per directory)
+        svc.close()
+        extra = np.float32(np.random.RandomState(5).randn(3, *grids.DIMS))
+        rec.insert(extra)
+        ref = _plain(shards=shards)
+        for op in _fixed_ops() + [("insert", extra)]:
+            _apply(ref, op)
+        _assert_bit_identical(_recovered(tmp_path, shards=shards), ref,
+                              queries)
+
+    @pytest.mark.parametrize("shards", LAYOUTS)
+    @pytest.mark.parametrize("point", CRASH_POINTS)
+    def test_crash_point_matrix(self, tmp_path, shards, point):
+        """Every durability boundary: kill there, recover, compare to a
+        fresh service that applied exactly the committed prefix."""
+        inj = FaultInjector()
+        snap_every = 4 if point == "mid_snapshot" else NO_SNAP
+        # mid_snapshot: skip the build's initial snapshot, hit the first
+        # periodic one; the append points aim mid-schedule
+        inj.crash_at(point, after={"pre_apply_swap": 0, "mid_snapshot": 1}
+                     .get(point, 3))
+        _, queries = _fixture()
+        svc = _durable(tmp_path, shards=shards, injector=inj,
+                       snapshot_every=snap_every)
+        applied, inflight = _run_until_crash(svc, _fixed_ops(), queries)
+        assert inflight is not None, "the armed crash point never fired"
+        rec = _recovered(tmp_path, shards=shards)
+        ref = _plain(shards=shards)
+        for op in _committed(applied, inflight, point):
+            _apply(ref, op)
+        _assert_bit_identical(rec, ref, queries)
+
+    @pytest.mark.parametrize("shards", LAYOUTS)
+    @pytest.mark.parametrize("seed", (1, 2))
+    def test_random_kill_schedule(self, tmp_path, shards, seed):
+        """Seeded chaos: a random kill point over a random interleaved
+        schedule, with periodic snapshots in the mix."""
+        rng = np.random.RandomState(97 * seed + (0 if shards is None
+                                                 else shards))
+        point = CRASH_POINTS[rng.randint(len(CRASH_POINTS))]
+        after = int(rng.randint(0, 8)) + (point == "mid_snapshot")
+        inj = FaultInjector().crash_at(point, after=after)
+        _, queries = _fixture()
+        svc = _durable(tmp_path, shards=shards, injector=inj,
+                       snapshot_every=6)
+        ops = _schedule(seed=int(rng.randint(10 ** 6)), n_ops=14)
+        applied, inflight = _run_until_crash(svc, ops, queries)
+        rec = _recovered(tmp_path, shards=shards)
+        ref = _plain(shards=shards)
+        for op in _committed(applied, inflight, point):
+            _apply(ref, op)
+        _assert_bit_identical(rec, ref, queries)
+
+    # one chaos cell per kind x shard-count; the fast leg keeps the
+    # canonical kind's full S sweep plus every kind at S=2, the full leg
+    # runs the whole matrix
+    @pytest.mark.parametrize(
+        "kind,shards",
+        [pytest.param(kind, s,
+                      marks=() if (kind == KIND or s == 2)
+                      else (pytest.mark.slow,))
+         for kind in grids.ALL_KINDS for s in grids.SHARD_COUNTS])
+    def test_chaos_cell_across_kinds(self, tmp_path, kind, shards):
+        rng = np.random.RandomState((len(kind) * 131 + shards) % (2 ** 31))
+        point = CRASH_POINTS[rng.randint(len(CRASH_POINTS))]
+        after = int(rng.randint(0, 6)) + (point == "mid_snapshot")
+        inj = FaultInjector().crash_at(point, after=after)
+        _, queries = _fixture()
+        svc = _durable(tmp_path, shards=shards, kind=kind, injector=inj,
+                       snapshot_every=5)
+        applied, inflight = _run_until_crash(
+            svc, _schedule(seed=11, n_ops=10), queries)
+        rec = _recovered(tmp_path, shards=shards, kind=kind)
+        ref = _plain(shards=shards, kind=kind)
+        for op in _committed(applied, inflight, point):
+            _apply(ref, op)
+        _assert_bit_identical(rec, ref, queries)
+
+    def test_periodic_snapshots_rotate_and_prune(self, tmp_path):
+        svc = _durable(tmp_path, snapshot_every=3, keep_snapshots=2)
+        _, queries = _fixture()
+        for op in _schedule(seed=23, n_ops=11):
+            _apply(svc, op)
+        snaps = [n for n in os.listdir(tmp_path) if n.startswith("snap_")
+                 and not n.endswith(".tmp")]
+        assert svc.stats.snapshots >= 3       # the build's + periodic ones
+        assert len(snaps) <= 2                # pruned to keep_snapshots
+        assert len(_wal_paths(tmp_path)) <= 2  # rotated + pruned with them
+        _assert_bit_identical(_recovered(tmp_path), svc, queries)
+
+
+# ---------------------------------------------------------------------------
+# WAL edge cases
+# ---------------------------------------------------------------------------
+
+
+class TestWalEdgeCases:
+    def _three_inserts(self, tmp_path):
+        svc = _durable(tmp_path)
+        rng = np.random.RandomState(13)
+        batches = [rng.randn(k, *grids.DIMS).astype(np.float32)
+                   for k in (5, 4, 3)]
+        for b in batches:
+            svc.insert(b)
+        return svc, batches
+
+    def test_torn_final_record_is_dropped(self, tmp_path):
+        _, queries = _fixture()
+        svc, batches = self._three_inserts(tmp_path)
+        svc.close()
+        path = _wal_paths(tmp_path)[-1]
+        last_off, _ = _frames(path)[-1]
+        with open(path, "r+b") as f:          # cut the tail mid-record
+            f.truncate(last_off + 100)
+        rec = _recovered(tmp_path)
+        ref = _plain()
+        ref.insert(batches[0]).insert(batches[1])   # the torn third is gone
+        _assert_bit_identical(rec, ref, queries)
+        # and the truncated tail was healed: new commits recover fine
+        rec.insert(batches[2])
+        _assert_bit_identical(_recovered(tmp_path), rec, queries)
+
+    def test_checksum_corruption_mid_log_fails_loudly(self, tmp_path):
+        svc, _ = self._three_inserts(tmp_path)
+        path = _wal_paths(tmp_path)[-1]
+        with open(path, "r+b") as f:          # flip a byte inside record 0
+            f.seek(12)
+            byte = f.read(1)
+            f.seek(12)
+            f.write(bytes([byte[0] ^ 0xFF]))
+        with pytest.raises(WalCorrupted, match="checksum"):
+            read_wal(str(tmp_path))
+        fresh = _durable(tmp_path, build=False)
+        with pytest.raises(WalCorrupted, match="checksum"):
+            fresh.recover()
+        assert fresh.health == "degraded"     # it never half-serves
+        with pytest.raises(ServiceUnavailable):
+            fresh.query_arrays(_fixture()[1], topk=4)
+
+    def test_lsn_gap_fails_loudly(self, tmp_path):
+        svc, _ = self._three_inserts(tmp_path)
+        svc.close()
+        path = _wal_paths(tmp_path)[-1]
+        with open(path, "rb") as f:
+            data = f.read()
+        offs = _frames(path)                  # reframe, dropping record 1
+        rec = [data[o:o + 8 + n] for o, n in offs]
+        pad = b"\0" * (offs[1][0] - len(rec[0]))
+        with open(path, "wb") as f:
+            f.write(rec[0] + pad + rec[2])
+        with pytest.raises(WalCorrupted, match="discontinuity"):
+            _durable(tmp_path, build=False).recover()
+
+    def test_empty_log_recovers_to_snapshot(self, tmp_path):
+        _, queries = _fixture()
+        svc = _durable(tmp_path)              # build writes snapshot + empty
+        rec = _recovered(tmp_path)            # WAL: zero records replayed
+        _assert_bit_identical(rec, svc, queries)
+        assert rec.stats.wal_appends == 0
+
+    def test_snapshot_with_no_log_recovers(self, tmp_path):
+        _, queries = _fixture()
+        svc, _ = self._three_inserts(tmp_path)
+        svc.snapshot()                        # covers every record so far
+        for p in _wal_paths(tmp_path):
+            os.remove(p)                      # lose the (rotated) log
+        rec = _recovered(tmp_path)
+        _assert_bit_identical(rec, svc, queries)
+
+    def test_replay_across_epoch_marker(self, tmp_path):
+        _, queries = _fixture()
+        svc = _durable(tmp_path, shards=2)
+        rng = np.random.RandomState(31)
+        svc.insert(rng.randn(6, *grids.DIMS).astype(np.float32))
+        svc.delete(np.array([2, 40]))
+        svc.compact()                         # epoch marker mid-log
+        svc.insert(rng.randn(4, *grids.DIMS).astype(np.float32))
+        svc.rebalance()                       # second marker kind
+        records, _ = read_wal(str(tmp_path))
+        assert [k for _, k, _ in records] == [
+            "insert", "delete", "compact", "insert", "rebalance"]
+        rec = _recovered(tmp_path, shards=2)
+        assert rec.stats.compactions == 1 and rec.stats.rebalances == 1
+        assert not rec.index.store.mutated
+        _assert_bit_identical(rec, svc, queries)
+
+    def test_no_snapshot_fails_loudly(self, tmp_path):
+        with pytest.raises(RecoveryError, match="no complete snapshot"):
+            _durable(tmp_path, build=False).recover()
+
+    def test_config_mismatch_refuses_replay(self, tmp_path):
+        self._three_inserts(tmp_path)
+        other = DurableLSHService(
+            grids.grid_family(KIND, num_tables=2), str(tmp_path),
+            metric="euclidean", bucket_cap=16)
+        with pytest.raises(RecoveryError, match="num_tables"):
+            other.recover()
+
+    def test_interrupted_snapshot_leaves_last_complete_one(self, tmp_path):
+        """A crash mid-snapshot leaves only an ignored .tmp dir; recovery
+        restores the previous snapshot and replays the full log."""
+        inj = FaultInjector().crash_at("mid_snapshot", after=1)
+        _, queries = _fixture()
+        svc = _durable(tmp_path, injector=inj)
+        svc.insert(np.random.RandomState(7)
+                   .randn(5, *grids.DIMS).astype(np.float32))
+        with pytest.raises(InjectedCrash):
+            svc.snapshot()
+        assert any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+        rec = _recovered(tmp_path)
+        _assert_bit_identical(rec, svc, queries)
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mode serving (scheduler integration)
+# ---------------------------------------------------------------------------
+
+
+class TestDegradedServing:
+    def _batch(self, k=5, seed=0):
+        return np.random.RandomState(seed).randn(
+            k, *grids.DIMS).astype(np.float32)
+
+    def test_transient_wal_failure_retries_and_succeeds(self, tmp_path):
+        inj = FaultInjector().fail_transient("pre_wal_append", times=2)
+        svc = _durable(tmp_path, injector=inj)
+        with ServingScheduler(svc, retry_backoff_ms=1.0) as sched:
+            sched.insert(self._batch()).result(timeout=60)
+            assert sched.stats.retries == 2
+            assert svc.stats.retries == 2
+            assert sched.stats.errors == 0
+            assert svc.health == "serving"
+        # nothing was committed by the failed attempts: exactly one record
+        records, _ = read_wal(str(tmp_path))
+        assert [k for _, k, _ in records] == ["insert"]
+
+    def test_exhausted_retries_degrade_then_recover(self, tmp_path):
+        _, queries = _fixture()
+        inj = FaultInjector()
+        svc = _durable(tmp_path, injector=inj)
+        with ServingScheduler(svc, ingest_retries=2,
+                              retry_backoff_ms=1.0) as sched:
+            sched.insert(self._batch(seed=1)).result(timeout=60)
+            inj.fail_transient("pre_wal_append", times=3)  # 1 try + 2 retries
+            with pytest.raises(TransientIOError):
+                sched.insert(self._batch(seed=2)).result(timeout=60)
+            assert svc.health == "degraded"
+            assert sched.stats.errors == 1
+            assert "TransientIOError" in sched.tenant_stats().last_error
+            # degraded namespaces shed every request, typed
+            with pytest.raises(ServiceUnavailable):
+                sched.query(np.asarray(queries[0]))
+            with pytest.raises(ServiceUnavailable):
+                sched.insert(self._batch(seed=3))
+            assert sched.stats.shed == 2
+            assert svc.stats.unavailable >= 2
+            sched.recover_namespace().result(timeout=120)
+            assert svc.health == "serving"
+            assert svc.stats.recoveries == 1
+            sched.query(np.asarray(queries[0]), topk=4).result(timeout=60)
+        # the shed insert never committed: replaying yields insert #1 only
+        ref = _plain()
+        ref.insert(self._batch(seed=1))
+        _assert_bit_identical(svc, ref, queries)
+
+    def test_injected_crash_degrades_namespace_end_to_end(self, tmp_path):
+        """The full story: a crash mid-commit through the scheduler
+        degrades the tenant, queries shed, recovery replays the committed
+        prefix bit-identically and serving resumes."""
+        _, queries = _fixture()
+        inj = FaultInjector().crash_at("post_wal_append", after=1)
+        svc = _durable(tmp_path, injector=inj)
+        with ServingScheduler(svc) as sched:
+            sched.insert(self._batch(seed=4)).result(timeout=60)
+            with pytest.raises(InjectedCrash):
+                sched.delete(np.array([1, 8])).result(timeout=60)
+            assert svc.health == "degraded"
+            assert sched.stats.errors == 1
+            with pytest.raises(ServiceUnavailable):
+                sched.query(np.asarray(queries[0]))
+            sched.recover_namespace().result(timeout=120)
+            got = sched.query(np.asarray(queries[0]),
+                              topk=TOPK).result(timeout=60)
+        ref = _plain()
+        ref.insert(self._batch(seed=4))
+        ref.delete(np.array([1, 8]))          # post-append: it committed
+        _assert_bit_identical(svc, ref, queries)
+        np.testing.assert_array_equal(
+            got[0], ref.query_arrays(queries[:1], topk=TOPK)[0][0])
+
+    def test_poisoned_insert_increments_error_counters(self, tmp_path):
+        svc = _durable(tmp_path)
+        poison = np.zeros((2, 3), np.float32)     # wrong dims for the family
+        with ServingScheduler(svc) as sched:
+            with pytest.raises(Exception) as exc_info:
+                sched.insert(poison).result(timeout=60)
+            assert not isinstance(exc_info.value,
+                                  (TransientIOError, InjectedCrash))
+            assert sched.stats.errors == 1
+            assert sched.tenant_stats().errors == 1
+            assert sched.tenant_stats().last_error != ""
+            assert svc.health == "serving"    # poison isn't an IO outage
+            sched.insert(self._batch()).result(timeout=60)  # lane lives on
+
+    def test_flush_timeout_raises(self, tmp_path):
+        svc = _plain()
+        with ServingScheduler(svc) as sched:
+            orig = svc.insert
+            svc.insert = lambda b: (time.sleep(0.6), orig(b))[1]
+            fut = sched.insert(self._batch())
+            with pytest.raises(TimeoutError, match="flush timed out"):
+                sched.flush(timeout=0.05)
+            fut.result(timeout=60)            # the lane still drains
+            sched.flush(timeout=60)           # and a patient flush returns
+
+    def test_request_timeout_expires_queued_queries(self, tmp_path):
+        _, queries = _fixture()
+        svc = _plain()
+        with ServingScheduler(svc, request_timeout_ms=0.0,
+                              deadline_ms=1.0) as sched:
+            fut = sched.query(np.asarray(queries[0]))
+            with pytest.raises(RequestTimeout):
+                fut.result(timeout=60)
+            assert isinstance(fut.exception(timeout=60), TimeoutError)
+            assert sched.stats.timeouts == 1
+            assert svc.stats.timeouts == 1
+
+
+# ---------------------------------------------------------------------------
+# Direct durable-service gating
+# ---------------------------------------------------------------------------
+
+
+class TestHealthGating:
+    def test_cold_and_degraded_services_refuse_requests(self, tmp_path):
+        svc = _durable(tmp_path, build=False)
+        assert svc.health == "cold"
+        with pytest.raises(ServiceUnavailable):
+            svc.insert(np.zeros((1,) + grids.DIMS, np.float32))
+        with pytest.raises(ServiceUnavailable):
+            svc.query_arrays(np.zeros((1,) + grids.DIMS, np.float32))
+        assert svc.stats.unavailable == 2
+
+    def test_injector_rejects_unknown_points(self):
+        with pytest.raises(ValueError, match="unknown crash point"):
+            FaultInjector().crash_at("pre_frobnicate")
