@@ -6,7 +6,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast bench bench-index bench-index-sharded \
 	bench-index-mut bench-multiprobe bench-ingest bench-slo \
-	bench-recovery bench-hash bench-kernels
+	bench-recovery bench-hash bench-kernels bench-fused-probe
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -45,3 +45,6 @@ bench-hash:
 
 bench-kernels:
 	$(PYTHON) -m benchmarks.kernels
+
+bench-fused-probe:
+	$(PYTHON) -m benchmarks.fused_probe

@@ -1,0 +1,123 @@
+"""Fused query-to-candidates A/B: the restructured segment-major XLA
+schedule (``probe_backend='xla'``) vs the reference planner, end to end at
+batch 1024 on the bench corpus (the PR 8 / index_qps shape: clustered
+n=4096, cp-e2lsh L=8 K=4).
+
+CSV rows (name,us_per_call,derived):
+
+  fused_probe/qps_reference_b1024   us = per-query latency, derived = QPS
+  fused_probe/qps_xla_b1024         us = per-query latency, derived = QPS
+  fused_probe/speedup_b1024         derived = xla QPS / reference QPS
+  fused_probe/bit_identical         derived = 1 iff ids, score bit
+                                    patterns, and candidate counts all
+                                    match the reference planner
+  fused_probe/qps_pallas_b64        us = per-query latency (interpret
+                                    mode — a semantics row, not a perf
+                                    row; the TPU lowering is the target)
+
+The speedup row is the acceptance gate of the fused-probe work: the
+restructured schedule (one fused scan over segments, keys kept between
+searchsorted and gather, hoisted per-row norms, packed top-k selection)
+must clear 1.3x over the reference planner on CPU. The Pallas fused
+kernel runs interpret mode here, so its row only proves the program
+composes at batch size; bit-identity for it is pinned by
+tests/test_fused_probe.py across the full layout grid.
+
+``run()`` appends a trajectory entry to BENCH_index.json (tagged
+``"bench": "fused_probe"``); runnable standalone
+(``make bench-fused-probe``) or via ``python -m benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import append_trajectory, emit, time_fn
+from repro.core import DeviceLSHIndex, make_family
+from repro.core import segments
+
+DIMS = (8, 8, 8)
+N_CLUSTERS, PER_CLUSTER = 512, 8
+N_CORPUS = N_CLUSTERS * PER_CLUSTER
+NOISE = 0.15
+B = 1024
+B_PALLAS = 64          # interpret mode: keep the semantics row cheap
+TOPK = 10
+SPEEDUP_GATE = 1.3
+
+
+def run() -> list[str]:
+    rows = []
+    kc, kn, kq, kf = jax.random.split(jax.random.PRNGKey(11), 4)
+    centers = jax.random.normal(kc, (N_CLUSTERS,) + DIMS)
+    corpus = (jnp.repeat(centers, PER_CLUSTER, axis=0)
+              + NOISE * jax.random.normal(kn, (N_CORPUS,) + DIMS))
+    queries = (jnp.tile(centers, (B // N_CLUSTERS + 1,) + (1,) * len(DIMS))
+               [:B] + NOISE * jax.random.normal(kq, (B,) + DIMS))
+    fam = make_family(kf, "cp-e2lsh", DIMS, num_codes=4, num_tables=8,
+                      rank=2, bucket_width=16.0)
+    idx = DeviceLSHIndex(fam, metric="euclidean").build(corpus)
+    view = idx.store.view
+    mults = jnp.asarray(idx._mults)
+
+    ref = lambda q: segments.segmented_query_reference(
+        fam, view.all_arrays, mults, q, metric="euclidean", topk=TOPK,
+        caps=view.all_caps)
+    xla = lambda q: segments.segmented_query(
+        fam, view.all_arrays, mults, q, metric="euclidean", topk=TOPK,
+        caps=view.all_caps, probe_backend="xla")
+
+    r = jax.block_until_ready(ref(queries))
+    n = jax.block_until_ready(xla(queries))
+    identical = int(bool(jnp.all(r[0] == n[0]))
+                    and bool(jnp.all(r[1].view(jnp.int32)
+                                     == n[1].view(jnp.int32)))
+                    and bool(jnp.all(r[2] == n[2])))
+
+    us_ref = time_fn(ref, queries, iters=7)
+    us_xla = time_fn(xla, queries, iters=7)
+    qps_ref = B / (us_ref / 1e6)
+    qps_xla = B / (us_xla / 1e6)
+    speedup = qps_xla / qps_ref
+    rows.append(emit("fused_probe/qps_reference_b1024", us_ref / B,
+                     f"{qps_ref:.1f}"))
+    rows.append(emit("fused_probe/qps_xla_b1024", us_xla / B,
+                     f"{qps_xla:.1f}"))
+    rows.append(emit("fused_probe/speedup_b1024", us_xla / B,
+                     f"{speedup:.2f}"))
+    rows.append(emit("fused_probe/bit_identical", us_xla / B,
+                     f"{identical}"))
+    if speedup < SPEEDUP_GATE:
+        print(f"# WARNING fused_probe/speedup_b1024 {speedup:.2f} below "
+              f"the {SPEEDUP_GATE}x gate", flush=True)
+
+    qp = queries[:B_PALLAS]
+    pal = lambda q: segments.segmented_query(
+        fam, view.all_arrays, mults, q, metric="euclidean", topk=TOPK,
+        caps=view.all_caps, probe_backend="pallas")
+    p = jax.block_until_ready(pal(qp))
+    rp = jax.block_until_ready(ref(qp))
+    pal_ok = int(bool(jnp.all(p[0] == rp[0]))
+                 and bool(jnp.all(p[1].view(jnp.int32)
+                                  == rp[1].view(jnp.int32))))
+    us_pal = time_fn(pal, qp, iters=3)
+    rows.append(emit("fused_probe/qps_pallas_b64", us_pal / B_PALLAS,
+                     f"{pal_ok}"))
+
+    append_trajectory({
+        "bench": "fused_probe",
+        "n": N_CORPUS,
+        "batch": B,
+        "qps_reference": round(qps_ref, 1),
+        "qps_xla": round(qps_xla, 1),
+        "speedup": round(speedup, 3),
+        "bit_identical": bool(identical),
+        "pallas_bit_identical_b64": bool(pal_ok),
+        "interpret": jax.default_backend() != "tpu",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -93,6 +93,35 @@ def run() -> list[str]:
     rows.append(emit("kernels/tt_inner/fused_keys_exact", us_ref, f"{n_bad}"))
     errs["tt_inner_keys_mismatch"] = n_bad
 
+    # Fused-hash block sweep: a few (block_b, block_t) tilings of the
+    # in-format CP x CP keys kernel vs the (8, 1) untiled grid, at the
+    # L/K/R/d shape the _HASH_BLOCK_DEFAULTS comment in kernels/ops.py
+    # documents (B=64 here to keep the interpret-mode run short).
+    # Interpret mode times Python-level grid overhead, which is exactly
+    # what the tiling removes, so the ratios are meaningful on CPU.
+    from repro.core import cp_random_data, make_family
+    from repro.kernels import ops
+
+    dims, bb, ll, kk, rr = (8, 8, 8), 64, 8, 4, 2
+    fam = make_family(key, "cp-e2lsh", dims, num_codes=kk, num_tables=ll,
+                      rank=rr, bucket_width=4.0)
+    xs = jax.vmap(lambda s: cp_random_data(s, dims, rr))(
+        jax.random.split(kx, bb))
+    sweep_mults = jnp.asarray(make_mults(0, kk))
+    base_us = None
+    for blk_b, blk_t in ((8, 1), (32, 4), (64, 8)):
+        f = jax.jit(lambda x, blk_b=blk_b, blk_t=blk_t: ops.fused_hash(
+            x, fam.projection, epilogue="keys", kind="cp-e2lsh",
+            num_tables=ll, num_codes=kk, offsets=fam.offsets,
+            w=fam.bucket_width, mults=sweep_mults,
+            block_b=blk_b, block_t=blk_t))
+        us = time_fn(f, xs, iters=5)
+        if base_us is None:
+            base_us = us
+        rows.append(emit(f"kernels/fused_hash_cp/blocks_{blk_b}x{blk_t}",
+                         us, f"{base_us / us:.2f}x"))
+    errs["fused_hash_block_speedup"] = round(base_us / us, 3)
+
     # SRP pack kernel
     v = jax.random.normal(key, (256, 256))
     got = srp_pack_pallas(v, block_b=8, interpret=True)

@@ -7,10 +7,11 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (collision, durability, hash_throughput,
-                            index_ingest, index_multiprobe, index_mutation,
-                            index_qps, index_sharded, kernels, recall,
-                            serving_slo, table1_e2lsh, table2_srp)
+    from benchmarks import (collision, durability, fused_probe,
+                            hash_throughput, index_ingest,
+                            index_multiprobe, index_mutation, index_qps,
+                            index_sharded, kernels, recall, serving_slo,
+                            table1_e2lsh, table2_srp)
     print("name,us_per_call,derived")
     rows = []
     rows += table1_e2lsh.run()
@@ -19,6 +20,7 @@ def main() -> None:
     rows += recall.run()
     rows += index_qps.run()
     rows += index_multiprobe.run()
+    rows += fused_probe.run()
     rows += index_sharded.run()
     rows += index_mutation.run()
     rows += index_ingest.run()

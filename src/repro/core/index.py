@@ -340,6 +340,8 @@ class DeviceLSHIndex(_SegmentedIndex):
     max_deltas: int = 8            # outstanding deltas before auto-compact
     swap_chunk_rows: int | None = 4096  # shadow-build copy chunk (None ->
                                         # one store-sized program per fold)
+    probe_backend: str = "auto"    # 'auto' | 'xla' | 'pallas' — the fused
+                                   # probe path (segments.resolved_probe_backend)
 
     store: SegmentStore | None = None
     compactions: int = 0
@@ -350,6 +352,14 @@ class DeviceLSHIndex(_SegmentedIndex):
     def __post_init__(self):
         _check_metric(self.metric)
         self._mults = make_mults(self.seed, self.family.num_codes)
+
+    @property
+    def probe_path(self) -> str:
+        """The resolved probe program ``query_batch`` executes: ``"xla"``
+        (the fused segment-major schedule) or ``"pallas"`` (the fused query
+        kernel). Introspection hook for CI legs that must fail loudly if
+        the requested backend silently falls back."""
+        return segments.resolved_probe_backend(self.probe_backend)
 
     @property
     def corpus(self):
@@ -420,7 +430,7 @@ class DeviceLSHIndex(_SegmentedIndex):
                 caps=view.all_caps, probes=int(probes), mode=mode)
         return segments.segmented_query(
             *args, metric=self.metric, topk=topk, caps=view.all_caps,
-            probes=int(probes))
+            probes=int(probes), probe_backend=self.probe_backend)
 
 
 LSHIndex = DeviceLSHIndex  # default deployment
@@ -469,6 +479,8 @@ class ShardedLSHIndex(_SegmentedIndex):
     max_deltas: int = 8
     swap_chunk_rows: int | None = 4096  # shadow-build copy chunk (None ->
                                         # one store-sized program per fold)
+    probe_backend: str = "auto"    # 'auto' | 'xla' | 'pallas' — the fused
+                                   # probe path (segments.resolved_probe_backend)
     keep_corpus: bool = True   # False drops the unsharded build-time copy
                                # (at real multi-host scale it won't fit;
                                # effective_corpus() regathers from shards)
@@ -519,8 +531,22 @@ class ShardedLSHIndex(_SegmentedIndex):
         """The program ``query_batch`` executes: ``"shard_map"`` when a
         mesh carries the shard axis, ``"vmap"`` on the single-program
         fallback. Introspection hook for CI legs that must fail loudly if
-        multi-device coverage silently degrades to the vmap path."""
-        return "shard_map" if self.mesh is not None else "vmap"
+        multi-device coverage silently degrades to the vmap path. The
+        pallas probe backend always serves through the single-program
+        path (its mesh shard_map dispatch is the deferred TPU leg), so it
+        reports ``"vmap"`` even when a mesh exists."""
+        return ("shard_map"
+                if self.mesh is not None and self.probe_path != "pallas"
+                else "vmap")
+
+    @property
+    def probe_path(self) -> str:
+        """The resolved probe program ``query_batch`` executes: ``"xla"``
+        (the fused segment-major schedule, inside whichever distribution
+        program ``query_path`` names) or ``"pallas"`` (the fused query
+        kernel, run per shard as a single program — its mesh shard_map
+        dispatch is the deferred TPU leg, see ROADMAP)."""
+        return segments.resolved_probe_backend(self.probe_backend)
 
     def occupancy(self) -> np.ndarray:
         """(S,) live items per shard (base + delta slabs)."""
@@ -752,7 +778,10 @@ class ShardedLSHIndex(_SegmentedIndex):
         if mode != "topk":
             return segments.sharded_sample_vmap(*args, rng, mode=mode,
                                                 **kwargs)
-        if self.mesh is not None:
+        kwargs["probe_backend"] = self.probe_backend
+        if (self.mesh is not None
+                and segments.resolved_probe_backend(self.probe_backend)
+                != "pallas"):
             from repro.distributed import index_sharding
             return index_sharding.shard_map_query(
                 *args, mesh=self.mesh, axis=self.mesh_axis, **kwargs)
@@ -780,6 +809,7 @@ class HostLSHIndex(_LSHIndexBase):
     family: LSHFamily
     metric: str = "euclidean"  # or "cosine"
     seed: int = 0
+    probe_backend: str = "auto"    # 'auto' | 'xla' | 'pallas'
 
     corpus: Any = None
     size: int = 0
@@ -790,6 +820,11 @@ class HostLSHIndex(_LSHIndexBase):
     def __post_init__(self):
         _check_metric(self.metric)
         self._mults = make_mults(self.seed, self.family.num_codes)
+
+    @property
+    def probe_path(self) -> str:
+        """The resolved probe program (see DeviceLSHIndex.probe_path)."""
+        return segments.resolved_probe_backend(self.probe_backend)
 
     # -- build --------------------------------------------------------------
 
@@ -843,7 +878,7 @@ class HostLSHIndex(_LSHIndexBase):
                 caps=view.all_caps, probes=int(probes), mode=mode)
         return segments.segmented_query(
             *args, metric=self.metric, topk=topk, caps=view.all_caps,
-            probes=int(probes))
+            probes=int(probes), probe_backend=self.probe_backend)
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import os
 import time
 import warnings
 from typing import Any, Callable
@@ -63,10 +64,40 @@ from repro.core import contractions, probing
 # The universal bucket hash lives with the families (lsh.hash_keys fuses it
 # into the hashing program); re-exported here for the host/table builders.
 from repro.core.lsh import _combine_codes, make_mults
+# The probe epilogue (bucket windows, dedup, packed top-k selection) is
+# shared with the fused Pallas query kernel — one implementation, so the
+# xla and pallas probe backends are bit-identical by construction.
+from repro.kernels import epilogues as _epi
 
 _PAD_KEY = np.uint32(0xFFFFFFFF)  # bucket key of shard-padding slots
 _NO_ID = np.int32(0x7FFFFFFF)     # effective-id sentinel of probe misses
                                   # (sorts after every real effective id)
+
+PROBE_BACKENDS = ("auto", "xla", "pallas")
+
+
+def resolved_probe_backend(probe_backend: str = "auto") -> str:
+    """'xla' or 'pallas': the explicit knob, else the REPRO_PROBE_BACKEND
+    env var (read at trace time), else pallas on TPU / xla elsewhere —
+    mirroring ``LSHFamily.resolved_backend`` for the hashing stage.
+
+    'xla' is the restructured segment-major schedule (one fused scan over
+    segments, hoisted-norm re-rank, packed top-k selection); 'pallas' the
+    fused query kernel in ``repro.kernels.fused_query`` (interpret mode on
+    CPU). Both are bit-identical to the reference planner
+    (``segmented_query_reference``), pinned by tests/test_fused_probe.py.
+    """
+    b = (probe_backend or "auto").strip().lower()
+    if b == "auto":
+        b = os.environ.get("REPRO_PROBE_BACKEND", "").strip().lower() or "auto"
+    if b == "auto":
+        from repro.kernels.ops import on_tpu
+        b = "pallas" if on_tpu() else "xla"
+    if b not in ("xla", "pallas"):
+        raise ValueError(
+            f"probe_backend must be one of {PROBE_BACKENDS}, got "
+            f"{probe_backend!r}")
+    return b
 
 
 def tree_index(tree, idx):
@@ -598,30 +629,12 @@ def _probe_windows(sorted_keys, perm, keys, cap, live, win=None):
     then gathers the first ``cap`` *live* positions of the bucket instead
     of the first ``cap`` positions, so tombstoned slots stop consuming
     truncation-window space (a dense window silently drops live bucket
-    members past ``cap`` dead ones until compaction).
+    members past ``cap`` dead ones until compaction). The live-window
+    bound is hoisted to one rank compare per (query, table, probe) — see
+    ``repro.kernels.epilogues.probe_windows``, where the implementation
+    lives (shared with the fused Pallas query kernel).
     """
-    m = sorted_keys.shape[1]
-    starts = jax.vmap(
-        lambda sk, q: jnp.searchsorted(sk, q, side="left"))(sorted_keys, keys)
-    if win is None:
-        pos = starts[..., None] + jnp.arange(cap, dtype=starts.dtype)
-        in_range = pos < m                                # (L[, T], B, cap)
-    else:
-        live_rank, live_pos = win
-        rank0 = jax.vmap(lambda lr, st: lr[st])(live_rank, starts)
-        j = rank0[..., None] + jnp.arange(cap, dtype=rank0.dtype)
-        in_range = j < m
-        pos = jax.vmap(lambda lp, p: lp[p])(
-            live_pos, jnp.minimum(j, max(m - 1, 0)))      # (L[, T], B, cap)
-    posc = jnp.minimum(pos, max(m - 1, 0))
-    key_at = jax.vmap(lambda sk, p: sk[p])(sorted_keys, posc)
-    hit = in_range & (key_at == keys[..., None])
-    ids = jax.vmap(lambda pm, p: pm[p])(perm, posc)       # (L[, T], B, cap)
-    hit &= live[ids]                                      # tombstones + pads
-    b = keys.shape[-1]
-    ids = jnp.moveaxis(ids, -2, 0).reshape(b, -1)
-    hit = jnp.moveaxis(hit, -2, 0).reshape(b, -1)
-    return ids, hit
+    return _epi.probe_windows(sorted_keys, perm, keys, cap, live, win)
 
 
 def probe_tables(sorted_keys, perm, keys, cap, live, win=None):
@@ -639,11 +652,7 @@ def probe_tables(sorted_keys, perm, keys, cap, live, win=None):
     """
     m = sorted_keys.shape[1]
     ids, hit = _probe_windows(sorted_keys, perm, keys, cap, live, win)
-    b = ids.shape[0]
-    cand = jnp.sort(jnp.where(hit, ids, m), axis=1)       # invalid (>=m) last
-    dup = jnp.concatenate(
-        [jnp.zeros((b, 1), bool), cand[:, 1:] == cand[:, :-1]], axis=1)
-    valid = (cand < m) & ~dup
+    cand, valid = _epi.dedup_windows(ids, hit, m)
     return jnp.where(valid, cand, -1).astype(jnp.int32), valid
 
 
@@ -760,20 +769,136 @@ def shard_topk_with_deltas(metric, topk, cap, delta_caps, queries, base_s,
 
 
 # ---------------------------------------------------------------------------
+# The fused probe schedule (probe_backend='xla'): one segment-major scan,
+# hoisted-norm re-rank, one packed top-k over every segment's candidates
+# ---------------------------------------------------------------------------
+
+
+def hoisted_scores(metric, queries, corpus, safe):
+    """Exact re-rank scores of gathered candidates, hoisted-norm schedule.
+
+    ``safe`` is the (B, W) clamped candidate matrix. Instead of evaluating
+    the three-contraction score on every materialized (B, W) candidate pair
+    (``rank_candidates``' schedule — the corpus self-inner <Y, Y> is
+    recomputed per (query, candidate) cell), the per-item self-inners are
+    computed once over the segment (m of them instead of B*W) and gathered
+    as scalars; only the cross inner <Q, Y> touches the gathered corpus
+    rows. The scalar combine is the exact expression of
+    ``contractions.distance`` / ``cosine_similarity`` — the same three
+    inner products flow through the same add/mul/sqrt order, so scores are
+    bit-identical to the reference schedule (pinned by
+    tests/test_fused_probe.py); only the redundant work is gone.
+
+    The per-item <Y, Y> sweep deliberately runs through the SAME
+    gather-into-nested-vmap structure the reference uses for its per-cell
+    self-inners (an identity gather batched (1, m)): XLA's CPU backend
+    picks the reduction lowering per program structure, and a plain
+    row-vmap over the contiguous corpus can round the last bit differently
+    from the reference's batched gathered dots on some shapes. Routing the
+    hoisted sweep through the identical structure keeps the values
+    bit-equal at every shape, not just the benchmarked ones.
+    """
+    inner = contractions.inner
+    m = jax.tree.leaves(corpus)[0].shape[0]
+    rows = tree_index(corpus, jnp.arange(m)[None])        # leaves (1, m, ...)
+    yy = jax.vmap(
+        lambda ys: jax.vmap(lambda y: inner(y, y))(ys))(rows)[0]  # (m,)
+    qq = jax.vmap(lambda q: inner(q, q))(queries)         # (B,)
+    sub = tree_index(corpus, safe)                        # leaves (B, W, ...)
+    qy = jax.vmap(
+        lambda q, ys: jax.vmap(lambda y: inner(q, y))(ys))(queries, sub)
+    if metric == "euclidean":
+        d2 = qq[:, None] + yy[safe] - 2.0 * qy
+        return jnp.sqrt(jnp.maximum(d2, 0.0))
+    nq = jnp.sqrt(jnp.maximum(qq, 0.0))
+    ny = jnp.sqrt(jnp.maximum(yy, 0.0))
+    return qy / (nq[:, None] * ny[safe])
+
+
+def segment_packed_candidates(metric, cap, queries, seg_arrays, keys):
+    """One segment's probe + hoisted re-rank -> packed selection operands
+    (hi (B, W) uint32 order keys, lo (B, W) int32 effective ids, n_cand
+    (B,)). The probe epilogue stages (windows, dedup, packing) are the
+    shared implementations in ``repro.kernels.epilogues``."""
+    corpus, sorted_keys, perm, live, eff, win = seg_arrays
+    m = sorted_keys.shape[1]
+    ids, hit = _epi.probe_windows(sorted_keys, perm, keys, cap, live, win)
+    cand, valid = _epi.dedup_windows(ids, hit, m)
+    safe = jnp.where(valid, cand, 0)
+    scores = hoisted_scores(metric, queries, corpus, safe)
+    hi, lo = _epi.pack_candidates(metric, eff[safe], scores, valid)
+    return hi, lo, valid.sum(axis=1, dtype=jnp.int32)
+
+
+def _packed_query_segments(metric, topk, queries, segs, caps, keys):
+    """Fused multi-segment top-k: every segment's packed candidates feed
+    ONE flat packed selection. Bit-identical to per-segment ``segment_topk``
+    + ``merge_topk``: both selections are keyed by (validity, score,
+    effective id) — a strict total order, since effective ids are unique
+    across a store's segments — so the merge tree and the flat sort pick
+    the same top-k in the same order."""
+    parts = [segment_packed_candidates(metric, cap, queries, sa, keys)
+             for sa, cap in zip(segs, caps)]
+    ids, scores = _epi.packed_select(
+        metric, topk,
+        jnp.concatenate([p[0] for p in parts], axis=1),
+        jnp.concatenate([p[1] for p in parts], axis=1))
+    n_cand = parts[0][2]
+    for _, _, nc in parts[1:]:
+        n_cand = n_cand + nc
+    return ids, scores, n_cand
+
+
+def shard_packed_topk_with_deltas(metric, topk, cap, delta_caps, queries,
+                                  base_s, deltas_s, keys):
+    """One shard's fused top-k over its base slice + delta slabs — the
+    packed-selection counterpart of ``shard_topk_with_deltas``, shared by
+    the vmapped and the shard_map sharded query programs (bit-identical to
+    the reference body; see ``_packed_query_segments``)."""
+    segs = (base_s,) + tuple(deltas_s)
+    caps = (cap,) + tuple(delta_caps)
+    return _packed_query_segments(metric, topk, queries, segs, caps, keys)
+
+
+# ---------------------------------------------------------------------------
 # The shared query planner (single-device / host / vmapped-sharded programs;
 # the shard_map variant lives in repro.distributed.index_sharding)
 # ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "topk", "caps",
-                                             "probes"))
+                                             "probes", "probe_backend"))
 def segmented_query(family, segs, mults, queries, *, metric, topk, caps,
-                    probes=1):
+                    probes=1, probe_backend="auto"):
     """One program from query batch to top-k over every segment: hash once
     (expanding to T ranked bucket keys per table when ``probes`` > 1),
-    probe + re-rank each segment, merge. ``segs`` is a tuple of per-segment
+    probe + re-rank each segment, select. ``segs`` is a tuple of per-segment
     array tuples ordered by slot offset (base first, deltas in insert
-    order); ``caps`` the matching static probe widths."""
+    order); ``caps`` the matching static probe widths.
+
+    ``probe_backend`` picks the probe/re-rank/select evaluation path (see
+    ``resolved_probe_backend``): 'xla' runs the fused segment-major
+    schedule in this module, 'pallas' the fused query kernel. Both are
+    bit-identical to ``segmented_query_reference``.
+    """
+    if resolved_probe_backend(probe_backend) == "pallas":
+        from repro.kernels import fused_query
+        return fused_query.fused_query(family, segs, mults, queries,
+                                       metric=metric, topk=topk, caps=caps,
+                                       probes=probes)
+    keys = query_keys(family, mults, queries, probes)
+    return _packed_query_segments(metric, topk, queries, segs, caps, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "topk", "caps",
+                                             "probes"))
+def segmented_query_reference(family, segs, mults, queries, *, metric, topk,
+                              caps, probes=1):
+    """The reference planner: per-segment probe_tables + rank_candidates +
+    merge_topk as separate stages. Every fused probe backend is pinned
+    bit-identical to this program (tests/test_fused_probe.py); the
+    sampling query modes and the candidate-inspection paths still run its
+    stages directly."""
     keys = query_keys(family, mults, queries, probes)
     outs = [segment_topk(metric, topk, cap, queries, sa, keys)
             for sa, cap in zip(segs, caps)]
@@ -784,17 +909,57 @@ def segmented_query(family, segs, mults, queries, *, metric, topk, caps,
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "topk", "cap",
-                                             "delta_caps", "probes"))
+                                             "delta_caps", "probes",
+                                             "probe_backend"))
 def sharded_query_vmap(family, base, deltas, mults, queries, *, metric, topk,
-                       cap, delta_caps, probes=1):
-    """Single-program sharded query without a mesh: vmap the per-shard
-    base + delta-slab body over the S axis, then the global S-way merge.
+                       cap, delta_caps, probes=1, probe_backend="auto"):
+    """Single-program sharded query without a mesh: probe every (shard,
+    segment) and select globally.
 
     Used when fewer devices than shards exist (e.g. the 1-device tier-1
-    run); identical math to the shard_map program in
-    repro.distributed.index_sharding — both call
-    ``shard_topk_with_deltas`` per shard.
+    run); bit-identical to the shard_map program in
+    repro.distributed.index_sharding. On the 'xla' probe backend the
+    per-shard packed candidates (vmapped over the S axis) feed ONE flat
+    packed selection — no per-shard top-k + S-way merge tree; the flat
+    sort is keyed by (validity, score, effective id), and effective ids
+    are globally unique across shards, so the result is bit-identical to
+    ``sharded_query_vmap_reference`` (and to the merge tree). The 'pallas'
+    backend runs the fused query kernel per shard and merges.
     """
+    if resolved_probe_backend(probe_backend) == "pallas":
+        from repro.kernels import fused_query
+        return fused_query.fused_query_sharded(
+            family, base, deltas, mults, queries, metric=metric, topk=topk,
+            cap=cap, delta_caps=delta_caps, probes=probes)
+    keys = query_keys(family, mults, queries, probes)
+
+    def shard_packed(base_s, deltas_s):
+        segs = (base_s,) + tuple(deltas_s)
+        caps = (cap,) + tuple(delta_caps)
+        parts = [segment_packed_candidates(metric, c, queries, sa, keys)
+                 for sa, c in zip(segs, caps)]
+        nc = parts[0][2]
+        for _, _, n in parts[1:]:
+            nc = nc + n
+        return (jnp.concatenate([p[0] for p in parts], axis=1),
+                jnp.concatenate([p[1] for p in parts], axis=1), nc)
+
+    hi, lo, nc = jax.vmap(shard_packed, in_axes=(0, 0))(base, deltas)
+    s, b, w = hi.shape
+    ids, scores = _epi.packed_select(metric, topk,
+                                     hi.transpose(1, 0, 2).reshape(b, s * w),
+                                     lo.transpose(1, 0, 2).reshape(b, s * w))
+    return ids, scores, nc.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "topk", "cap",
+                                             "delta_caps", "probes"))
+def sharded_query_vmap_reference(family, base, deltas, mults, queries, *,
+                                 metric, topk, cap, delta_caps, probes=1):
+    """Reference sharded planner: vmap the per-shard base + delta-slab
+    merge-tree body (``shard_topk_with_deltas``) over the S axis, then the
+    global S-way merge — the program every fused probe backend is pinned
+    bit-identical to."""
     keys = query_keys(family, mults, queries, probes)
     per_shard = jax.vmap(
         lambda base_s, deltas_s: shard_topk_with_deltas(

@@ -81,13 +81,14 @@ def place_shadow(tree, mesh: Mesh, axis: str):
 
 @functools.partial(jax.jit, static_argnames=("metric", "topk", "cap",
                                              "delta_caps", "probes", "mesh",
-                                             "axis"))
+                                             "axis", "probe_backend"))
 def shard_map_query(family, base, deltas, mults, queries, *, metric, topk,
-                    cap, delta_caps, mesh, axis, probes=1):
-    """One jit program: hash (replicated) -> per-shard top-k over the base
-    block + every delta slab (shard_map) -> global S-way merge.
-    Bit-identical to core.segments.sharded_query_vmap — both run
-    ``segments.shard_topk_with_deltas`` per shard.
+                    cap, delta_caps, mesh, axis, probes=1,
+                    probe_backend="auto"):
+    """One jit program: hash (replicated) -> per-shard fused probe/re-rank/
+    top-k over the base block + every delta slab (shard_map) -> global S-way
+    merge. Bit-identical to ``shard_map_query_reference`` and to
+    ``core.segments.sharded_query_vmap``.
 
     ``base`` and each element of ``deltas`` is a (corpus, sorted_keys,
     perm, live, eff, win) tuple whose array leaves carry a leading shard
@@ -95,14 +96,57 @@ def shard_map_query(family, base, deltas, mults, queries, *, metric, topk,
     ``probes`` = T > 1 replicates the (L, T, B) multi-probe key tensor
     instead of the (L, B) single-probe one — the shard body is
     shape-agnostic, so every device probes all T buckets of its blocks.
+
+    ``probe_backend`` mirrors the knob on ``segments.segmented_query``.
+    The 'xla' path runs the restructured packed schedule
+    (``segments.shard_packed_topk_with_deltas``) inside the shard_map body;
+    'pallas' currently falls back to the per-shard fused-kernel loop in
+    ``segments.sharded_query_vmap`` — dispatching the Pallas program
+    through shard_map itself is the deferred TPU measurement leg (ROADMAP).
     """
     from repro.core import segments
+
+    if segments.resolved_probe_backend(probe_backend) == "pallas":
+        return segments.sharded_query_vmap(
+            family, base, deltas, mults, queries, metric=metric, topk=topk,
+            cap=cap, delta_caps=delta_caps, probes=probes,
+            probe_backend="pallas")
 
     # (L, B) / (L, T, B), replicated
     keys = segments.query_keys(family, mults, queries, probes)
 
     def body(base_blk, deltas_blk, keys_r, queries_r):
         # blocks carry a leading shard dim of 1 on the sharded operands
+        take0 = lambda t: jax.tree.map(lambda a: a[0], t)
+        ids, scores, n_cand = segments.shard_packed_topk_with_deltas(
+            metric, topk, cap, delta_caps, queries_r,
+            take0(base_blk), take0(deltas_blk), keys_r)
+        return ids[None], scores[None], n_cand[None]
+
+    sharded_spec, rep = P(axis), P()
+    per_shard = shard_map(
+        body, mesh,
+        in_specs=(sharded_spec, sharded_spec, rep, rep),
+        out_specs=(sharded_spec,) * 3,
+        check_rep=False,
+    )(base, deltas, keys, queries)
+    return segments.merge_topk(metric, topk, *per_shard)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "topk", "cap",
+                                             "delta_caps", "probes", "mesh",
+                                             "axis"))
+def shard_map_query_reference(family, base, deltas, mults, queries, *, metric,
+                              topk, cap, delta_caps, mesh, axis, probes=1):
+    """The reference shard_map program: per-shard merge-tree top-k
+    (``segments.shard_topk_with_deltas``) then the global S-way merge.
+    The restructured ``shard_map_query`` above is pinned bit-identical to
+    this program (tests/test_fused_probe.py)."""
+    from repro.core import segments
+
+    keys = segments.query_keys(family, mults, queries, probes)
+
+    def body(base_blk, deltas_blk, keys_r, queries_r):
         take0 = lambda t: jax.tree.map(lambda a: a[0], t)
         ids, scores, n_cand = segments.shard_topk_with_deltas(
             metric, topk, cap, delta_caps, queries_r,

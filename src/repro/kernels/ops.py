@@ -60,9 +60,32 @@ def _check_equal_dims(dims):
             "repro.core.projections path for ragged modes")
 
 
-def _pick_block_l(l: int) -> int:
-    """Largest power-of-two table-block (<= 8) dividing L."""
-    return max(c for c in (8, 4, 2, 1) if l % c == 0)
+def _pick_block_l(l: int, cap: int = 8) -> int:
+    """Largest power-of-two table-block (<= cap) dividing L."""
+    return max(c for c in (64, 32, 16, 8, 4, 2, 1) if c <= cap and l % c == 0)
+
+
+# Per-format-pair fused-hash block defaults: (block_b cap, block_t cap),
+# clamped to the batch size / the largest power-of-two divisor of L.
+# Measured by the ``make bench-kernels`` sweep (benchmarks/kernels.py,
+# interpret mode on this CPU container, B=256 L=8 K=4 R=2 d=8; median of
+# 5, noise ~10%):
+#
+#   CP x CP: grid-program count dominates — (32, 4) runs ~2.4x faster
+#     than the old fixed (8, 1) tiling, with (16, 8) / (32, 8) / (64, 2)
+#     all within noise of it (jit-wrapped, the same sweep reads 5-10x:
+#     dispatch amortization compounds the grid shrink).  The VMEM
+#     accumulator (BBLK, Rx, LBLK*K, Rp) f32 at 32*2*16*2 = 8 KiB stays
+#     far under a core's VMEM; wider B-blocks are safe until
+#     BBLK*Rx*L*K*Rp*4 nears ~4 MiB.
+#   TT x TT: per-table work is R^3 per mode so the program body, not the
+#     grid, dominates; gains come almost entirely from block_b.  (64, 8)
+#     measured ~2.4x over (8, 1), with every (64, *) within ~6% of it.
+#
+# TPU re-measurement belongs with the deferred shard_map-vs-fused leg
+# (ROADMAP); these caps only tile the grid — every (block_b, block_t)
+# combination is bit-identical (pinned by tests/test_kernels.py).
+_HASH_BLOCK_DEFAULTS = {"cp": (32, 4), "tt": (64, 8)}
 
 
 # ---------------------------------------------------------------------------
@@ -117,9 +140,34 @@ def _stack_tt_proj(p: TTProjection, rank: int, num_tables: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def hash_blocks(fmt: str, b: int, num_tables: int,
+                block_b: int | None = None,
+                block_t: int | None = None) -> tuple[int, int]:
+    """Resolve the (block_b, block_t) grid tiling ``fused_hash`` runs with.
+
+    ``fmt`` is the format pair ('cp' | 'tt'); ``None`` knobs take the
+    documented per-format-pair default cap (``_HASH_BLOCK_DEFAULTS``).
+    block_t is clamped to the largest power-of-two divisor of L so any
+    requested cap stays a legal grid; block_b only tiles the padded batch,
+    so it is used as-is (the batch axis is padded up to it).
+    """
+    db, dt = _HASH_BLOCK_DEFAULTS[fmt]
+    block_b = db if block_b is None else int(block_b)
+    if block_b < 1:
+        raise ValueError(f"block_b must be >= 1, got {block_b}")
+    block_t = dt if block_t is None else int(block_t)
+    if block_t < 1:
+        raise ValueError(f"block_t must be >= 1, got {block_t}")
+    # never tile wider than the 8-aligned batch: a batch-of-1 hash must not
+    # pay a 64-row zero-padded program
+    block_b = min(block_b, max(8, -(-b // 8) * 8))
+    return block_b, _pick_block_l(num_tables, cap=block_t)
+
+
 def fused_hash(xs, p, *, epilogue: str, kind: str, num_tables: int,
                num_codes: int, offsets: jax.Array | None = None,
-               w: float = 0.0, mults=None, block_b: int = 8,
+               w: float = 0.0, mults=None, block_b: int | None = None,
+               block_t: int | None = None,
                interpret: bool | None = None) -> jax.Array:
     """One fused kernel launch from a (B, ...) batch to hash outputs.
 
@@ -132,8 +180,11 @@ def fused_hash(xs, p, *, epilogue: str, kind: str, num_tables: int,
       'packed' -> (B, L, ceil(K/32)) uint32 SRP signatures (sign + pack)
 
     ``kind`` picks the discretizer ('*e2lsh' vs '*srp'); ``offsets``/``w``
-    are the E2LSH quantizer parameters. Bit-identical to the XLA path of
-    ``LSHFamily`` (pinned by tests/test_hash_backends.py).
+    are the E2LSH quantizer parameters. ``block_b``/``block_t`` tile the
+    kernel grid over the (padded) batch and the tables — tuning knobs only
+    (see ``hash_blocks`` for the per-format-pair defaults); every setting
+    is bit-identical to the XLA path of ``LSHFamily`` (pinned by
+    tests/test_hash_backends.py).
     """
     e2 = kind.endswith("e2lsh")
     kernel_epilogue = {
@@ -143,12 +194,15 @@ def fused_hash(xs, p, *, epilogue: str, kind: str, num_tables: int,
     }[epilogue]
     interpret = _default_interpret(interpret)
 
+    b = jax.tree.leaves(xs)[0].shape[0]
     if isinstance(p, CPProjection) and isinstance(xs, CPTensor):
+        block_b, block_l = hash_blocks("cp", b, num_tables, block_b, block_t)
         xf = _pad_axis(_stack_cp_batch(xs), 0, block_b)
         pf = _stack_cp_proj(p, num_tables)
         kernel = cp_gram_pallas
         k_axis = 2
     elif isinstance(p, TTProjection) and isinstance(xs, TTTensor):
+        block_b, block_l = hash_blocks("tt", b, num_tables, block_b, block_t)
         rx = max(max(c.shape[1], c.shape[3]) for c in xs.cores)
         rp = max(max(c.shape[1], c.shape[3]) for c in p.cores)
         xf = _pad_axis(_stack_tt_batch(xs, rx), 0, block_b)
@@ -171,11 +225,10 @@ def fused_hash(xs, p, *, epilogue: str, kind: str, num_tables: int,
     if epilogue == "keys":
         mults_arr = jnp.asarray(mults).astype(jnp.uint32).reshape(1, num_codes)
 
-    b = jax.tree.leaves(xs)[0].shape[0]
     out = kernel(xf, pf, offs, mults_arr, epilogue=kernel_epilogue,
                  w=float(w) if e2 else 1.0,
                  scale=float(xs.scale * p.scale),
-                 block_b=block_b, block_l=_pick_block_l(num_tables),
+                 block_b=block_b, block_l=block_l,
                  interpret=interpret)
     return out[:b]
 

@@ -253,7 +253,11 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
     ``delta_probe``), the query-directed multi-probe query at T=``probes``
     candidate buckets per table (``multiprobe_program`` — prices the key
     expansion + the T-times-wider probe windows of the (L, T) trade-off),
-    the fused hash pipeline (``hash_program``), the two shard-local
+    the fused query-to-candidates program over base + delta at T=``probes``
+    (``fused_query_program`` — the end-to-end hash -> probe -> re-rank ->
+    top-k program production serves post-insert), the fused hash pipeline
+    (``hash_program``, with the resolved block_b/block_t grid tiling), the
+    two shard-local
     mutation programs — the routed slab scatter + sort behind ``insert``
     (``insert_program``, hash included) and the per-shard survivor fold
     behind ``compact()`` (``compact_program``) — and the double-buffered
@@ -334,6 +338,15 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         t_mp = time.time()
         multiprobe_rec = _analyze(compile_one((), (), t=probes), t_mp)
 
+        # the fused query-to-candidates program: hash -> multi-probe key
+        # expansion -> probe windows -> exact re-rank -> packed top-k over
+        # base + one delta slab at T=probes — the end-to-end program
+        # production serves between an insert and the next compaction
+        t_fq = time.time()
+        fused_query_rec = _analyze(
+            compile_one((delta_sds,), (min(delta_cap, d_ns),), t=probes),
+            t_fq)
+
         # the fused hash program (projection -> discretize -> bucket keys,
         # one jit program; the build/insert/query-hash hot path) profiled
         # alongside the probe programs
@@ -343,6 +356,8 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
                            in_shardings=(fam_sh, rep, rep))
         hash_rec = _analyze(
             hash_jit.lower(fam_sds, mults_sds, q_sds).compile(), t2)
+        from repro.kernels import ops as _kops
+        hash_block_b, hash_block_t = _kops.hash_blocks("cp", batch, l)
 
         # the shard-local mutation programs: insert = fused batch hash +
         # routed slab scatter + per-shard sort; compact = per-shard
@@ -434,6 +449,11 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         "delta_probe": {"delta_n": delta_n, "delta_cap": delta_cap,
                         **delta_rec},
         "multiprobe_program": {"probes": probes, **multiprobe_rec},
+        "fused_query_program": {"batch": batch, "probes": probes,
+                                "delta_n": delta_n,
+                                "probe_backend":
+                                    segments.resolved_probe_backend("auto"),
+                                **fused_query_rec},
         # the backend that actually executes for this cell's (dense) corpus:
         # CP/TT projections over dense inputs have no kernel, so the pallas
         # backend serves them through XLA — report the executed path, not
@@ -441,6 +461,10 @@ def lower_lsh_index_cell(multi_pod: bool = False, *, corpus_n: int = 1 << 18,
         "hash_program": {"batch": batch,
                          "backend": ("pallas" if fam_sds._use_pallas(q_sds)
                                      else "xla"),
+                         # grid tiling the pallas backend would run with at
+                         # this batch (kernels/ops.hash_blocks resolution of
+                         # the documented per-format-pair defaults)
+                         "block_b": hash_block_b, "block_t": hash_block_t,
                          **hash_rec},
         "insert_program": {"insert_n": delta_n, "slab_size": d_ns,
                            **insert_rec},

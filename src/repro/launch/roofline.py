@@ -12,8 +12,10 @@ bytes. MODEL_FLOPS = 6 N D (train) or 2 N D (inference), N = active params.
 ``dryrun --lsh-index``) share the compute/memory/collective terms but have
 no model-FLOPs notion — their MODEL/HLO and MFU columns render as "—".
 Each lsh record also embeds AOT profiles of its sub-programs (the
-base+delta ``delta_probe``, the T-wide ``multiprobe_program``, the fused
-``hash_program``, and the shard-local ``insert_program`` /
+base+delta ``delta_probe``, the T-wide ``multiprobe_program``, the
+end-to-end ``fused_query_program`` (hash -> probe -> re-rank -> top-k over
+base + delta at T probes), the fused ``hash_program``, and the shard-local
+``insert_program`` /
 ``compact_program`` mutation programs — kind ``lsh_mutation``);
 ``expand()`` turns them into their own table rows.
 
@@ -97,6 +99,7 @@ def fmt_cell(v, spec: str, scale: float = 1.0, suffix: str = "") -> str:
 # Sub-programs an lsh_query record embeds: (key, kind of the synthetic row)
 LSH_SUBPROGRAMS = (("delta_probe", "lsh_query"),
                    ("multiprobe_program", "lsh_query"),
+                   ("fused_query_program", "lsh_query"),
                    ("hash_program", "lsh_query"),
                    ("insert_program", "lsh_mutation"),
                    ("compact_program", "lsh_mutation"),

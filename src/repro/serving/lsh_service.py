@@ -157,7 +157,8 @@ class LSHService:
     def __init__(self, family: LSHFamily, metric: str = "euclidean",
                  device: bool = True, bucket_cap: int | None = None,
                  shards: int | None = None, max_deltas: int = 8,
-                 probes: int = 1, query_mode: str = "topk"):
+                 probes: int = 1, query_mode: str = "topk",
+                 probe_backend: str = "auto"):
         if int(probes) < 1:
             raise ValueError(f"probes must be >= 1, got {probes}")
         if query_mode not in QUERY_MODES:
@@ -172,20 +173,29 @@ class LSHService:
                     "the host-dict path has no sharded layout")
             self.index = ShardedLSHIndex(family, metric=metric, shards=shards,
                                          bucket_cap=bucket_cap,
-                                         max_deltas=max_deltas)
+                                         max_deltas=max_deltas,
+                                         probe_backend=probe_backend)
         elif device:
             self.index = DeviceLSHIndex(family, metric=metric,
                                         bucket_cap=bucket_cap,
-                                        max_deltas=max_deltas)
+                                        max_deltas=max_deltas,
+                                        probe_backend=probe_backend)
         else:
             if bucket_cap is not None:
                 raise ValueError(
                     "bucket_cap applies to the device index only; the host "
                     "index always probes full buckets (pass device=True)")
-            self.index = HostLSHIndex(family, metric=metric)
+            self.index = HostLSHIndex(family, metric=metric,
+                                      probe_backend=probe_backend)
         self.stats = ServiceStats()
         self.health = "serving"  # namespace health; the durable subclass
                                  # moves through cold/recovering/degraded
+
+    @property
+    def probe_path(self) -> str:
+        """The resolved probe backend ('xla' | 'pallas') the underlying
+        index serves queries through (see ``core.index.*.probe_path``)."""
+        return self.index.probe_path
 
     def build(self, corpus, batch_size: int = 2048) -> "LSHService":
         t0 = time.perf_counter()
@@ -380,6 +390,7 @@ def build_service(key, kind: str, dims: Sequence[int], corpus, *,
                   shards: int | None = None,
                   max_deltas: int = 8,
                   hash_backend: str = "auto",
+                  probe_backend: str = "auto",
                   probes: int = 1,
                   query_mode: str = "topk") -> LSHService:
     metric = metric or ("cosine" if kind.endswith("srp") else "euclidean")
@@ -389,4 +400,5 @@ def build_service(key, kind: str, dims: Sequence[int], corpus, *,
     return LSHService(fam, metric=metric, device=device,
                       bucket_cap=bucket_cap, shards=shards,
                       max_deltas=max_deltas, probes=probes,
-                      query_mode=query_mode).build(corpus)
+                      query_mode=query_mode,
+                      probe_backend=probe_backend).build(corpus)

@@ -323,8 +323,18 @@ class TestShardMapPathMultiDevice:
             assert row["roofline_mfu"] is None  # no model-flops notion
             # every sub-program expands to its own analysable record
             subs = roofline.expand(rec)
+            # the fused query-to-candidates program profiled alongside:
+            # end-to-end hash -> probe -> re-rank -> top-k over base +
+            # delta at T probes, so it must price at least the T-wide
+            # base-only query
+            fq = rec["fused_query_program"]
+            assert fq["probes"] == 8 and fq["batch"] == 64
+            assert fq["probe_backend"] in ("xla", "pallas")
+            assert (fq["cost"]["flops_per_device"]
+                    >= mp_rec["cost"]["flops_per_device"])
             assert [r["arch"] for r in subs[1:]] == [
                 "lsh-index:delta_probe", "lsh-index:multiprobe_program",
+                "lsh-index:fused_query_program",
                 "lsh-index:hash_program", "lsh-index:insert_program",
                 "lsh-index:compact_program",
                 "lsh-index:swap_build_program"]
